@@ -1,0 +1,71 @@
+"""Fig. 3: local edges (higher better) + max normalized load (lower
+better) for Revolver / Spinner / Hash / Range across datasets x k.
+
+Default grid is CPU-sized (4 representative dataset families x
+k in {2, 8, 32}); --full sweeps all 9 datasets x k up to 256 like the
+paper (hours on this host).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core import run_partitioner
+from repro.graphs import load_dataset
+
+ALGOS = ("revolver", "spinner", "hash", "range")
+
+
+def run(datasets=("WIKI", "USA", "SO", "LJ"), ks=(2, 8, 32), *,
+        scale=0.002, max_steps=90, seeds=(0,), out=None):
+    rows = []
+    print(f"{'graph':6s} {'k':>4s} " +
+          " ".join(f"{a:>10s}" for a in ALGOS) + "   (le | mnl)")
+    for name in datasets:
+        for k in ks:
+            le_row, mnl_row = {}, {}
+            for algo in ALGOS:
+                les, mnls, steps = [], [], []
+                for seed in seeds:
+                    g = load_dataset(name, scale=scale, seed=seed)
+                    r = run_partitioner(algo, g, k, seed=seed,
+                                        max_steps=max_steps)
+                    les.append(r.local_edges)
+                    mnls.append(r.max_norm_load)
+                    steps.append(r.steps)
+                le_row[algo] = sum(les) / len(les)
+                mnl_row[algo] = sum(mnls) / len(mnls)
+                rows.append({"dataset": name, "k": k, "algo": algo,
+                             "local_edges": le_row[algo],
+                             "max_norm_load": mnl_row[algo],
+                             "steps": sum(steps) // len(steps)})
+            print(f"{name:6s} {k:4d} " +
+                  " ".join(f"{le_row[a]:10.3f}" for a in ALGOS))
+            print(f"{'':6s} {'':4s} " +
+                  " ".join(f"{mnl_row[a]:10.3f}" for a in ALGOS))
+    if out:
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--scale", type=float, default=0.002)
+    ap.add_argument("--max-steps", type=int, default=90)
+    ap.add_argument("--seeds", type=int, default=1)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    if args.full:
+        return run(datasets=("WIKI", "UK", "USA", "SO", "LJ", "EN", "OK",
+                             "HLWD", "EU"),
+                   ks=(2, 4, 8, 16, 32, 64, 128, 256),
+                   scale=args.scale, max_steps=args.max_steps,
+                   seeds=tuple(range(args.seeds)), out=args.out)
+    return run(scale=args.scale, max_steps=args.max_steps,
+               seeds=tuple(range(args.seeds)), out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Fig. 4: convergence of local edges + max normalized load over
+supersteps (LJ, k=32) — Revolver vs Spinner, plus the async-vs-sync
+ablation (n_blocks = 8 vs 1; the paper credits asynchrony for the
+balance win).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core import run_partitioner
+from repro.graphs import load_dataset
+
+
+def run(*, dataset="LJ", k=32, scale=0.002, max_steps=290, out=None):
+    g = load_dataset(dataset, scale=scale, seed=0)
+    curves = {}
+    for label, algo, kwargs in (
+            ("revolver_async", "revolver", {"n_blocks": 8}),
+            ("revolver_sync", "revolver", {"n_blocks": 1}),
+            ("spinner", "spinner", {})):
+        r = run_partitioner(algo, g, k, seed=0, max_steps=max_steps,
+                            **kwargs)
+        curves[label] = {"local_edges": r.history["local_edges"],
+                         "max_norm_load": r.history["max_norm_load"],
+                         "steps": r.steps}
+        h = r.history
+        idx = [min(i, len(h["local_edges"]) - 1)
+               for i in (0, 25, 50, 100, max_steps - 1)]
+        print(f"{label:16s} steps={r.steps:4d} "
+              f"le@[0,25,50,100,end]=" +
+              ",".join(f"{h['local_edges'][i]:.3f}" for i in idx) +
+              f"  mnl(end)={h['max_norm_load'][-1]:.3f}")
+    if out:
+        with open(out, "w") as f:
+            json.dump(curves, f)
+    return curves
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="LJ")
+    ap.add_argument("--k", type=int, default=32)
+    ap.add_argument("--scale", type=float, default=0.002)
+    ap.add_argument("--max-steps", type=int, default=290)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    return run(dataset=args.dataset, k=args.k, scale=args.scale,
+               max_steps=args.max_steps, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Kernel microbenchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode, so
+wall-clock here is a CORRECTNESS/HARNESS sanity check, not TPU perf; the
+TPU-side performance argument is the VMEM-residency analysis in each
+kernel's docstring + §Roofline. We therefore report the XLA-path
+timings (the jnp implementations the dry-run lowers) and the kernels'
+interpret-mode parity.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.la import split_weights_and_signals, weighted_la_update
+from repro.core.lp import edge_histogram_jnp
+from repro.kernels import ops
+from repro.models.attention import flash_attention_xla, naive_attention
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)                        # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # --- la_update: jnp path vs pallas-interpret parity -------------------
+    v, k = 4096, 32
+    p = jax.random.dirichlet(key, jnp.ones(k), (v,))
+    w_raw = jax.random.uniform(jax.random.fold_in(key, 1), (v, k))
+    w, r = split_weights_and_signals(w_raw)
+    f_jnp = jax.jit(lambda p, w, r: weighted_la_update(p, w, r, 1.0, 0.1))
+    us = _time(f_jnp, p, w, r)
+    out_k = ops.la_update(p, w, r, 1.0, 0.1)
+    err = float(jnp.abs(out_k - f_jnp(p, w, r)).max())
+    rows.append(("la_update_xla_4096x32", us, f"pallas_err={err:.1e}"))
+
+    # --- edge_histogram ----------------------------------------------------
+    e = 1 << 16
+    rows_i = jax.random.randint(key, (e,), 0, 256)
+    slots = jax.random.randint(jax.random.fold_in(key, 2), (e,), 0, k)
+    vals = jax.random.uniform(jax.random.fold_in(key, 3), (e,))
+    f_h = jax.jit(lambda r_, s_, v_: edge_histogram_jnp(r_, s_, v_, 256, k))
+    us = _time(f_h, rows_i, slots, vals)
+    rows.append((f"edge_histogram_xla_{e}e", us, "segment-sum"))
+
+    # --- attention: xla-flash vs naive --------------------------------------
+    b, hq, hkv, s, d = 2, 8, 2, 1024, 64
+    q = jax.random.normal(key, (b, hq, s, d), jnp.float32)
+    kk = jax.random.normal(jax.random.fold_in(key, 4), (b, hkv, s, d))
+    vv = jax.random.normal(jax.random.fold_in(key, 5), (b, hkv, s, d))
+    f_flash = jax.jit(lambda q, k_, v_: flash_attention_xla(
+        q, k_, v_, causal=True, block_q=256, block_k=256))
+    f_naive = jax.jit(lambda q, k_, v_: naive_attention(q, k_, v_, causal=True))
+    us_f = _time(f_flash, q, kk, vv)
+    us_n = _time(f_naive, q, kk, vv)
+    rows.append((f"attn_flash_xla_s{s}", us_f, f"naive={us_n:.0f}us"))
+
+    # --- decode attention ----------------------------------------------------
+    qd = jax.random.normal(key, (4, 8, 64))
+    kc = jax.random.normal(jax.random.fold_in(key, 6), (4, 2, 4096, 64))
+    vc = jax.random.normal(jax.random.fold_in(key, 7), (4, 2, 4096, 64))
+    kv_len = jnp.full((4,), 4096, jnp.int32)
+    from repro.kernels.ref import decode_attention_ref
+    f_dec = jax.jit(decode_attention_ref)
+    us = _time(f_dec, qd, kc, vc, kv_len)
+    out_k = ops.decode_attention(qd, kc, vc, kv_len)
+    err = float(jnp.abs(out_k - f_dec(qd, kc, vc, kv_len)).max())
+    rows.append(("decode_attn_xla_s4096", us, f"pallas_err={err:.1e}"))
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""§Roofline report: read the dry-run JSONL and print the per-cell
+three-term roofline table (single-pod) + the multi-pod pass summary."""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def load(path):
+    rows = []
+    with open(path) as f:
+        for line in f:
+            try:
+                rows.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass
+    # keep the LAST entry per cell key (later runs supersede)
+    by_key = {}
+    for r in rows:
+        by_key[(r["arch"], r["shape"], r["mesh"],
+                bool(r.get("seq_parallel", False)))] = r
+    return by_key
+
+
+def fmt_row(r):
+    mem_gb = (r["mem"]["argument_gb"] + r["mem"]["temp_gb"]
+              - r["mem"]["alias_gb"]) if r.get("mem") else float("nan")
+    return (f"| {r['arch']:22s} | {r['shape']:11s} "
+            f"| {r['compute_s']:9.4f} | {r['memory_s']:9.4f} "
+            f"| {r['collective_s']:9.4f} | {r['bottleneck'][:4]:>5s} "
+            f"| {r['useful_ratio']:6.2f} | {mem_gb:7.1f} "
+            f"| {'Y' if r.get('fits_hbm') else 'n':>4s} |")
+
+
+HEADER = ("| arch                   | shape       |  compute_s |  memory_s "
+          "| collect_s | bound | useful | GB/dev | fits |")
+SEP = "|" + "-" * (len(HEADER) - 2) + "|"
+
+
+def run(path="results/dryrun_baseline.jsonl", sp=False):
+    cells = load(path)
+    print("\n== §Roofline (single-pod 16x16, baseline"
+          + (", seq-parallel" if sp else "") + ") ==")
+    print(HEADER)
+    print(SEP)
+    ok = [r for (a, s, m, spx), r in sorted(cells.items())
+          if m == "single" and spx == sp and r.get("status") == "ok"]
+    for r in ok:
+        print(fmt_row(r))
+    mp = [r for (a, s, m, spx), r in sorted(cells.items())
+          if m == "multipod" and spx == sp and r.get("status") == "ok"]
+    fails = [k for k, r in cells.items() if r.get("status") != "ok"]
+    print(f"\nmulti-pod (2x16x16): {len(mp)} cells compiled OK")
+    if fails:
+        print(f"FAILED cells: {fails}")
+    # bottleneck census
+    census = {}
+    for r in ok:
+        census[r["bottleneck"]] = census.get(r["bottleneck"], 0) + 1
+    print(f"bottleneck census (single-pod): {census}")
+    return ok, mp, fails
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default="results/dryrun_baseline.jsonl")
+    ap.add_argument("--sp", action="store_true")
+    args = ap.parse_args(argv)
+    run(args.path, sp=args.sp)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark orchestrator — one section per paper table/figure plus the
+framework's §Roofline report. CSV contract: ``name,value,derived``.
+
+  PYTHONPATH=src python -m benchmarks.run            # CPU-sized defaults
+  PYTHONPATH=src python -m benchmarks.run --quick    # smoke (CI)
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--dryrun-results",
+                    default="results/dryrun_baseline.jsonl")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (fig3_partition_quality, fig4_convergence,
+                            kernel_bench, roofline_report, table1_datasets)
+
+    t0 = time.time()
+    print("=" * 72)
+    print("== Table I: dataset suite ==")
+    table1_datasets.run(scale=0.0005 if args.quick else 0.001)
+
+    print("=" * 72)
+    print("== Fig. 3: partition quality (local edges / max norm load) ==")
+    if args.quick:
+        fig3_partition_quality.run(datasets=("LJ",), ks=(8,),
+                                   scale=0.001, max_steps=40)
+    else:
+        fig3_partition_quality.run()
+
+    print("=" * 72)
+    print("== Fig. 4: convergence (LJ, k=32) + async-vs-sync ablation ==")
+    fig4_convergence.run(scale=0.001 if args.quick else 0.002,
+                         max_steps=60 if args.quick else 290)
+
+    print("=" * 72)
+    print("== Kernel microbench (CPU; interpret-mode parity) ==")
+    kernel_bench.run()
+
+    print("=" * 72)
+    if os.path.exists(args.dryrun_results):
+        roofline_report.run(args.dryrun_results)
+    else:
+        print(f"(no dry-run results at {args.dryrun_results}; run "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all "
+              f"--out {args.dryrun_results})")
+    print(f"\ntotal benchmark time: {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

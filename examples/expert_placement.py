@@ -1,0 +1,53 @@
+"""Beyond-paper integration: Revolver places MoE experts on EP devices.
+
+A DeepSeek-style router with clustered co-activation (experts that fire
+together) is profiled for a few batches; Revolver partitions the expert
+co-activation graph across EP devices; the resulting placement is
+compared against the naive contiguous one on cross-device co-activation
+(the proxy for EP combine traffic).
+
+  PYTHONPATH=src python examples/expert_placement.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.placement import (_cross_fraction, apply_placement,
+                                  place_experts)
+from repro.models.moe import MoESpec, apply_moe, init_moe, moe_ref
+
+E, DEVICES, TOKENS, TOPK = 64, 8, 4000, 6
+
+
+def synth_routing(seed=0):
+    """Clustered routing with a hidden (shuffled) block structure."""
+    rng = np.random.default_rng(seed)
+    hidden = rng.permutation(E)                       # shuffle expert ids
+    clusters = hidden.reshape(DEVICES, E // DEVICES)  # true co-activation groups
+    grp = rng.integers(0, DEVICES, TOKENS)
+    cols = rng.integers(0, E // DEVICES, (TOKENS, TOPK))
+    return clusters[grp[:, None], cols]
+
+
+def main():
+    top = synth_routing()
+    naive = np.arange(E) // (E // DEVICES)
+    pl = place_experts(top, E, DEVICES, max_steps=120)
+    print(f"cross-device co-activation: naive={_cross_fraction(top, naive):.3f} "
+          f"revolver={pl.cross_coactivation:.3f}")
+    print(f"partitioner: local_edges={pl.result.local_edges:.3f} "
+          f"max_norm_load={pl.result.max_norm_load:.3f} steps={pl.result.steps}")
+
+    # placement is a pure relabeling: module outputs are unchanged
+    spec = MoESpec(d_model=16, n_experts=E, top_k=2, d_ff_expert=32)
+    params = init_moe(jax.random.PRNGKey(0), spec, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+    np.testing.assert_allclose(moe_ref(params, x, spec),
+                               moe_ref(apply_placement(params, pl), x, spec),
+                               atol=1e-5, rtol=1e-5)
+    print("placement-permuted MoE outputs identical — placement is free "
+          "at the model level; it only changes which device owns which expert.")
+
+
+if __name__ == "__main__":
+    main()

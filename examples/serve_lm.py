@@ -1,0 +1,33 @@
+"""Serve a small model with batched requests through the Engine
+(prefill + streaming decode), across three architecture families.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.models import init_lm
+from repro.serve import Engine
+
+ARCHS = ["tinyllama-1.1b", "rwkv6-3b", "deepseek-v2-lite-16b"]
+
+
+def main():
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        key = jax.random.PRNGKey(0)
+        params = init_lm(cfg, key)
+        eng = Engine(cfg, params, s_max=96)
+        prompts = jax.random.randint(key, (4, 16), 0, cfg.vocab, jnp.int32)
+        t0 = time.monotonic()
+        res = eng.generate(prompts, max_new=24, temperature=0.8, key=key)
+        dt = time.monotonic() - t0
+        print(f"{arch:24s} ({cfg.family:6s}) 4x24 tokens in {dt:5.1f}s; "
+              f"sample: {res.tokens[0, :8].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Sharded checkpointing (npz + manifest, async, elastic re-shard)."""
+from repro.checkpoint.store import latest_step, restore_checkpoint, save_checkpoint
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]

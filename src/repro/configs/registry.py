@@ -1,0 +1,97 @@
+"""Architecture registry: the 10 assigned archs, the 4 shapes, the
+skip matrix, and ShapeDtypeStruct input specs for the dry-run.
+"""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, SHAPE_NAMES, ShapeSpec
+from repro.models.config import ModelConfig
+
+ARCHS = {
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "h2o-danube-3-4b": "h2o_danube_3_4b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "zamba2-7b": "zamba2_7b",
+    "internvl2-1b": "internvl2_1b",
+    "whisper-base": "whisper_base",
+    "rwkv6-3b": "rwkv6_3b",
+}
+
+# archs with a sub-quadratic long-context mechanism run long_500k
+_SUBQUADRATIC = {"h2o-danube-3-4b", "zamba2-7b", "rwkv6-3b"}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{ARCHS[name]}")
+    return mod.CONFIG
+
+
+def cell_skip_reason(arch: str, shape: str) -> str | None:
+    """None = the (arch, shape) cell runs; otherwise the documented skip."""
+    if shape == "long_500k" and arch not in _SUBQUADRATIC:
+        return ("pure full-attention arch: no sub-quadratic mechanism for a "
+                "524k-token cache (DESIGN.md §6)")
+    return None
+
+
+def all_cells():
+    """Yield (arch, shape, skip_reason) for the full 40-cell grid."""
+    for arch in ARCHS:
+        for shape in SHAPE_NAMES:
+            yield arch, shape, cell_skip_reason(arch, shape)
+
+
+def runnable_cells():
+    return [(a, s) for a, s, skip in all_cells() if skip is None]
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# --------------------------------------------------------------------------
+def _frontend_spec(cfg: ModelConfig, batch: int):
+    if cfg.family == "vlm":
+        return jax.ShapeDtypeStruct((batch, cfg.n_patches, cfg.d_model), cfg.cdt)
+    if cfg.family == "encdec":
+        return jax.ShapeDtypeStruct((batch, cfg.enc_seq, cfg.d_model), cfg.cdt)
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec | str):
+    """Batch ShapeDtypeStructs for a shape cell.
+
+    train:   {"tokens": [B,S] i32, "labels": [B,S] i32, ("frontend")}
+    prefill: {"tokens": [B,S] i32, ("frontend")}
+    decode:  {"token":  [B]   i32}  (cache specs come from init_cache)
+    """
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                 "labels": jax.ShapeDtypeStruct((b, s), i32)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    elif shape.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((b,), i32)}
+    else:
+        raise ValueError(shape.kind)
+    fe = _frontend_spec(cfg, b)
+    if fe is not None:
+        specs["frontend"] = fe
+    return specs
+
+
+def reduced_shape(shape: ShapeSpec | str, *, seq: int = 32, batch: int = 2):
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    return ShapeSpec(shape.name, seq, batch, shape.kind)

@@ -1,0 +1,23 @@
+"""rwkv6-3b "Finch" — data-dependent decay, attention-free
+[arXiv:2404.05892; hf]. 32L d_model=2560 d_ff=8960 vocab=65536.
+
+Head layout adaptation (DESIGN.md): upstream Finch uses 64-dim heads
+(40 heads at d=2560); we use 32 heads x 80 so the head axis divides the
+16-way model mesh axis. O(1) state => long_500k RUNS.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    n_layers=32,
+    d_model=2560,
+    n_heads=32,
+    n_kv=0,
+    rwkv_heads=32,
+    d_ff=8960,
+    vocab=65536,
+    norm="layer",
+    mix_rank=32,
+    decay_rank=64,
+)

@@ -1,0 +1,18 @@
+"""tinyllama-1.1b — llama2-arch small [arXiv:2401.02385; hf].
+
+22L d_model=2048 32H (GQA kv=4) d_ff=5632 vocab=32000.
+Pure full attention: long_500k is skipped (no sub-quadratic mechanism).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="tinyllama-1.1b",
+    family="dense",
+    n_layers=22,
+    d_model=2048,
+    n_heads=32,
+    n_kv=4,
+    d_ff=5632,
+    vocab=32000,
+    rope_theta=10000.0,
+)

@@ -1,0 +1,107 @@
+"""Device-resident graph layout consumed by the partitioning supersteps.
+
+Two layouts are kept:
+
+  * **flat** edge arrays `[M]` (src row, dst, eq.-4 weight) — used by the
+    synchronous Spinner baseline and by the quality metrics;
+  * **blocked** per-chunk slabs `[n_blocks, e_max]` — used by Revolver's
+    chunked semi-asynchronous superstep (the TPU adaptation of the paper's
+    per-thread asynchrony; see DESIGN.md §3) and by the Pallas kernels.
+
+All per-vertex arrays are padded to `n_pad = n_blocks * block_v`; `vmask`
+marks real vertices. Padding vertices carry zero degree and no edges so they
+never influence loads or scores.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.blocking import block_edges
+from repro.graphs.csr import Graph
+
+
+class DeviceGraph(NamedTuple):
+    """Static-shape device arrays for one graph. Ints are python (static)."""
+
+    n: int
+    n_pad: int
+    m: int               # |E| directed edges
+    n_blocks: int
+    block_v: int
+    e_max: int
+    # flat symmetrized adjacency (for sync algorithms / metrics)
+    edge_src: jnp.ndarray     # [Ms] int32 owning vertex
+    edge_dst: jnp.ndarray     # [Ms] int32 neighbor
+    edge_w: jnp.ndarray       # [Ms] f32 eq.(4) weight
+    # flat *directed* edges (for the local-edges metric)
+    dir_src: jnp.ndarray      # [M] int32
+    dir_dst: jnp.ndarray      # [M] int32
+    # blocked symmetrized adjacency (for async chunks / Pallas kernels)
+    blk_dst: jnp.ndarray      # [n_blocks, e_max] int32 (0 pad)
+    blk_row: jnp.ndarray      # [n_blocks, e_max] int32 local row (0 pad)
+    blk_w: jnp.ndarray        # [n_blocks, e_max] f32 (0.0 pad)
+    # per-vertex
+    deg_out: jnp.ndarray      # [n_pad] f32 outdegree (load contribution)
+    inv_wsum: jnp.ndarray     # [n_pad] f32 1/sum_u w_hat(u,v) (0 if isolated)
+    vmask: jnp.ndarray        # [n_pad] bool real-vertex mask
+
+
+def prepare_device_graph(g: Graph, n_blocks: int = 8, block_multiple: int = 8) -> DeviceGraph:
+    """Build the DeviceGraph with `n_blocks` asynchronous chunks."""
+    n_blocks = max(1, min(n_blocks, g.n))
+    block_v = -(-g.n // n_blocks)
+    block_v = -(-block_v // block_multiple) * block_multiple
+    blocked = block_edges(g, block_v=block_v)
+    n_blocks = blocked.n_blocks
+    n_pad = blocked.n_pad
+
+    deg_out = np.zeros(n_pad, dtype=np.float32)
+    deg_out[: g.n] = g.deg_out.astype(np.float32)
+
+    wsum = np.zeros(n_pad, dtype=np.float32)
+    np.add.at(wsum, np.repeat(np.arange(g.n), np.diff(g.adj_ptr).astype(np.int64)), g.adj_w)
+    inv_wsum = np.where(wsum > 0, 1.0 / np.maximum(wsum, 1e-30), 0.0).astype(np.float32)
+
+    vmask = np.zeros(n_pad, dtype=bool)
+    vmask[: g.n] = True
+
+    src_flat = np.repeat(np.arange(g.n, dtype=np.int32), np.diff(g.adj_ptr).astype(np.int64))
+    dir_src = np.repeat(np.arange(g.n, dtype=np.int32), np.diff(g.row_ptr).astype(np.int64))
+
+    return DeviceGraph(
+        n=g.n,
+        n_pad=n_pad,
+        m=g.m,
+        n_blocks=n_blocks,
+        block_v=blocked.block_v,
+        e_max=blocked.e_max,
+        edge_src=jnp.asarray(src_flat),
+        edge_dst=jnp.asarray(g.adj_idx),
+        edge_w=jnp.asarray(g.adj_w),
+        dir_src=jnp.asarray(dir_src),
+        dir_dst=jnp.asarray(g.col_idx),
+        blk_dst=jnp.asarray(blocked.edge_dst),
+        blk_row=jnp.asarray(blocked.edge_row),
+        blk_w=jnp.asarray(blocked.edge_w),
+        deg_out=jnp.asarray(deg_out),
+        inv_wsum=jnp.asarray(inv_wsum),
+        vmask=jnp.asarray(vmask),
+    )
+
+
+def capacity(m: int, k: int, epsilon: float, mode: str) -> float:
+    """Partition capacity C.
+
+    mode="spinner": C = (1+eps)|E|/k — Spinner's definition, the default.
+    mode="paper":   C = eps|E|/k     — the literal Section III-A text (makes
+                    every partition over-capacity; kept for faithfulness,
+                    the footnote-1 shift in eq. (12) keeps it well-defined).
+    """
+    if mode == "spinner":
+        return (1.0 + epsilon) * m / k
+    if mode == "paper":
+        return epsilon * m / k
+    raise ValueError(f"unknown capacity mode {mode!r}")

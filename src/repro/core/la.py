@@ -1,0 +1,133 @@
+"""Learning-automata update rules.
+
+`classic_la_update` implements the textbook variable-structure LA (eqs. 6/7):
+one action is rewarded or penalized per step.
+
+`weighted_la_update` implements the paper's contribution (eqs. 8/9): the
+reinforcement is distributed over *all* m actions through a weight vector W
+(sum(W)=2: the reward half and the penalty half each sum to 1). As stated in
+Section IV-A, the update is executed m times — pass i applies eq. (8) if
+r_i = 0 (reward) or eq. (9) if r_i = 1 (penalty), each pass touching all m
+probabilities — m^2 elementary updates in total.
+
+These are the pure-jnp reference implementations; `repro.kernels.la_update`
+provides the Pallas TPU kernel with identical semantics (VMEM-resident
+probability tile across the m passes).
+
+Note on the simplex: eqs. (8)/(9) only keep sum(p)=1 approximately (the
+paper's half-normalization argument is not exact). With `renorm=True`
+(default) we project back to the simplex after the m passes; the drift is
+measured in tests/test_la.py and stays below ~1e-3 per superstep.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def classic_la_update(
+    p: jax.Array, action: jax.Array, penalty: jax.Array, alpha: float, beta: float
+) -> jax.Array:
+    """Eqs. (6)/(7). p: [..., m]; action: [...] int; penalty: [...] {0,1}."""
+    m = p.shape[-1]
+    onehot = jax.nn.one_hot(action, m, dtype=p.dtype)
+    # reward (r=0): p_i += alpha (1-p_i); p_j *= (1-alpha)
+    p_rew = jnp.where(onehot > 0, p + alpha * (1.0 - p), p * (1.0 - alpha))
+    # penalty (r=1): p_i *= (1-beta); p_j = p_j (1-beta) + beta/(m-1)
+    p_pen = jnp.where(onehot > 0, p * (1.0 - beta), p * (1.0 - beta) + beta / (m - 1))
+    return jnp.where(penalty[..., None] > 0, p_pen, p_rew)
+
+
+def weighted_la_update(
+    p: jax.Array,
+    w: jax.Array,
+    r: jax.Array,
+    alpha: float,
+    beta: float,
+    *,
+    renorm: bool = True,
+    pass_order: str = "penalty_first",
+) -> jax.Array:
+    """Eqs. (8)/(9), executed as m sequential passes (pass i keyed by r_i).
+
+    Pass order disambiguation (DESIGN.md §10): the paper does not specify the
+    order of the m passes. With the paper's alpha=1, running reward passes
+    before penalty passes caps max(p) at ~(1-beta)^n_pen each step — the
+    automaton provably can never become decisive and Revolver cannot reach
+    the paper's reported local-edges. We therefore default to
+    "penalty_first" (penalty passes, then reward passes), which converges;
+    "ascending" (index order, per the literal reading) is kept for the
+    ablation in tests/test_la.py.
+
+    Args:
+      p: [..., m] probability vectors (rows on the simplex).
+      w: [..., m] weight vector; reward half sums to 1, penalty half sums to 1.
+      r: [..., m] reinforcement signals; 0 = reward, 1 = penalty.
+      alpha, beta: reward / penalty learning rates (paper: 1.0 / 0.1).
+      renorm: project back onto the simplex after the passes.
+      pass_order: "penalty_first" | "ascending".
+
+    Returns:
+      Updated [..., m] probability vectors.
+    """
+    m = p.shape[-1]
+    iota = jnp.arange(m)
+
+    if pass_order == "penalty_first":
+        # per-row pass schedule: penalties (r=1) first, rewards (r=0) last,
+        # stable within each class. argsort(-r) is descending-r stable.
+        order = jnp.argsort(-r, axis=-1, stable=True)
+    elif pass_order == "ascending":
+        order = jnp.broadcast_to(iota, r.shape)
+    else:
+        raise ValueError(f"unknown pass_order {pass_order!r}")
+
+    def pass_t(t, p):
+        i = jnp.take(order, t, axis=-1)              # [...] per-row action id
+        mask = iota == i[..., None]                  # [..., m] one-hot
+        w_i = jnp.sum(jnp.where(mask, w, 0.0), axis=-1, keepdims=True)
+        # eq. (8): reward pass for action i
+        p_rew = jnp.where(mask, p + alpha * w * (1.0 - p), p * (1.0 - alpha * w))
+        # eq. (9): penalty pass for action i; the redistribution floor is
+        # scaled by the recipient's weight ("reinforcement proportional to
+        # w" — see module docstring / DESIGN.md §10)
+        floor = beta * w / (m - 1)
+        p_pen = jnp.where(mask, p * (1.0 - beta * w), p * (1.0 - beta * w) + floor)
+        is_pen = jnp.sum(jnp.where(mask, r, 0.0), axis=-1, keepdims=True) > 0
+        p_new = jnp.where(is_pen, p_pen, p_rew)
+        # a slot with zero weight carries no reinforcement signal: skip pass
+        return jnp.where(w_i > 0, p_new, p)
+
+    p = jax.lax.fori_loop(0, m, pass_t, p)
+    if renorm:
+        p = jnp.clip(p, _EPS, 1.0)
+        p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return p
+
+
+def split_weights_and_signals(w_raw: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Step 6 of Section IV-D: mean-split W into reward/penalty halves and
+    normalize each half to sum to 1 (so sum(W)=2 as eqs. (8)/(9) require).
+
+    Args:
+      w_raw: [..., m] non-negative accumulated weights (eq. 13 histogram).
+
+    Returns:
+      (w_norm, r): normalized weights and reinforcement signals
+      (r=0 reward where w_i > mean(W), r=1 penalty otherwise).
+    """
+    mean = jnp.mean(w_raw, axis=-1, keepdims=True)
+    r = (w_raw <= mean).astype(w_raw.dtype)  # 1 = penalty
+    rew_mask = 1.0 - r
+    rew_sum = jnp.sum(w_raw * rew_mask, axis=-1, keepdims=True)
+    pen_sum = jnp.sum(w_raw * r, axis=-1, keepdims=True)
+    # A half whose accumulated weight is zero carries no reinforcement
+    # signal: its slots keep w=0 and their passes are skipped by
+    # weighted_la_update (a zero-signal slot must not perturb the simplex;
+    # see module docstring). Nonzero halves are normalized to sum to 1.
+    w_rew = jnp.where(rew_sum > 0, w_raw / jnp.where(rew_sum > 0, rew_sum, 1.0), 0.0)
+    w_pen = jnp.where(pen_sum > 0, w_raw / jnp.where(pen_sum > 0, pen_sum, 1.0), 0.0)
+    w_norm = jnp.where(r > 0, w_pen, w_rew)
+    return w_norm.astype(w_raw.dtype), r

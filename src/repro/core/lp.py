@@ -1,0 +1,72 @@
+"""Label-propagation scoring: the paper's normalized LP (eqs. 10-12) and the
+Spinner baseline scoring (eqs. 3-5).
+
+Both scorers share one primitive — the *edge label histogram*: for every
+vertex v accumulate, per partition l, the eq.-(4)-weighted count of neighbors
+currently labeled l. `edge_histogram_jnp` is the XLA scatter-add reference;
+`repro.kernels.edge_histogram` is the Pallas TPU kernel (one-hot matmul on
+the MXU) with identical semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def edge_histogram_jnp(
+    rows: jax.Array,
+    slots: jax.Array,
+    vals: jax.Array,
+    n_rows: int,
+    k: int,
+) -> jax.Array:
+    """hist[r, s] = sum of vals[e] over edges with rows[e]==r, slots[e]==s.
+
+    Args:
+      rows: [E] int32 destination row per edge (local vertex index).
+      slots: [E] int32 partition slot per edge (e.g. neighbor's label).
+      vals: [E] float values (0.0 for padding edges).
+      n_rows, k: histogram shape.
+    """
+    hist = jnp.zeros((n_rows, k), dtype=vals.dtype)
+    return hist.at[rows, slots].add(vals)
+
+
+def tau_term(hist: jax.Array, inv_wsum: jax.Array) -> jax.Array:
+    """Eq. (11): neighborhood affinity normalized by the total edge weight."""
+    return hist * inv_wsum[:, None]
+
+
+def normalized_penalty(loads: jax.Array, capacity: float) -> jax.Array:
+    """Eq. (12) with the footnote-1 negative shift.
+
+    pi(l) = (1 - b(l)/C) normalized over partitions; if any term is negative
+    (partition over capacity), shift by the minimum before normalizing.
+    """
+    pen = 1.0 - loads / capacity
+    mn = jnp.min(pen)
+    pen = jnp.where(mn < 0, pen - mn, pen)
+    total = jnp.sum(pen)
+    k = loads.shape[0]
+    return jnp.where(total > 0, pen / jnp.where(total > 0, total, 1.0),
+                     jnp.full_like(pen, 1.0 / k))
+
+
+def revolver_scores(hist: jax.Array, inv_wsum: jax.Array, loads: jax.Array,
+                    capacity: float) -> jax.Array:
+    """Eq. (10): score(v,l) = (tau(v,l) + pi(l)) / 2."""
+    tau = tau_term(hist, inv_wsum)
+    pi = normalized_penalty(loads, capacity)
+    return 0.5 * (tau + pi[None, :])
+
+
+def spinner_penalty(loads: jax.Array, capacity: float) -> jax.Array:
+    """Eq. (5): pi_hat(l) = b(l)/C (unnormalized; the term Spinner subtracts)."""
+    return loads / capacity
+
+
+def spinner_scores(hist: jax.Array, inv_wsum: jax.Array, loads: jax.Array,
+                   capacity: float) -> jax.Array:
+    """Eq. (3): score_hat(v,l) = tau_hat(v,l) - pi_hat(l)."""
+    tau = tau_term(hist, inv_wsum)
+    return tau - spinner_penalty(loads, capacity)[None, :]

@@ -1,0 +1,28 @@
+"""Partition-quality metrics from Section V-E of the paper."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def partition_loads(labels: jax.Array, deg_out: jax.Array, k: int) -> jax.Array:
+    """b(l) = sum of outdegrees of vertices assigned to l (eq. 5); sums to |E|."""
+    return jnp.zeros((k,), dtype=jnp.float32).at[labels].add(deg_out.astype(jnp.float32))
+
+
+def local_edges(labels: jax.Array, edge_src: jax.Array, edge_dst: jax.Array) -> jax.Array:
+    """Fraction of directed edges with both endpoints in the same partition."""
+    same = (labels[edge_src] == labels[edge_dst]).astype(jnp.float32)
+    return jnp.mean(same)
+
+
+def edge_cuts(labels: jax.Array, edge_src: jax.Array, edge_dst: jax.Array) -> jax.Array:
+    """1 - local_edges (Section V-E)."""
+    return 1.0 - local_edges(labels, edge_src, edge_dst)
+
+
+def max_normalized_load(labels: jax.Array, deg_out: jax.Array, k: int) -> jax.Array:
+    """Max Load / Expected Load, Expected Load = |E|/k."""
+    loads = partition_loads(labels, deg_out, k)
+    expected = jnp.sum(loads) / k
+    return jnp.max(loads) / jnp.maximum(expected, 1e-9)

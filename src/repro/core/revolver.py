@@ -1,0 +1,208 @@
+"""Revolver: the paper's partitioning superstep (Section IV-D, steps 1-9).
+
+Execution model — TPU adaptation of the paper's asynchrony (DESIGN.md §3):
+vertices are processed in `n_blocks` chunks via `lax.scan`. Label migrations,
+load updates and freshly-computed argmax labels (lambda) from chunk i are
+visible to chunk i+1 *within the same superstep* — exactly the incremental
+visibility the paper credits for its balanced partitions. `n_blocks=1`
+degenerates to a synchronous (Spinner-like BSP) schedule; the async-vs-sync
+ablation in benchmarks/fig4_convergence.py sweeps this knob.
+
+Per chunk, the nine steps of Section IV-D:
+  1. LA action selection (roulette wheel == Gumbel-max categorical sampling)
+  2. migration probability  p_mig(l) = clip((C - b(l)) / m(l), 0, 1)
+  3. normalized LP scores (eq. 10) and lambda(v) = argmax_l score(v,l)
+  4. gated migration (action != label and U(0,1) < p_mig(action))
+  5. weight accumulation from neighbors' lambda (eq. 13)
+  6. mean-split reinforcement signals + per-half normalization
+  7. weighted-LA probability update (eqs. 8/9)
+  8. exact load update (the chunk's migrations are applied immediately)
+  9. convergence score accumulation (mean best LP score)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.device_graph import DeviceGraph, capacity
+from repro.core.la import split_weights_and_signals, weighted_la_update
+from repro.core.lp import edge_histogram_jnp, revolver_scores
+
+
+@dataclasses.dataclass(frozen=True)
+class RevolverConfig:
+    """Hyper-parameters; defaults match Section V-F of the paper."""
+
+    k: int
+    alpha: float = 1.0            # LA reward rate
+    beta: float = 0.1             # LA penalty rate
+    epsilon: float = 0.05         # imbalance ratio
+    max_steps: int = 290
+    patience: int = 5             # consecutive non-improving steps to halt
+    theta: float = 0.001          # min score improvement
+    capacity_mode: str = "spinner"  # see device_graph.capacity
+    renorm: bool = True           # simplex re-projection after eqs. (8)/(9)
+    la_impl: str = "jnp"          # "jnp" | "pallas"
+    hist_impl: str = "jnp"        # "jnp" | "pallas"
+    # eq. (13) ambiguity (DESIGN.md §10): which W slot a neighbor u reinforces.
+    #   "self_lambda":     the literal LHS w(v, lambda(v)) — each neighbor
+    #                      contributes to v's own argmax-score slot.
+    #   "neighbor_lambda": slot lambda(u) — v accumulates a histogram of its
+    #                      neighbors' argmax labels.
+    weight_mode: str = "self_lambda"
+
+
+class RevolverState(NamedTuple):
+    labels: jnp.ndarray    # [n_pad] int32 current partition per vertex
+    lam: jnp.ndarray       # [n_pad] int32 latest argmax-score label (lambda)
+    probs: jnp.ndarray     # [n_blocks, block_v, k] f32 LA probability vectors
+    loads: jnp.ndarray     # [k] f32 b(l)
+    key: jax.Array
+    step: jnp.ndarray      # int32
+    score: jnp.ndarray     # f32 mean best LP score (convergence metric)
+
+
+def revolver_init(dg: DeviceGraph, cfg: RevolverConfig, key: jax.Array) -> RevolverState:
+    """Random initial labels; uniform 1/k LA probabilities (Section IV-C)."""
+    k_lab, key = jax.random.split(key)
+    labels = jax.random.randint(k_lab, (dg.n_pad,), 0, cfg.k, dtype=jnp.int32)
+    labels = jnp.where(dg.vmask, labels, 0)
+    loads = jnp.zeros((cfg.k,), jnp.float32).at[labels].add(dg.deg_out)
+    probs = jnp.full((dg.n_blocks, dg.block_v, cfg.k), 1.0 / cfg.k, jnp.float32)
+    return RevolverState(
+        labels=labels,
+        lam=labels,
+        probs=probs,
+        loads=loads,
+        key=key,
+        step=jnp.zeros((), jnp.int32),
+        score=jnp.zeros((), jnp.float32),
+    )
+
+
+def _chunk_step(cfg: RevolverConfig, block_v: int, carry: Tuple, xs: Tuple):
+    """Process one asynchronous chunk (see module docstring)."""
+    labels, lam, loads, cap, key, score_sum = carry
+    (blk_idx, e_dst, e_row, e_w, probs, deg, inv_wsum, vmask) = xs
+    bv, k = probs.shape
+
+    key, k_act, k_mig = jax.random.split(key, 3)
+    v0 = blk_idx * block_v
+    cur = jax.lax.dynamic_slice(labels, (v0,), (bv,))
+
+    # -- 1. LA action selection (roulette wheel) -----------------------------
+    logits = jnp.log(jnp.clip(probs, 1e-30, 1.0))
+    action = jax.random.categorical(k_act, logits, axis=-1).astype(jnp.int32)
+    action = jnp.where(vmask, action, cur)
+
+    # -- 2. migration probability per partition ------------------------------
+    wants = (action != cur) & vmask
+    demand = jnp.zeros((k,), jnp.float32).at[action].add(deg * wants)  # m(l)
+    remaining = cap - loads                                            # r(l)
+    p_mig = jnp.where(
+        demand > 0,
+        jnp.clip(remaining / jnp.maximum(demand, 1e-9), 0.0, 1.0),
+        1.0,
+    )
+
+    # -- 3. normalized LP scores + lambda ------------------------------------
+    nbr_labels = labels[e_dst]                       # async: freshest labels
+    hist = edge_histogram_jnp(e_row, nbr_labels, e_w, bv, k)
+    scores = revolver_scores(hist, inv_wsum, loads, cap)
+    lam_chunk = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+    best = jnp.max(scores, axis=-1)
+    score_sum = score_sum + jnp.sum(jnp.where(vmask, best, 0.0))
+
+    # -- 4. gated migration ---------------------------------------------------
+    u = jax.random.uniform(k_mig, (bv,))
+    migrate = wants & (u < p_mig[action])
+    new_lbl = jnp.where(migrate, action, cur)
+
+    # -- 8. exact load update (visible to the next chunk) --------------------
+    dmig = deg * migrate
+    loads = loads.at[cur].add(-dmig).at[action].add(dmig)
+    labels = jax.lax.dynamic_update_slice(labels, new_lbl, (v0,))
+
+    # -- 5. eq. (13) weight accumulation --------------------------------------
+    # Each neighbor u of v contributes
+    #   w_hat(u,v)           if psi(v) == lambda(u)      (agreement)
+    #   1                    else if the slot is feasible (p_mig > 0)
+    # psi(v) is the label assigned by the LA — the *selected action* (the
+    # paper defines psi: A -> L), so a capacity-denied migration still
+    # counts as agreement for the reinforcement signal.
+    # The slot written depends on cfg.weight_mode (eq. 13 ambiguity):
+    #   self_lambda     -> slot lambda(v) (the literal LHS w(v, lambda(v)))
+    #   neighbor_lambda -> slot lambda(u)
+    lam_nbr = lam[e_dst]
+    agree = (action[e_row] == lam_nbr)
+    if cfg.weight_mode == "self_lambda":
+        slot = lam_chunk[e_row]
+    elif cfg.weight_mode == "neighbor_lambda":
+        slot = lam_nbr
+    else:
+        raise ValueError(f"unknown weight_mode {cfg.weight_mode!r}")
+    feasible = p_mig[slot] > 0
+    val = jnp.where(agree, e_w, jnp.where(feasible, 1.0, 0.0))
+    val = jnp.where(e_w > 0, val, 0.0)  # kill padding slots
+    w_raw = edge_histogram_jnp(e_row, slot, val, bv, k)
+
+    # async lambda visibility for later chunks
+    lam = jax.lax.dynamic_update_slice(lam, lam_chunk, (v0,))
+
+    # -- 6./7. reinforcement signals + weighted LA update ---------------------
+    w_norm, r = split_weights_and_signals(w_raw)
+    if cfg.la_impl == "pallas":
+        from repro.kernels.ops import la_update as la_update_op
+
+        new_probs = la_update_op(probs, w_norm, r, cfg.alpha, cfg.beta, renorm=cfg.renorm)
+    else:
+        new_probs = weighted_la_update(probs, w_norm, r, cfg.alpha, cfg.beta, renorm=cfg.renorm)
+
+    return (labels, lam, loads, cap, key, score_sum), new_probs
+
+
+@partial(jax.jit, static_argnames=("n", "n_blocks", "block_v", "cfg"))
+def _superstep_impl(
+    blk_dst, blk_row, blk_w, deg_out, inv_wsum, vmask, cap, state,
+    *, n: int, n_blocks: int, block_v: int, cfg: RevolverConfig,
+):
+    deg_b = deg_out.reshape(n_blocks, block_v)
+    inv_b = inv_wsum.reshape(n_blocks, block_v)
+    msk_b = vmask.reshape(n_blocks, block_v)
+    xs = (
+        jnp.arange(n_blocks, dtype=jnp.int32),
+        blk_dst,
+        blk_row,
+        blk_w,
+        state.probs,
+        deg_b,
+        inv_b,
+        msk_b,
+    )
+    carry = (state.labels, state.lam, state.loads, cap, state.key,
+             jnp.zeros((), jnp.float32))
+    step_fn = partial(_chunk_step, cfg, block_v)
+    (labels, lam, loads, _, key, score_sum), probs = jax.lax.scan(step_fn, carry, xs)
+    return RevolverState(
+        labels=labels,
+        lam=lam,
+        probs=probs,
+        loads=loads,
+        key=key,
+        step=state.step + 1,
+        score=score_sum / n,
+    )
+
+
+def revolver_superstep(dg: DeviceGraph, cfg: RevolverConfig, state: RevolverState) -> RevolverState:
+    """One full superstep over all chunks. Jitted; static on (dg shape, cfg)."""
+    cap = jnp.asarray(capacity(dg.m, cfg.k, cfg.epsilon, cfg.capacity_mode), jnp.float32)
+    return _superstep_impl(
+        dg.blk_dst, dg.blk_row, dg.blk_w, dg.deg_out, dg.inv_wsum, dg.vmask,
+        cap, state,
+        n=dg.n, n_blocks=dg.n_blocks, block_v=dg.block_v, cfg=cfg,
+    )

@@ -1,0 +1,82 @@
+"""Spinner baseline (Martella et al., ICDE'17) — eqs. (3)-(5) of the paper.
+
+Synchronous BSP label propagation: all vertices score all partitions against
+the *previous* step's labels/loads, pick the argmax candidate, and migrate
+gated by remaining capacity — the paper's main comparison point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.device_graph import DeviceGraph, capacity
+from repro.core.lp import edge_histogram_jnp, spinner_scores
+
+
+@dataclasses.dataclass(frozen=True)
+class SpinnerConfig:
+    k: int
+    epsilon: float = 0.05
+    max_steps: int = 290
+    patience: int = 5
+    theta: float = 0.001
+    capacity_mode: str = "spinner"
+
+
+class SpinnerState(NamedTuple):
+    labels: jnp.ndarray   # [n_pad] int32
+    loads: jnp.ndarray    # [k] f32
+    key: jax.Array
+    step: jnp.ndarray
+    score: jnp.ndarray
+
+
+def spinner_init(dg: DeviceGraph, cfg: SpinnerConfig, key: jax.Array) -> SpinnerState:
+    k_lab, key = jax.random.split(key)
+    labels = jax.random.randint(k_lab, (dg.n_pad,), 0, cfg.k, dtype=jnp.int32)
+    labels = jnp.where(dg.vmask, labels, 0)
+    loads = jnp.zeros((cfg.k,), jnp.float32).at[labels].add(dg.deg_out)
+    return SpinnerState(labels, loads, key, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
+
+
+@partial(jax.jit, static_argnames=("n", "n_pad", "cfg"))
+def _spinner_impl(edge_src, edge_dst, edge_w, deg_out, inv_wsum, vmask, cap,
+                  state: SpinnerState, *, n: int, n_pad: int, cfg: SpinnerConfig):
+    labels, loads, key = state.labels, state.loads, state.key
+    key, k_mig = jax.random.split(key)
+
+    # eq. (3) scores against the previous step's configuration (synchronous)
+    hist = edge_histogram_jnp(edge_src, labels[edge_dst], edge_w, n_pad, cfg.k)
+    scores = spinner_scores(hist, inv_wsum, loads, cap)
+    # prefer the current label on ties (Spinner keeps vertices in place)
+    bump = jax.nn.one_hot(labels, cfg.k, dtype=scores.dtype) * 1e-6
+    cand = jnp.argmax(scores + bump, axis=-1).astype(jnp.int32)
+    best = jnp.max(scores, axis=-1)
+
+    wants = (cand != labels) & vmask
+    demand = jnp.zeros((cfg.k,), jnp.float32).at[cand].add(deg_out * wants)   # m(l)
+    remaining = cap - loads                                                   # r(l)
+    p_mig = jnp.where(demand > 0,
+                      jnp.clip(remaining / jnp.maximum(demand, 1e-9), 0.0, 1.0),
+                      1.0)
+    u = jax.random.uniform(k_mig, (n_pad,))
+    migrate = wants & (u < p_mig[cand])
+    new_labels = jnp.where(migrate, cand, labels)
+
+    dmig = deg_out * migrate
+    loads = loads.at[labels].add(-dmig).at[cand].add(dmig)
+
+    score = jnp.sum(jnp.where(vmask, best, 0.0)) / n
+    return SpinnerState(new_labels, loads, key, state.step + 1, score)
+
+
+def spinner_superstep(dg: DeviceGraph, cfg: SpinnerConfig, state: SpinnerState) -> SpinnerState:
+    cap = jnp.asarray(capacity(dg.m, cfg.k, cfg.epsilon, cfg.capacity_mode), jnp.float32)
+    return _spinner_impl(
+        dg.edge_src, dg.edge_dst, dg.edge_w, dg.deg_out, dg.inv_wsum, dg.vmask,
+        cap, state, n=dg.n, n_pad=dg.n_pad, cfg=cfg,
+    )

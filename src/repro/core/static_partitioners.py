@@ -1,0 +1,16 @@
+"""The paper's static baselines (Section V-D): Hash and Range partitioning."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hash_partition(n: int, k: int) -> jax.Array:
+    """v mod k."""
+    return jnp.arange(n, dtype=jnp.int32) % k
+
+
+def range_partition(n: int, k: int) -> jax.Array:
+    """floor(v * k / |V|)."""
+    v = jnp.arange(n, dtype=jnp.int64)
+    return jnp.minimum((v * k) // n, k - 1).astype(jnp.int32)

@@ -1,0 +1,3 @@
+"""Deterministic synthetic data pipeline."""
+from repro.data.pipeline import DataConfig, PrefetchLoader, make_batch
+__all__ = ["DataConfig", "PrefetchLoader", "make_batch"]

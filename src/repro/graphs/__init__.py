@@ -1,0 +1,18 @@
+"""Graph substrate: CSR storage, synthetic dataset suite, TPU block padding."""
+from repro.graphs.csr import Graph, build_graph, graph_stats
+from repro.graphs.generators import erdos_renyi, grid_road, rmat
+from repro.graphs.datasets import DATASETS, load_dataset
+from repro.graphs.blocking import BlockedEdges, block_edges
+
+__all__ = [
+    "Graph",
+    "build_graph",
+    "graph_stats",
+    "erdos_renyi",
+    "grid_road",
+    "rmat",
+    "DATASETS",
+    "load_dataset",
+    "BlockedEdges",
+    "block_edges",
+]

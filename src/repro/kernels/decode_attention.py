@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: flash-decode — one query token against a KV cache.
+
+decode_32k / long_500k serving hot spot. The cache is streamed through
+VMEM in ``block_k``-sized slabs while the single query row stays
+resident; running (m, l) online-softmax statistics live in VMEM scratch
+across the minor (kv-block) grid dimension:
+
+  grid = (B, Hkv, S/block_k)
+
+All ``group = Hq/Hkv`` query heads that share a KV head are processed
+together as a [group, d] q tile — the cache slab is read from HBM once
+per KV head rather than once per Q head (the kernel is bandwidth-bound;
+this is the GQA bandwidth win). Invalid cache positions (>= kv_len) are
+masked in-register.
+
+The kernel also exposes (m, l) per head for the sharded long-context
+path: `parallel/collectives.py` combines per-shard partial outputs with
+the standard lse-combine, so a seq-sharded cache needs only a
+[B, Hq, d]-sized psum instead of an all-gather of the cache.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
+            acc_ref, m_ref, l_ref, *, block_k: int, scale: float):
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kv_len = len_ref[pl.program_id(0)]
+    k0 = j * block_k
+
+    @pl.when(k0 < kv_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # [group, d]
+        k = k_ref[0, 0].astype(jnp.float32)          # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)          # [bk, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale          # [group, bk]
+        pos = k0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < kv_len, s, _NEG_INF)
+
+        m_prev = m_ref[...]                          # [group, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.where(pos < kv_len, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.where(l > 0, l, 1.0)).astype(o_ref.dtype)
+        m_out_ref[0, 0] = m_ref[...]
+        l_out_ref[0, 0] = l_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_k", "interpret", "return_lse"))
+def decode_attention_pallas(
+    q: jax.Array,        # [B, Hq, D]
+    k_cache: jax.Array,  # [B, Hkv, S, D]
+    v_cache: jax.Array,  # [B, Hkv, S, D]
+    kv_len: jax.Array,   # [B] int32 valid prefix length
+    *,
+    block_k: int = 512,
+    interpret: bool | None = None,
+    return_lse: bool = False,
+):
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, hq, d = q.shape
+    hkv, s_max = k_cache.shape[1], k_cache.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    block_k = min(block_k, s_max)
+    assert s_max % block_k == 0, (s_max, block_k)
+    scale = 1.0 / (d ** 0.5)
+
+    # [B, Hq, D] -> [B, Hkv, group, D] so the q BlockSpec tiles per KV head
+    qg = q.reshape(b, hkv, group, d)
+    grid = (b, hkv, s_max // block_k)
+    kernel = functools.partial(_kernel, block_k=block_k, scale=scale)
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # kv_len, scalar-prefetched
+            pl.BlockSpec((1, 1, group, d), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, j: (b_, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, j: (b_, h, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, group, d), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, group, 1), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, group, 1), lambda b_, h, j: (b_, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, group, d), q.dtype),
+            jax.ShapeDtypeStruct((b, hkv, group, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, group, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((group, d), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len, qg, k_cache, v_cache)
+    out = out.reshape(b, hq, d)
+    if return_lse:
+        return out, m.reshape(b, hq), l.reshape(b, hq)
+    return out

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: edge label histogram (the LP-score / eq.-13 hot loop).
+
+The partitioner's per-superstep O(E) work is, for every vertex v and
+partition l, the accumulation  hist[v, l] += val(e)  over v's edges. A
+GPU implementation would scatter-add through shared memory. On TPU we
+reformulate the scatter as **one-hot matmuls on the MXU** (DESIGN.md §3):
+
+for each chunk of Ec edges owned by a vertex block of Bv rows:
+
+    R[e, r] = 1 if edge e belongs to local row r          [Ec, Bv]
+    L[e, l] = val(e) if edge e's slot is l                [Ec, k]
+    hist   += R^T @ L                                     [Bv, k]
+
+Both indicator matrices are built in-register from int vectors; the MXU
+does the histogram reduction. With Ec=Bv=k=(128..256) these are perfectly
+shaped MXU ops, and the [Bv, k] accumulator stays resident in VMEM across
+all edge chunks of the block (grid minor dimension = edge chunks).
+
+Layout comes from repro.graphs.blocking.block_edges: per-block padded edge
+slabs; padding slots carry val=0 so they contribute nothing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(lbl_ref, row_ref, val_ref, out_ref, *, block_v: int, k: int):
+    """One (vertex-block, edge-chunk) grid cell; accumulates into out_ref."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    lbl = lbl_ref[0]          # [Ec] int32 slot per edge
+    row = row_ref[0]          # [Ec] int32 local row per edge
+    val = val_ref[0]          # [Ec] f32   contribution (0 for padding)
+    ec = lbl.shape[0]
+
+    rows_iota = jax.lax.broadcasted_iota(jnp.int32, (ec, block_v), 1)
+    slot_iota = jax.lax.broadcasted_iota(jnp.int32, (ec, k), 1)
+    r_mat = (row[:, None] == rows_iota).astype(jnp.float32)            # [Ec, Bv]
+    l_mat = (lbl[:, None] == slot_iota).astype(jnp.float32) * val[:, None]  # [Ec, k]
+    out_ref[0] += jax.lax.dot_general(
+        r_mat, l_mat,
+        dimension_numbers=(((0,), (0,)), ((), ())),   # R^T @ L
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "k", "edge_chunk", "interpret"))
+def edge_histogram_pallas(
+    edge_slots: jax.Array,   # [nb, e_max] int32
+    edge_rows: jax.Array,    # [nb, e_max] int32
+    edge_vals: jax.Array,    # [nb, e_max] f32
+    *,
+    block_v: int,
+    k: int,
+    edge_chunk: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Returns hist [nb, block_v, k] f32."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    nb, e_max = edge_slots.shape
+    assert e_max % edge_chunk == 0, (e_max, edge_chunk)
+    n_chunks = e_max // edge_chunk
+
+    grid = (nb, n_chunks)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_v=block_v, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, edge_chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, edge_chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, edge_chunk), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_v, k), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block_v, k), jnp.float32),
+        interpret=interpret,
+    )(edge_slots, edge_rows, edge_vals)

@@ -1,0 +1,139 @@
+"""Pallas TPU kernel: causal/sliding-window GQA flash attention.
+
+Two-pass-free online-softmax attention (Rabe&Staats / FlashAttention-2
+schedule) adapted to the TPU grid model:
+
+  grid = (B, Hq, Sq/block_q, Skv/block_k)     # kv block index minor
+
+TPU executes the grid sequentially per core, so the [block_q, d] f32
+accumulator and the running (m, l) statistics live in VMEM scratch and
+persist across the minor (kv) grid steps; HBM sees exactly one read of
+Q/K/V and one write of O per tile. GQA is folded into the K/V BlockSpec
+index maps (kv head = q head // group) — no repeated KV in HBM.
+
+Masks are computed in-register from iota:
+  causal          q_pos >= k_pos      (q right-aligned against the kv axis)
+  sliding window  q_pos -  k_pos < window
+
+Blocks that the causal/window mask kills entirely are skipped with
+``pl.when`` (the TPU grid still visits them, but no MXU work is issued).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            block_q: int, block_k: int, sq: int, skv: int,
+            causal: bool, window: int | None, scale: float):
+    i = pl.program_id(2)          # q block
+    j = pl.program_id(3)          # kv block
+    nj = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # q tokens are right-aligned against the kv axis (prefill continuation)
+    offset = skv - sq
+    q0 = i * block_q + offset
+    k0 = j * block_k
+
+    # --- block-level mask culling -----------------------------------------
+    run = True
+    if causal:
+        run = jnp.logical_and(run, k0 <= q0 + block_q - 1)
+    if window is not None:
+        run = jnp.logical_and(run, q0 - (k0 + block_k - 1) < window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)          # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)          # [bk, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale           # [bq, bk]
+
+        q_pos = q0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]                                       # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.where(l > 0, l, 1.0)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(
+    q: jax.Array,   # [B, Hq, Sq, D]
+    k: jax.Array,   # [B, Hkv, Skv, D]
+    v: jax.Array,   # [B, Hkv, Skv, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    assert sq % block_q == 0 and skv % block_k == 0, (sq, skv, block_q, block_k)
+    scale = 1.0 / (d ** 0.5)
+
+    grid = (b, hq, sq // block_q, skv // block_k)
+    kernel = functools.partial(
+        _kernel, block_q=block_q, block_k=block_k, sq=sq, skv=skv,
+        causal=causal, window=window, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, i, j: (b_, h // group, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, i, j: (b_, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running sum l
+        ],
+        interpret=interpret,
+    )(q, k, v)

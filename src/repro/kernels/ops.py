@@ -1,0 +1,76 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Every op auto-selects ``interpret=True`` on CPU (this container) and the
+compiled TPU path elsewhere; the ``ref.py`` oracles pin the semantics in
+tests/test_kernels.py. Call sites in the model zoo and the partitioner
+select implementations via config flags ("jnp" | "pallas") so the
+dry-run can lower the pure-XLA path while TPU deployments take the
+kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.edge_histogram import edge_histogram_pallas
+from repro.kernels.la_update import la_update_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.decode_attention import decode_attention_pallas
+
+
+def edge_histogram(edge_slots, edge_rows, edge_vals, *, block_v: int, k: int,
+                   edge_chunk: int = 256, interpret: bool | None = None):
+    """hist [nb, block_v, k] — see kernels/edge_histogram.py."""
+    return edge_histogram_pallas(
+        edge_slots, edge_rows, edge_vals,
+        block_v=block_v, k=k, edge_chunk=edge_chunk, interpret=interpret)
+
+
+def la_update(probs, weights, signals, alpha: float, beta: float, *,
+              renorm: bool = True, interpret: bool | None = None):
+    """Weighted-LA probability update (eqs. 8/9) on [V, k] (or [..., k]).
+
+    Rows are padded to a VMEM-friendly block multiple; padding rows carry
+    zero weights (all passes skipped) and are sliced off on return.
+    """
+    shape = probs.shape
+    k = shape[-1]
+    p2 = probs.reshape(-1, k)
+    w2 = weights.reshape(-1, k)
+    r2 = signals.reshape(-1, k)
+    v = p2.shape[0]
+    block_v = 256 if v >= 256 else max(8, 1 << (v - 1).bit_length())
+    pad = (-v) % block_v
+    if pad:
+        p2 = jnp.concatenate([p2, jnp.full((pad, k), 1.0 / k, p2.dtype)], 0)
+        w2 = jnp.concatenate([w2, jnp.zeros((pad, k), w2.dtype)], 0)
+        r2 = jnp.concatenate([r2, jnp.zeros((pad, k), r2.dtype)], 0)
+    out = la_update_pallas(
+        p2, w2, r2, alpha=alpha, beta=beta, renorm=renorm,
+        block_v=block_v, interpret=interpret)
+    return out[:v].reshape(shape)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """Causal/SWA GQA flash attention — q [B,Hq,S,D], k/v [B,Hkv,S,D]."""
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, block_k: int = 512,
+                     interpret: bool | None = None, return_lse: bool = False):
+    """Flash-decode — q [B,Hq,D] against cache [B,Hkv,S,D]."""
+    return decode_attention_pallas(
+        q, k_cache, v_cache, kv_len, block_k=block_k,
+        interpret=interpret, return_lse=return_lse)
+
+
+def wkv6(r, k, v, logw, u, state0, *, block_s: int = 128,
+         interpret: bool | None = None):
+    """RWKV6 recurrence with VMEM-resident [N,N] state — see kernels/wkv6.py."""
+    from repro.kernels.wkv6 import wkv6_pallas
+    return wkv6_pallas(r, k, v, logw, u, state0, block_s=block_s,
+                       interpret=interpret)

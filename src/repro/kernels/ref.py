@@ -1,0 +1,154 @@
+"""Pure-jnp/numpy oracles for every Pallas kernel in this package.
+
+Each oracle is written independently of the kernel (and of the core/ jnp
+implementations where practical) so that tests/test_kernels.py's
+``assert_allclose`` sweeps pin the kernel semantics rather than comparing
+an implementation against itself. The ``la_update_ref`` oracle in
+particular runs the m sequential passes as a Python loop over numpy
+arrays — the most literal possible transcription of eqs. (8)/(9).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# edge_histogram (eq. 11 numerator / eq. 13 accumulation)
+# --------------------------------------------------------------------------
+def edge_histogram_ref(
+    edge_slots: np.ndarray,   # [nb, e_max] int32 partition slot per edge
+    edge_rows: np.ndarray,    # [nb, e_max] int32 local row per edge
+    edge_vals: np.ndarray,    # [nb, e_max] f32 contribution (0 = padding)
+    *,
+    block_v: int,
+    k: int,
+) -> np.ndarray:
+    """hist[b, r, l] = sum of vals of block-b edges with row r, slot l."""
+    edge_slots = np.asarray(edge_slots)
+    edge_rows = np.asarray(edge_rows)
+    edge_vals = np.asarray(edge_vals, dtype=np.float32)
+    nb, e_max = edge_slots.shape
+    hist = np.zeros((nb, block_v, k), np.float32)
+    for b in range(nb):
+        np.add.at(hist[b], (edge_rows[b], edge_slots[b]), edge_vals[b])
+    return hist
+
+
+# --------------------------------------------------------------------------
+# la_update (eqs. 8/9, m sequential passes, penalty-first schedule)
+# --------------------------------------------------------------------------
+def la_update_ref(
+    probs: np.ndarray,    # [V, k] f32
+    weights: np.ndarray,  # [V, k] f32 (normalized halves)
+    signals: np.ndarray,  # [V, k] f32 (0 reward / 1 penalty)
+    *,
+    alpha: float,
+    beta: float,
+    renorm: bool = True,
+) -> np.ndarray:
+    p = np.array(probs, np.float64)
+    w = np.asarray(weights, np.float64)
+    r = np.asarray(signals, np.float64)
+    v, k = p.shape
+    # penalty-first, stable within each class (matches argsort(-r, stable))
+    order = np.argsort(-r, axis=-1, kind="stable")
+    for row in range(v):
+        for t in range(k):
+            i = order[row, t]
+            w_i = w[row, i]
+            if w_i <= 0:       # zero-weight slot carries no signal: skip
+                continue
+            if r[row, i] > 0:  # eq. (9) penalty pass
+                new = p[row] * (1.0 - beta * w[row]) + beta * w[row] / (k - 1)
+                new[i] = p[row, i] * (1.0 - beta * w_i)
+            else:              # eq. (8) reward pass
+                new = p[row] * (1.0 - alpha * w[row])
+                new[i] = p[row, i] + alpha * w_i * (1.0 - p[row, i])
+            p[row] = new
+    if renorm:
+        p = np.clip(p, 1e-12, 1.0)
+        p = p / p.sum(axis=-1, keepdims=True)
+    return p.astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# attention (full softmax oracle; GQA + causal + sliding window)
+# --------------------------------------------------------------------------
+def attention_ref(
+    q: jnp.ndarray,   # [B, Hq, Sq, D]
+    k: jnp.ndarray,   # [B, Hkv, Skv, D]
+    v: jnp.ndarray,   # [B, Hkv, Skv, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """O(S^2)-memory reference attention in f32."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    q_pos = jnp.arange(sq)[:, None] + (k.shape[2] - sq)  # right-aligned
+    k_pos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,        # [B, Hq, D] one query token per sequence
+    k_cache: jnp.ndarray,  # [B, Hkv, S, D]
+    v_cache: jnp.ndarray,  # [B, Hkv, S, D]
+    kv_len: jnp.ndarray,   # [B] int32 valid prefix length
+    *,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    b, hq, d = q.shape
+    hkv, s_max = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k_cache.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v_cache.astype(jnp.float32), group, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", qf, kf) * scale
+    valid = jnp.arange(s_max)[None, None, :] < kv_len[:, None, None]
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhk,bhkd->bhd", p, vf).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# wkv6 (RWKV6 recurrence)
+# --------------------------------------------------------------------------
+def wkv6_ref(r, k, v, logw, u, state0):
+    """Token-by-token numpy oracle. r/k/v/logw [B,S,H,N]; u [H,N];
+    state0 [B,H,N,N]. Returns (y, state_out)."""
+    r = np.asarray(r, np.float64)
+    k = np.asarray(k, np.float64)
+    v = np.asarray(v, np.float64)
+    w = np.exp(np.asarray(logw, np.float64))
+    u = np.asarray(u, np.float64)
+    state = np.array(state0, np.float64)
+    b, s, h, n = r.shape
+    y = np.zeros((b, s, h, n), np.float64)
+    for t in range(s):
+        kt, vt, rt = k[:, t], v[:, t], r[:, t]            # [B,H,N]
+        att = state + (u[None] * kt)[..., :, None] * vt[..., None, :]
+        y[:, t] = np.einsum("bhn,bhnm->bhm", rt, att)
+        state = state * w[:, t][..., :, None] + \
+            kt[..., :, None] * vt[..., None, :]
+    return y.astype(np.float32), state.astype(np.float32)

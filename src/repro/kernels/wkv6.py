@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: RWKV6 wkv recurrence with a VMEM-resident state.
+
+§Perf attribution on rwkv6-3b train_4k showed the XLA chunk-vectorized
+recurrence streams the [B, nc, H, N, N] f32 state through HBM on every
+within-chunk step — 2.3e12 of the cell's 1.1e13 HBM bytes. This kernel
+keeps one (batch, head) [N, N] state tile **resident in VMEM across the
+whole sequence** (grid minor = seq blocks, sequential on TPU), so HBM
+sees only the r/k/v/w streams and one state write:
+
+  per token (head-local):
+    y_t     = r_t · (S + u ⊙ k_t ⊗ v_t)
+    S      <- diag(exp(logw_t)) S + k_t ⊗ v_t
+
+Layout: [B, S, H, N] operands; grid (B, H, S/block_s); the seq loop
+inside a block is a fori_loop over VMEM rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, o_ref, so_ref,
+            state_ref, *, block_s: int):
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)                     # [N]
+
+    def step(t, _):
+        rt = r_ref[0, t, 0].astype(jnp.float32)          # [N]
+        kt = k_ref[0, t, 0].astype(jnp.float32)
+        vt = v_ref[0, t, 0].astype(jnp.float32)
+        wt = jnp.exp(lw_ref[0, t, 0].astype(jnp.float32))
+        state = state_ref[...]                           # [N, N]
+        att = state + (u * kt)[:, None] * vt[None, :]
+        o_ref[0, t, 0] = jnp.sum(rt[:, None] * att, axis=0).astype(o_ref.dtype)
+        state_ref[...] = state * wt[:, None] + kt[:, None] * vt[None, :]
+        return _
+
+    jax.lax.fori_loop(0, block_s, step, None)
+
+    @pl.when(j == nj - 1)
+    def _fin():
+        so_ref[0, 0] = state_ref[...].astype(so_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def wkv6_pallas(r, k, v, logw, u, state0, *, block_s: int = 128,
+                interpret: bool | None = None):
+    """r/k/v/logw [B,S,H,N]; u [H,N]; state0 [B,H,N,N] f32.
+    Returns (y [B,S,H,N] f32, state_out [B,H,N,N] f32)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, s, h, n = r.shape
+    block_s = min(block_s, s)
+    assert s % block_s == 0, (s, block_s)
+    grid = (b, h, s // block_s)
+    seq_spec = pl.BlockSpec((1, block_s, 1, n), lambda b_, h_, j: (b_, j, h_, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, block_s=block_s),
+        grid=grid,
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, n), lambda b_, h_, j: (h_, 0)),
+            pl.BlockSpec((1, 1, n, n), lambda b_, h_, j: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, 1, n, n), lambda b_, h_, j: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, n, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u, state0)

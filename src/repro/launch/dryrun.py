@@ -1,0 +1,249 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input-shape x mesh) cell:
+  jax.jit(step).lower(**ShapeDtypeStruct specs).compile()
+on the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh, printing
+``compiled.memory_analysis()`` (proves it fits) and the HLO-derived cost
+terms (feeds §Roofline). No arrays are allocated — inputs are
+ShapeDtypeStructs and only lower+compile runs.
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --out results/dryrun.jsonl   # every cell,
+      one subprocess per cell (keeps compile RAM bounded), resumable.
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _mesh(name: str):
+    from repro.launch.mesh import make_production_mesh
+    return make_production_mesh(multi_pod=(name == "multipod"))
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def dryrun_cell(arch: str, shape_name: str, mesh_name: str, *,
+                zero_dp: bool = True, seq_parallel: bool = False,
+                bf16_silu: bool = False, moe_ep2d: bool = False,
+                verbose: bool = True, breakdown: bool = False) -> dict:
+    from repro.configs.registry import get_config, input_specs
+    from repro.configs.shapes import SHAPES
+    from repro.models import init_cache, init_lm
+    from repro.optim.adamw import OptConfig
+    from repro.parallel import (analyze_compiled, batch_specs, cache_specs,
+                                param_specs, roofline_from_costs,
+                                validate_specs, zero_dp_specs)
+    from repro.parallel.act_sharding import use_activation_sharding
+    from repro.train.step import (init_train_state, make_decode_step,
+                                  make_prefill_step, make_train_step)
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = _mesh(mesh_name)
+    chips = mesh.size
+    t0 = time.monotonic()
+
+    key_s = jax.ShapeDtypeStruct((2,), np.uint32)
+    p_shape = jax.eval_shape(lambda k: init_lm(cfg, k), key_s)
+    p_specs = param_specs(p_shape, cfg=cfg, mesh=mesh, moe_ep2d=moe_ep2d)
+    bad = validate_specs(p_specs, p_shape, mesh)
+    if bad:
+        raise ValueError(f"indivisible param shardings: {bad[:5]}")
+    b_specs_in = input_specs(cfg, shape)
+
+    with use_activation_sharding(mesh, enabled=True, sp=seq_parallel,
+                                 bf16_silu=bf16_silu, moe_ep2d=moe_ep2d):
+        if shape.kind == "train":
+            opt_cfg = OptConfig()
+            state_shape = jax.eval_shape(
+                lambda k: init_train_state(cfg, opt_cfg, k), key_s)
+            opt_specs = {
+                "master": p_specs,
+                "m": p_specs,
+                "v": p_specs,
+                "count": P(),
+            }
+            if zero_dp:
+                opt_specs = {
+                    k: (zero_dp_specs(p_specs, p_shape, mesh)
+                        if k != "count" else P())
+                    for k in opt_specs}
+            state_specs = {"params": p_specs, "opt": opt_specs, "step": P()}
+            bspec = batch_specs(b_specs_in, mesh)
+            fn = make_train_step(cfg, opt_cfg)
+            lowered = jax.jit(
+                fn,
+                in_shardings=(_named(mesh, state_specs), _named(mesh, bspec)),
+                out_shardings=(_named(mesh, state_specs),
+                               NamedSharding(mesh, P())),
+                donate_argnums=(0,),
+            ).lower(state_shape, b_specs_in)
+        elif shape.kind == "prefill":
+            bspec = batch_specs(b_specs_in, mesh)
+            fn = make_prefill_step(cfg, shape.seq_len)
+            lowered = jax.jit(
+                fn,
+                in_shardings=(_named(mesh, p_specs), _named(mesh, bspec)),
+            ).lower(p_shape, b_specs_in)
+        else:  # decode
+            cache_shape = jax.eval_shape(
+                lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+            c_specs = cache_specs(cfg, cache_shape, mesh)
+            bad = validate_specs(c_specs, cache_shape, mesh)
+            if bad:
+                raise ValueError(f"indivisible cache shardings: {bad[:5]}")
+            tok_spec = batch_specs(b_specs_in, mesh)
+            fn = make_decode_step(cfg)
+            lowered = jax.jit(
+                fn,
+                in_shardings=(_named(mesh, p_specs), _named(mesh, c_specs),
+                              _named(mesh, tok_spec["token"])),
+            ).lower(p_shape, cache_shape, b_specs_in["token"])
+
+        t_lower = time.monotonic() - t0
+        compiled = lowered.compile()
+    t_compile = time.monotonic() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    costs = analyze_compiled(compiled)
+    roof = roofline_from_costs(costs, cfg=cfg, shape=shape,
+                               mesh_name=mesh_name, chips=chips,
+                               mem_stats=mem)
+    xla_ca = {}
+    try:
+        ca = compiled.cost_analysis()
+        xla_ca = {"xla_flops": ca.get("flops"),
+                  "xla_bytes": ca.get("bytes accessed")}
+    except Exception:
+        pass
+
+    row = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "seq_parallel": seq_parallel, "bf16_silu": bf16_silu,
+        "moe_ep2d": moe_ep2d,
+        "mem": {
+            "argument_gb": mem.argument_size_in_bytes / 1e9,
+            "output_gb": mem.output_size_in_bytes / 1e9,
+            "temp_gb": mem.temp_size_in_bytes / 1e9,
+            "alias_gb": mem.alias_size_in_bytes / 1e9,
+        },
+        **{k: v for k, v in roof.row().items()
+           if k not in ("arch", "shape", "mesh", "chips")},
+        **xla_ca,
+    }
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_name}] compile={t_compile:.1f}s")
+        print(f"  memory_analysis: args={row['mem']['argument_gb']:.2f}GB "
+              f"temp={row['mem']['temp_gb']:.2f}GB "
+              f"alias={row['mem']['alias_gb']:.2f}GB "
+              f"fits_hbm={row['fits_hbm']}")
+        print(f"  flops/dev={row['hlo_flops']:.3e} bytes/dev={row['hlo_bytes']:.3e} "
+              f"coll/dev={row['collective_bytes']:.3e}")
+        print(f"  roofline: compute={row['compute_s']:.4f}s "
+              f"memory={row['memory_s']:.4f}s coll={row['collective_s']:.4f}s "
+              f"-> {row['bottleneck']}-bound useful={row['useful_ratio']:.2f}")
+        print(f"  collectives: { {k: int(v['count']) for k, v in (row['collectives'] or {}).items()} }")
+    if breakdown:
+        print("  -- top HBM byte contributors --")
+        for k, v in costs.top_shapes(12):
+            print(f"    {v:12.3e}  {k}")
+        print("  -- top collective contributors --")
+        for k, v in costs.top_coll(8):
+            print(f"    {v:12.3e}  {k}")
+        row["top_shapes"] = costs.top_shapes(12)
+        row["top_coll"] = costs.top_coll(8)
+    return row
+
+
+def _load_done(path):
+    done = set()
+    if path and os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") == "ok":
+                        done.add((r["arch"], r["shape"], r["mesh"],
+                                  bool(r.get("seq_parallel", False))))
+                except json.JSONDecodeError:
+                    pass
+    return done
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multipod"])
+    ap.add_argument("--all", action="store_true",
+                    help="run every runnable cell x both meshes via subprocesses")
+    ap.add_argument("--out", default=None, help="append JSONL results here")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--bf16-silu", action="store_true")
+    ap.add_argument("--ep2d", action="store_true",
+                    help="cross-pod expert parallelism (multipod MoE)")
+    ap.add_argument("--breakdown", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=float, default=3600.0)
+    args = ap.parse_args(argv)
+
+    if args.all:
+        from repro.configs.registry import all_cells
+        done = set() if args.force else _load_done(args.out)
+        cells = [(a, s) for a, s, skip in all_cells() if skip is None]
+        skips = [(a, s, skip) for a, s, skip in all_cells() if skip]
+        for a, s, why in skips:
+            print(f"SKIP {a} x {s}: {why}")
+        failures = 0
+        for mesh_name in ("single", "multipod"):
+            for a, s in cells:
+                if (a, s, mesh_name, args.seq_parallel) in done:
+                    print(f"done already: {a} x {s} x {mesh_name}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", a, "--shape", s, "--mesh", mesh_name]
+                if args.out:
+                    cmd += ["--out", args.out]
+                if args.seq_parallel:
+                    cmd += ["--seq-parallel"]
+                print(f"--- {a} x {s} x {mesh_name} ---", flush=True)
+                r = subprocess.run(cmd, timeout=args.timeout)
+                if r.returncode != 0:
+                    failures += 1
+                    if args.out:
+                        with open(args.out, "a") as f:
+                            f.write(json.dumps({
+                                "arch": a, "shape": s, "mesh": mesh_name,
+                                "seq_parallel": args.seq_parallel,
+                                "status": f"FAILED rc={r.returncode}"}) + "\n")
+        print(f"dry-run sweep complete; failures={failures}")
+        sys.exit(1 if failures else 0)
+
+    row = dryrun_cell(args.arch, args.shape, args.mesh,
+                      seq_parallel=args.seq_parallel,
+                      bf16_silu=args.bf16_silu, moe_ep2d=args.ep2d,
+                      breakdown=args.breakdown)
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(json.dumps(row) + "\n")
+
+
+if __name__ == "__main__":
+    main()

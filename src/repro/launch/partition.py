@@ -1,0 +1,52 @@
+"""Graph-partitioning launcher — the paper's workload as a CLI.
+
+  PYTHONPATH=src python -m repro.launch.partition --dataset LJ --scale 0.002 \
+      --k 8 --algo revolver --algo spinner --algo hash --algo range
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core import run_partitioner
+from repro.graphs import load_dataset
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="LJ",
+                    help="Table-I dataset key (WIKI/UK/USA/SO/LJ/EN/OK/HLWD/EU)")
+    ap.add_argument("--scale", type=float, default=0.002)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--algo", action="append", default=None,
+                    choices=["revolver", "spinner", "hash", "range"])
+    ap.add_argument("--max-steps", type=int, default=290)
+    ap.add_argument("--epsilon", type=float, default=0.05)
+    ap.add_argument("--n-blocks", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args(argv)
+
+    g = load_dataset(args.dataset, scale=args.scale, seed=args.seed)
+    algos = args.algo or ["revolver", "spinner", "hash", "range"]
+    rows = []
+    for algo in algos:
+        res = run_partitioner(algo, g, args.k, seed=args.seed,
+                              epsilon=args.epsilon,
+                              max_steps=args.max_steps,
+                              n_blocks=args.n_blocks)
+        row = {"dataset": args.dataset, "algo": algo, "k": args.k,
+               "local_edges": round(res.local_edges, 4),
+               "max_norm_load": round(res.max_norm_load, 4),
+               "steps": res.steps}
+        rows.append(row)
+        if not args.json:
+            print(f"{algo:10s} local_edges={row['local_edges']:.4f} "
+                  f"max_norm_load={row['max_norm_load']:.4f} "
+                  f"steps={row['steps']}")
+    if args.json:
+        print(json.dumps(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""LM zoo: composable raw-JAX model definitions for the 10 assigned
+architectures (scan-over-layers, pluggable attention impls, serve caches)."""
+from repro.models.api import (init_cache, init_lm, lm_decode_step, lm_loss,
+                              lm_prefill)
+from repro.models.config import ModelConfig
+
+__all__ = ["ModelConfig", "init_lm", "lm_loss", "init_cache", "lm_prefill",
+           "lm_decode_step"]

@@ -1,0 +1,83 @@
+"""Unified model API — dispatch on cfg.family.
+
+  init_lm(cfg, key)                  -> params
+  lm_loss(params, cfg, batch)        -> (loss, metrics)     [train]
+  init_cache(cfg, batch, s_max)      -> cache pytree        [serve]
+  lm_prefill(params, cfg, cache, batch) -> (logits, cache)
+  lm_decode_step(params, cfg, cache, token) -> (logits, cache)
+
+batch = {"tokens": [B,S] i32, "labels": [B,S] i32 (-100 masked),
+         "frontend": [B, n_patches|enc_seq, d] (vlm/encdec stubs only)}
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import rwkv_model, transformer, whisper, zamba
+
+_DECODER = ("dense", "moe", "vlm")
+
+
+def init_lm(cfg: ModelConfig, key):
+    if cfg.family in _DECODER:
+        return transformer.init_decoder(cfg, key)
+    if cfg.family == "ssm":
+        return rwkv_model.init_rwkv(cfg, key)
+    if cfg.family == "hybrid":
+        return zamba.init_zamba(cfg, key)
+    if cfg.family == "encdec":
+        return whisper.init_whisper(cfg, key)
+    raise ValueError(cfg.family)
+
+
+def lm_loss(params, cfg: ModelConfig, batch):
+    if cfg.family in _DECODER:
+        return transformer.decoder_loss(params, cfg, batch)
+    if cfg.family == "ssm":
+        return rwkv_model.rwkv_loss(params, cfg, batch)
+    if cfg.family == "hybrid":
+        return zamba.zamba_loss(params, cfg, batch)
+    if cfg.family == "encdec":
+        return whisper.whisper_loss(params, cfg, batch)
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int):
+    if cfg.family in _DECODER:
+        return transformer.decoder_init_cache(cfg, batch, s_max)
+    if cfg.family == "ssm":
+        return rwkv_model.rwkv_init_cache(cfg, batch, s_max)
+    if cfg.family == "hybrid":
+        return zamba.zamba_init_cache(cfg, batch, s_max)
+    if cfg.family == "encdec":
+        return whisper.whisper_init_cache(cfg, batch, s_max)
+    raise ValueError(cfg.family)
+
+
+def lm_prefill(params, cfg: ModelConfig, cache, batch):
+    tokens = batch["tokens"]
+    if cfg.family in _DECODER:
+        frontend = batch.get("frontend") if cfg.family == "vlm" else None
+        return transformer.decoder_prefill(params, cfg, tokens, cache,
+                                           frontend=frontend)
+    if cfg.family == "ssm":
+        return rwkv_model.rwkv_prefill(params, cfg, tokens, cache)
+    if cfg.family == "hybrid":
+        return zamba.zamba_prefill(params, cfg, tokens, cache)
+    if cfg.family == "encdec":
+        return whisper.whisper_prefill(params, cfg, tokens, cache,
+                                       batch["frontend"])
+    raise ValueError(cfg.family)
+
+
+def lm_decode_step(params, cfg: ModelConfig, cache, token):
+    if cfg.family in _DECODER:
+        return transformer.decoder_decode_step(params, cfg, cache, token)
+    if cfg.family == "ssm":
+        return rwkv_model.rwkv_decode_step(params, cfg, cache, token)
+    if cfg.family == "hybrid":
+        return zamba.zamba_decode_step(params, cfg, cache, token)
+    if cfg.family == "encdec":
+        return whisper.whisper_decode_step(params, cfg, cache, token)
+    raise ValueError(cfg.family)

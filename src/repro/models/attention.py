@@ -1,0 +1,327 @@
+"""GQA / MHA / sliding-window attention: train, prefill and decode paths.
+
+Three interchangeable inner implementations (`impl`):
+
+  "naive"   O(S^2)-memory masked softmax — oracle + tiny smoke shapes.
+  "xla"     chunked online-softmax flash (lax.scan over q/kv blocks) —
+            linear memory, compiles to compact HLO; the default for the
+            CPU dry-run. Sliding-window uses a dynamic-slice slab so SWA
+            cost is O(S*window), not O(S^2).
+  "pallas"  repro.kernels.flash_attention (TPU target).
+
+Decode reads a [B, Hkv, S, D] cache (full causal) or a [B, Hkv, W, D]
+ring buffer (sliding window); keys are stored post-RoPE.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense, dense_init
+
+_NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    n_q: int
+    n_kv: int
+    d_head: int
+    causal: bool = True
+    window: int | None = None          # sliding-window size (None = full)
+    rope_frac: float = 1.0             # fraction of d_head rotated
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    o_bias: bool = False
+    impl: str = "xla"                  # "naive" | "xla" | "pallas"
+    block_q: int = 512
+    block_k: int = 1024
+
+    @property
+    def d_rot(self) -> int:
+        r = int(self.d_head * self.rope_frac)
+        return r - (r % 2)
+
+
+def init_attention(key, spec: AttnSpec, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], spec.d_model, spec.n_q * spec.d_head, dtype,
+                         bias=spec.qkv_bias),
+        "wk": dense_init(ks[1], spec.d_model, spec.n_kv * spec.d_head, dtype,
+                         bias=spec.qkv_bias),
+        "wv": dense_init(ks[2], spec.d_model, spec.n_kv * spec.d_head, dtype,
+                         bias=spec.qkv_bias),
+        "wo": dense_init(ks[3], spec.n_q * spec.d_head, spec.d_model, dtype,
+                         bias=spec.o_bias),
+    }
+
+
+# --------------------------------------------------------------------------
+# inner attention implementations ([B, H, S, D] layout)
+# --------------------------------------------------------------------------
+def _grouped_scores(q, k):
+    """q [B,Hq,Sq,D] x k [B,Hkv,Sk,D] -> [B,Hkv,G,Sq,Sk] without repeat."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    qg = q.reshape(b, hkv, hq // hkv, sq, d)
+    return jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                      k.astype(jnp.float32))
+
+
+def naive_attention(q, k, v, *, causal=True, window=None, q_offset=None):
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    scale = 1.0 / (d ** 0.5)
+    if q_offset is None:
+        q_offset = sk - sq
+    s = _grouped_scores(q, k) * scale                       # [B,Hkv,G,Sq,Sk]
+    q_pos = jnp.arange(sq)[:, None] + q_offset
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def _flash_inner(qb, k, v, q0, *, causal, window, block_k, scale,
+                 kv_valid=None):
+    """One q block [B,Hkv,G,bq,D] against all kv blocks (scan)."""
+    b, hkv, g, bq, d = qb.shape
+    sk = k.shape[2]
+    nk = sk // block_k
+    kb = k.reshape(b, hkv, nk, block_k, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hkv, nk, block_k, d).transpose(2, 0, 1, 3, 4)
+    qf = qb.astype(jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        j, kc, vc = xs
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kc.astype(jnp.float32)) * scale
+        q_pos = q0 + jnp.arange(bq)[:, None]
+        k_pos = j * block_k + jnp.arange(block_k)[None, :]
+        mask = jnp.ones((bq, block_k), bool)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        if kv_valid is not None:
+            mask &= k_pos < kv_valid
+        s = jnp.where(mask, s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vc.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, hkv, g, bq, 1), _NEG, jnp.float32),
+            jnp.zeros((b, hkv, g, bq, 1), jnp.float32),
+            jnp.zeros((b, hkv, g, bq, d), jnp.float32))
+    # remat: the [bq, bk] score/prob blocks are recomputed in backward
+    # (flash-attention backward) instead of living as per-step residuals
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), init, (jnp.arange(nk), kb, vb))
+    return acc / jnp.where(l > 0, l, 1.0)[..., 0][..., None]
+
+
+def _swa_slab_inner(qb, k, v, q0, *, window, block_k, scale, kv_valid=None):
+    """Sliding-window q block: dynamic-slice a [window+bq] kv slab."""
+    b, hkv, g, bq, d = qb.shape
+    sk = k.shape[2]
+    slab = min(sk, ((window + bq + block_k - 1) // block_k) * block_k)
+    start = jnp.clip(q0 + bq - slab, 0, sk - slab)
+    ks = jax.lax.dynamic_slice_in_dim(k, start, slab, axis=2)
+    vs = jax.lax.dynamic_slice_in_dim(v, start, slab, axis=2)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qb.astype(jnp.float32),
+                   ks.astype(jnp.float32)) * scale
+    q_pos = q0 + jnp.arange(bq)[:, None]
+    k_pos = start + jnp.arange(slab)[None, :]
+    mask = (q_pos >= k_pos) & ((q_pos - k_pos) < window)
+    if kv_valid is not None:
+        mask &= k_pos < kv_valid
+    s = jnp.where(mask, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgqk,bhkd->bhgqd", p, vs.astype(jnp.float32))
+
+
+def flash_attention_xla(q, k, v, *, causal=True, window=None,
+                        block_q=512, block_k=1024, q_offset=None):
+    """Chunked online-softmax attention; [B,H,S,D] in/out.
+
+    Non-block-multiple lengths are zero-padded internally and masked
+    (padding keys get -inf scores; padding query rows are sliced off).
+    """
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    scale = 1.0 / (d ** 0.5)
+    if q_offset is None:
+        q_offset = sk - sq
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    sq_orig, sk_orig = sq, sk
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_k
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        sk += pad_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        sq += pad_q
+    nq = sq // block_q
+    qg = q.reshape(b, hkv, hq // hkv, nq, block_q, d).transpose(3, 0, 1, 2, 4, 5)
+
+    kv_valid = sk_orig if pad_k else None
+    if window is not None and window + block_q < sk:
+        inner = partial(_swa_slab_inner, window=window, block_k=block_k,
+                        scale=scale, kv_valid=kv_valid)
+    else:
+        inner = partial(_flash_inner, causal=causal, window=window,
+                        block_k=block_k, scale=scale, kv_valid=kv_valid)
+
+    def outer(_, xs):
+        i, qb = xs
+        o = inner(qb, k, v, i * block_q + q_offset)
+        return None, o.astype(q.dtype)
+
+    _, ob = jax.lax.scan(jax.checkpoint(outer), None, (jnp.arange(nq), qg))
+    # [nq, B, Hkv, G, bq, D] -> [B, Hq, Sq, D]
+    out = ob.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, sq, d)
+    return out[:, :, :sq_orig]
+
+
+def attend(q, k, v, *, causal=True, window=None, impl="xla",
+           block_q=512, block_k=1024, q_offset=None):
+    if impl == "naive":
+        return naive_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset)
+    if impl == "xla":
+        return flash_attention_xla(q, k, v, causal=causal, window=window,
+                                   block_q=block_q, block_k=block_k,
+                                   q_offset=q_offset)
+    if impl == "pallas":
+        from repro.kernels import ops
+        return ops.flash_attention(q, k, v, causal=causal, window=window,
+                                   block_q=min(block_q, 128),
+                                   block_k=min(block_k, 128))
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+# --------------------------------------------------------------------------
+# module-level apply: projections + rope + attention
+# --------------------------------------------------------------------------
+def _split_heads(x, n, d_head):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, d_head).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def apply_attention(p, spec: AttnSpec, x, positions, *, return_kv=False):
+    """Self-attention over x [B, S, d]; positions [S] (or [B, S])."""
+    q = _split_heads(dense(p["wq"], x), spec.n_q, spec.d_head)
+    k = _split_heads(dense(p["wk"], x), spec.n_kv, spec.d_head)
+    v = _split_heads(dense(p["wv"], x), spec.n_kv, spec.d_head)
+    if spec.d_rot > 0:
+        pos_b = positions if positions.ndim == 2 else positions[None]
+        q = apply_rope(q, pos_b[:, None, :], d_rot=spec.d_rot,
+                       theta=spec.rope_theta)
+        k = apply_rope(k, pos_b[:, None, :], d_rot=spec.d_rot,
+                       theta=spec.rope_theta)
+    o = attend(q, k, v, causal=spec.causal, window=spec.window,
+               impl=spec.impl, block_q=spec.block_q, block_k=spec.block_k)
+    y = dense(p["wo"], _merge_heads(o))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def apply_cross_attention(p, spec: AttnSpec, x, kv_or_mem, *, from_cache=False):
+    """Cross-attention: queries from x, keys/values from encoder memory
+    [B, Sm, d] (or a precomputed (k, v) cache). No RoPE, no mask."""
+    q = _split_heads(dense(p["wq"], x), spec.n_q, spec.d_head)
+    if from_cache:
+        k, v = kv_or_mem
+    else:
+        k = _split_heads(dense(p["wk"], kv_or_mem), spec.n_kv, spec.d_head)
+        v = _split_heads(dense(p["wv"], kv_or_mem), spec.n_kv, spec.d_head)
+    o = attend(q, k, v, causal=False, impl=spec.impl,
+               block_q=spec.block_q, block_k=spec.block_k)
+    return dense(p["wo"], _merge_heads(o))
+
+
+def decode_self_attention(p, spec: AttnSpec, x1, cache_k, cache_v, pos, *,
+                          decode_impl="xla"):
+    """One-token decode. x1 [B, 1, d]; cache [B, Hkv, S(|W), D]; pos [B] int32.
+
+    Returns (y [B, 1, d], new_cache_k, new_cache_v). Keys are cached
+    post-RoPE. For sliding-window specs the cache is a ring buffer of
+    width W = spec.window.
+    """
+    b = x1.shape[0]
+    s_max = cache_k.shape[2]
+    q = _split_heads(dense(p["wq"], x1), spec.n_q, spec.d_head)   # [B,Hq,1,D]
+    k = _split_heads(dense(p["wk"], x1), spec.n_kv, spec.d_head)  # [B,Hkv,1,D]
+    v = _split_heads(dense(p["wv"], x1), spec.n_kv, spec.d_head)
+    if spec.d_rot > 0:
+        q = apply_rope(q, pos[:, None, None], d_rot=spec.d_rot,
+                       theta=spec.rope_theta)
+        k = apply_rope(k, pos[:, None, None], d_rot=spec.d_rot,
+                       theta=spec.rope_theta)
+
+    ring = spec.window is not None and s_max == spec.window
+    slot = jnp.where(ring, pos % s_max, jnp.minimum(pos, s_max - 1))
+    bi = jnp.arange(b)
+    cache_k = cache_k.at[bi, :, slot].set(k[:, :, 0])
+    cache_v = cache_v.at[bi, :, slot].set(v[:, :, 0])
+
+    kv_len = pos + 1
+    if decode_impl == "pallas" and not ring:
+        from repro.kernels import ops
+        o = ops.decode_attention(q[:, :, 0], cache_k, cache_v,
+                                 kv_len.astype(jnp.int32))       # [B, Hq, D]
+        o = o[:, :, None, :]                                     # [B, Hq, 1, D]
+    elif ring:
+        o = _ring_decode_xla(q, cache_k, cache_v, pos, spec)
+    else:
+        # masked matvec over the cache — already bandwidth-optimal in XLA
+        s = _grouped_scores(q, cache_k) * (1.0 / spec.d_head ** 0.5)
+        valid = jnp.arange(s_max)[None, :] < kv_len[:, None]
+        s = jnp.where(valid[:, None, None, None], s, _NEG)
+        pmat = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", pmat,
+                       cache_v.astype(jnp.float32))
+        o = o.reshape(b, spec.n_q, 1, spec.d_head).astype(x1.dtype)
+    y = dense(p["wo"], _merge_heads(o))
+    return y, cache_k, cache_v
+
+
+def _ring_decode_xla(q, cache_k, cache_v, pos, spec: AttnSpec):
+    """Decode against a ring-buffer SWA cache: valid slots are the last
+    min(pos+1, W) writes; ordering is irrelevant under softmax."""
+    b = q.shape[0]
+    w = cache_k.shape[2]
+    s = _grouped_scores(q, cache_k) * (1.0 / spec.d_head ** 0.5)
+    n_valid = jnp.minimum(pos + 1, w)
+    slot = jnp.arange(w)[None, :]
+    # slots [0, n_valid) are valid when pos < w; all valid once wrapped —
+    # except slots written more than w steps ago, which were overwritten.
+    valid = slot < n_valid[:, None]
+    s = jnp.where(valid[:, None, None, None], s, _NEG)
+    pmat = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", pmat, cache_v.astype(jnp.float32))
+    return o.reshape(b, spec.n_q, 1, spec.d_head).astype(q.dtype)

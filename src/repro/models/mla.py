@@ -1,0 +1,139 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+K/V are generated from a shared low-rank latent ``c_kv`` (kv_lora_rank =
+512) plus a single per-token RoPE key shared across heads; only
+``[c_kv | k_rope]`` (512+64 per token) is cached at decode time — the
+MLA memory win over a GQA cache, modeled faithfully.
+
+Decode uses the *weight-absorbed* form: W_UK is folded into the query
+(q_lat = q_nope @ W_UK^T) so scores are taken directly against the
+latent cache and the context is expanded through W_UV once — no
+per-step materialization of full K/V.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_norm, apply_rope, dense, dense_init, norm_init
+
+_NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class MLASpec:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 0        # 0 = direct q projection (V2-Lite)
+    kv_lora_rank: int = 512
+    d_nope: int = 128
+    d_rope: int = 64
+    d_v: int = 128
+    rope_theta: float = 10000.0
+    impl: str = "xla"
+    block_q: int = 512
+    block_k: int = 1024
+
+    @property
+    def d_qk(self) -> int:
+        return self.d_nope + self.d_rope
+
+
+def init_mla(key, spec: MLASpec, dtype):
+    ks = jax.random.split(key, 6)
+    h, dq = spec.n_heads, spec.d_qk
+    p = {}
+    if spec.q_lora_rank:
+        p["wq_a"] = dense_init(ks[0], spec.d_model, spec.q_lora_rank, dtype)
+        p["q_norm"] = norm_init(spec.q_lora_rank, dtype)
+        p["wq_b"] = dense_init(ks[1], spec.q_lora_rank, h * dq, dtype)
+    else:
+        p["wq"] = dense_init(ks[0], spec.d_model, h * dq, dtype)
+    p["wkv_a"] = dense_init(ks[2], spec.d_model,
+                            spec.kv_lora_rank + spec.d_rope, dtype)
+    p["kv_norm"] = norm_init(spec.kv_lora_rank, dtype)
+    p["wk_b"] = dense_init(ks[3], spec.kv_lora_rank, h * spec.d_nope, dtype)
+    p["wv_b"] = dense_init(ks[4], spec.kv_lora_rank, h * spec.d_v, dtype)
+    p["wo"] = dense_init(ks[5], h * spec.d_v, spec.d_model, dtype)
+    return p
+
+
+def _q_proj(p, spec: MLASpec, x, positions):
+    b, s, _ = x.shape
+    if spec.q_lora_rank:
+        q = dense(p["wq_b"], apply_norm(p["q_norm"], dense(p["wq_a"], x)))
+    else:
+        q = dense(p["wq"], x)
+    q = q.reshape(b, s, spec.n_heads, spec.d_qk).transpose(0, 2, 1, 3)
+    q_nope, q_pe = q[..., :spec.d_nope], q[..., spec.d_nope:]
+    pos_b = positions if positions.ndim == 2 else positions[None]
+    q_pe = apply_rope(q_pe, pos_b[:, None, :], theta=spec.rope_theta)
+    return q_nope, q_pe
+
+
+def _latent(p, spec: MLASpec, x, positions):
+    """x -> (c_kv [B,S,R] normed, k_pe [B,1,S,dr] rope'd) — the cache pair."""
+    kv_a = dense(p["wkv_a"], x)
+    c_kv = apply_norm(p["kv_norm"], kv_a[..., :spec.kv_lora_rank])
+    k_pe = kv_a[..., spec.kv_lora_rank:][:, None]                # [B,1,S,dr]
+    pos_b = positions if positions.ndim == 2 else positions[None]
+    k_pe = apply_rope(k_pe, pos_b[:, None, :], theta=spec.rope_theta)
+    return c_kv, k_pe
+
+
+def apply_mla(p, spec: MLASpec, x, positions, *, return_cache=False):
+    """Train/prefill path: materializes per-head K/V from the latent."""
+    from repro.models.attention import attend
+    b, s, _ = x.shape
+    h = spec.n_heads
+    q_nope, q_pe = _q_proj(p, spec, x, positions)
+    c_kv, k_pe = _latent(p, spec, x, positions)
+
+    k_nope = dense(p["wk_b"], c_kv).reshape(b, s, h, spec.d_nope).transpose(0, 2, 1, 3)
+    v = dense(p["wv_b"], c_kv).reshape(b, s, h, spec.d_v).transpose(0, 2, 1, 3)
+    q = jnp.concatenate([q_nope, q_pe], -1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe, (b, h, s, spec.d_rope))], -1)
+    # pad v to d_qk so the flash kernels see square tiles, slice after
+    o = attend(q, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, spec.d_qk - spec.d_v))),
+               causal=True, impl=spec.impl, block_q=spec.block_q,
+               block_k=spec.block_k)[..., :spec.d_v]
+    y = dense(p["wo"], o.transpose(0, 2, 1, 3).reshape(b, s, h * spec.d_v))
+    if return_cache:
+        return y, (c_kv, k_pe[:, 0])
+    return y
+
+
+def decode_mla(p, spec: MLASpec, x1, cache_c, cache_pe, pos):
+    """Absorbed one-token decode.
+
+    x1 [B,1,d]; cache_c [B,S,R]; cache_pe [B,S,dr]; pos [B] int32.
+    Returns (y [B,1,d], cache_c, cache_pe).
+    """
+    b = x1.shape[0]
+    s_max = cache_c.shape[1]
+    h, r = spec.n_heads, spec.kv_lora_rank
+    q_nope, q_pe = _q_proj(p, spec, x1, pos[:, None])       # [B,H,1,*]
+    c_kv, k_pe = _latent(p, spec, x1, pos[:, None])         # [B,1,R], [B,1,1,dr]
+
+    bi = jnp.arange(b)
+    cache_c = cache_c.at[bi, pos].set(c_kv[:, 0])
+    cache_pe = cache_pe.at[bi, pos].set(k_pe[:, 0, 0])
+
+    # absorb W_UK: q_lat[b,h,r] = sum_n q_nope[b,h,n] * W_UK[r,h,n]
+    wk_b = p["wk_b"]["w"].reshape(r, h, spec.d_nope)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, :, 0], wk_b)
+    scores = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                         cache_c.astype(jnp.float32))
+              + jnp.einsum("bhe,bse->bhs", q_pe[:, :, 0].astype(jnp.float32),
+                           cache_pe.astype(jnp.float32)))
+    scores = scores / (spec.d_qk ** 0.5)
+    valid = jnp.arange(s_max)[None, :] < (pos + 1)[:, None]
+    scores = jnp.where(valid[:, None], scores, _NEG)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", probs, cache_c.astype(jnp.float32))
+    wv_b = p["wv_b"]["w"].reshape(r, h, spec.d_v)
+    o = jnp.einsum("bhr,rhv->bhv", ctx_lat, wv_b.astype(jnp.float32))
+    y = dense(p["wo"], o.reshape(b, 1, h * spec.d_v).astype(x1.dtype))
+    return y, cache_c, cache_pe

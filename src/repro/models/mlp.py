@@ -1,0 +1,32 @@
+"""Dense feed-forward blocks: SwiGLU (llama family) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, dense_init, swiglu
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, *, kind: str = "swiglu",
+             bias: bool = False):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], d_model, d_ff, dtype, bias=bias),
+            "w_up": dense_init(ks[1], d_model, d_ff, dtype, bias=bias),
+            "w_down": dense_init(ks[2], d_ff, d_model, dtype, bias=bias),
+        }
+    if kind == "gelu":
+        return {
+            "w_up": dense_init(ks[1], d_model, d_ff, dtype, bias=bias),
+            "w_down": dense_init(ks[2], d_ff, d_model, dtype, bias=bias),
+        }
+    raise ValueError(kind)
+
+
+def apply_mlp(p, x, *, kind: str = "swiglu"):
+    if kind == "swiglu":
+        return dense(p["w_down"], swiglu(dense(p["w_gate"], x), dense(p["w_up"], x)))
+    if kind == "gelu":
+        return dense(p["w_down"], jax.nn.gelu(dense(p["w_up"], x).astype(jnp.float32)).astype(x.dtype))
+    raise ValueError(kind)

@@ -1,0 +1,373 @@
+"""Mixture-of-Experts layer (DeepSeek-V2 style: shared + routed top-k).
+
+Dispatch is sort-based ("dropless-with-capacity"): the [T*K] (token,
+choice) pairs are sorted by expert id, each expert takes up to C slots
+(capacity factor over the mean load), overflow is dropped. This lowers
+to gather/scatter + one batched [E, C, d] x [E, d, ff] matmul — no
+[T, E, C] one-hot dispatch tensor, so it scales to the 1M-token
+train_4k cells. With expert weights sharded over the ``model`` axis
+(expert parallelism) the scatter into the [E*C, d] buffer is XLA's
+all-to-all.
+
+The router also exposes per-expert load and co-activation statistics —
+the input of the Revolver expert-placement integration
+(core/placement.py): experts that co-activate on the same token want to
+live on the same device so the combine step stays local.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense, dense_init, swiglu
+from repro.models.mlp import apply_mlp, init_mlp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    d_model: int
+    n_experts: int             # routed experts
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0          # shared experts (always active)
+    capacity_factor: float = 1.25
+    norm_topk: bool = False    # renormalize top-k gates to sum to 1
+    routed_scale: float = 1.0  # DeepSeek routed_scaling_factor
+
+
+def init_moe(key, spec: MoESpec, dtype):
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / (spec.d_model ** 0.5)
+    p = {
+        "router": {"w": (jax.random.normal(ks[0], (spec.d_model, spec.n_experts),
+                                           jnp.float32) * scale).astype(jnp.float32)},
+        "w_gate": (jax.random.normal(ks[1], (spec.n_experts, spec.d_model,
+                                             spec.d_ff_expert), jnp.float32)
+                   * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (spec.n_experts, spec.d_model,
+                                           spec.d_ff_expert), jnp.float32)
+                 * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (spec.n_experts, spec.d_ff_expert,
+                                             spec.d_model), jnp.float32)
+                   * (1.0 / spec.d_ff_expert ** 0.5)).astype(dtype),
+    }
+    if spec.n_shared:
+        p["shared"] = init_mlp(ks[4], spec.d_model,
+                               spec.d_ff_expert * spec.n_shared, dtype)
+    return p
+
+
+def route(p_router, x2d, spec: MoESpec):
+    """x2d [T, d] -> (gates [T, K] f32, idx [T, K] i32, probs [T, E])."""
+    logits = (x2d.astype(jnp.float32) @ p_router["w"])            # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, spec.top_k)
+    if spec.norm_topk:
+        gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    gates = gates * spec.routed_scale
+    return gates, idx.astype(jnp.int32), probs
+
+
+def moe_capacity(n_tokens: int, spec: MoESpec) -> int:
+    c = int(n_tokens * spec.top_k * spec.capacity_factor / spec.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def apply_moe(p, x, spec: MoESpec, *, return_stats: bool = False):
+    """x [B, S, d] (or [T, d]) -> same shape.
+
+    Dispatch selection: under a mesh context with a model axis, uses the
+    shard_map expert-parallel path (local dispatch + one psum — the same
+    collective cost as a dense megatron MLP, since activations are
+    TP-replicated anyway). Otherwise the single-device sort-based path.
+    """
+    from repro.parallel.act_sharding import get_ctx
+    ctx = get_ctx()
+    if ctx is not None and not return_stats:
+        mesh = ctx.mesh
+        psz = int(mesh.shape.get("pod", 1))
+        msz = int(mesh.shape.get("model", 1))
+        if (ctx.moe_ep2d and psz > 1
+                and spec.n_experts % (psz * msz) == 0):
+            return _apply_moe_ep2d(p, x, spec, mesh)
+        if (ctx.moe_shardmap and msz > 1
+                and spec.n_experts % msz == 0):
+            return _apply_moe_shardmap(p, x, spec, mesh)
+    return _apply_moe_local(p, x, spec, return_stats=return_stats)
+
+
+def _apply_moe_local(p, x, spec: MoESpec, *, return_stats: bool = False):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    t, d = x2.shape
+    e, k = spec.n_experts, spec.top_k
+    cap = moe_capacity(t, spec)
+
+    gates, idx, probs = route(p["router"], x2, spec)
+
+    # ---- sort-based dispatch ------------------------------------------------
+    flat_e = idx.reshape(-1)                                  # [T*K]
+    order = jnp.argsort(flat_e, stable=True)                  # [T*K]
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e))     # [E]
+    pos = jnp.arange(t * k, dtype=jnp.int32) - seg_start[sorted_e]
+    keep = pos < cap
+    slot = jnp.where(keep, sorted_e * cap + pos, e * cap)     # drop -> OOB
+    token_of = order // k                                     # [T*K]
+
+    buf = jnp.zeros((e * cap, d), x.dtype)
+    buf = buf.at[slot].set(x2[token_of], mode="drop")         # all-to-all under EP
+
+    # ---- expert computation (batched over E; weights sharded on E) ----------
+    h = buf.reshape(e, cap, d)
+    act = swiglu(jnp.einsum("ecd,edf->ecf", h, p["w_gate"]),
+                 jnp.einsum("ecd,edf->ecf", h, p["w_up"]))
+    out = jnp.einsum("ecf,efd->ecd", act, p["w_down"]).reshape(e * cap, d)
+
+    # ---- combine -------------------------------------------------------------
+    gathered = jnp.where(keep[:, None], out.at[slot].get(mode="fill",
+                                                         fill_value=0), 0)
+    gate_sorted = gates.reshape(-1)[order]
+    y2 = jnp.zeros((t, d), x.dtype).at[token_of].add(
+        gathered * gate_sorted[:, None].astype(x.dtype))
+
+    if spec.n_shared:
+        y2 = y2 + apply_mlp(p["shared"], x2)
+
+    y = y2.reshape(shape)
+    if return_stats:
+        load = jnp.zeros((e,), jnp.float32).at[flat_e].add(1.0)
+        dropped = jnp.sum(~keep)
+        return y, {"expert_load": load, "dropped": dropped,
+                   "router_probs_mean": jnp.mean(probs, axis=0),
+                   "top_idx": idx}
+    return y
+
+
+def _apply_moe_shardmap(p, x, spec: MoESpec, mesh):
+    """Expert-parallel MoE via shard_map.
+
+    Key observation: under megatron TP the [B,S,d] activations are
+    replicated across the "model" axis, so EP dispatch needs NO
+    all-to-all — every model rank already holds every token. Each rank
+    packs the tokens routed to ITS E/msz experts (sort-based, capacity-
+    bounded), runs its expert matmuls, scatter-adds gated outputs into a
+    [T,d] partial, and a single psum over "model" (fused with the shared-
+    expert megatron partial) completes the layer. Wire cost per layer =
+    one [B,S,d] all-reduce — identical to a dense MLP block.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel.act_sharding import dp_axes_of
+
+    dp = dp_axes_of(mesh)
+    msz = int(mesh.shape["model"])
+    e_loc = spec.n_experts // msz
+    shape = x.shape
+    batch_ok = shape[0] % int(np.prod([mesh.shape[a] for a in dp])) == 0
+    xspec = P(*((dp if batch_ok else None,) + (None,) * (len(shape) - 1)))
+
+    pspec = {
+        "router": {"w": P(None, None)},
+        "w_gate": P("model", None, None),
+        "w_up": P("model", None, None),
+        "w_down": P("model", None, None),
+    }
+    if spec.n_shared:
+        pspec["shared"] = {
+            "w_gate": {"w": P(None, "model")},
+            "w_up": {"w": P(None, "model")},
+            "w_down": {"w": P("model", None)},
+        }
+
+    def local(p_loc, x_loc):
+        t_shape = x_loc.shape
+        x2 = x_loc.reshape(-1, t_shape[-1])
+        t, d = x2.shape
+        k = spec.top_k
+        cap = moe_capacity(t, spec)
+
+        gates, idx, _ = route(p_loc["router"], x2, spec)
+        m_rank = jax.lax.axis_index("model")
+        rel = idx - m_rank * e_loc                       # [T, K]
+        mine = (rel >= 0) & (rel < e_loc)
+        flat_rel = jnp.where(mine, rel, e_loc).reshape(-1)   # e_loc = trash
+
+        order = jnp.argsort(flat_rel, stable=True)
+        sorted_e = flat_rel[order]
+        seg_start = jnp.searchsorted(sorted_e, jnp.arange(e_loc + 1))
+        pos = jnp.arange(t * k, dtype=jnp.int32) - seg_start[sorted_e]
+        keep = (pos < cap) & (sorted_e < e_loc)
+        slot = jnp.where(keep, sorted_e * cap + pos, e_loc * cap)
+        token_of = order // k
+
+        buf = jnp.zeros((e_loc * cap, d), x_loc.dtype)
+        buf = buf.at[slot].set(x2[token_of], mode="drop")
+        h = buf.reshape(e_loc, cap, d)
+        act = swiglu(jnp.einsum("ecd,edf->ecf", h, p_loc["w_gate"]),
+                     jnp.einsum("ecd,edf->ecf", h, p_loc["w_up"]))
+        out = jnp.einsum("ecf,efd->ecd", act, p_loc["w_down"]).reshape(
+            e_loc * cap, d)
+
+        gathered = jnp.where(keep[:, None],
+                             out.at[slot].get(mode="fill", fill_value=0), 0)
+        gate_sorted = gates.reshape(-1)[order]
+        y2 = jnp.zeros((t, d), x_loc.dtype).at[token_of].add(
+            gathered * gate_sorted[:, None].astype(x_loc.dtype))
+
+        if spec.n_shared:                        # megatron partial (local f/msz)
+            y2 = y2 + apply_mlp(p_loc["shared"], x2)
+        y2 = jax.lax.psum(y2, "model")
+        return y2.reshape(t_shape)
+
+    return jax.shard_map(local, mesh=mesh,
+                         in_specs=(pspec, xspec),
+                         out_specs=xspec,
+                         check_vma=False)(
+        {k: p[k] for k in pspec}, x)
+
+
+def _dispatch_local(x2, flat_e, flat_w, e_loc, cap, wg, wu, wd, dtype):
+    """Sort-pack [T*] (row, expert, weight) onto this rank's e_loc experts
+    (ids already rank-relative; out-of-range = drop), run the expert
+    matmuls, and return the weighted per-row outputs [T*, d]."""
+    t = x2.shape[0]
+    d = x2.shape[1]
+    inside = (flat_e >= 0) & (flat_e < e_loc)
+    key = jnp.where(inside, flat_e, e_loc)
+    order = jnp.argsort(key, stable=True)
+    sorted_e = key[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e_loc + 1))
+    pos = jnp.arange(t, dtype=jnp.int32) - seg_start[sorted_e]
+    keep = (pos < cap) & (sorted_e < e_loc)
+    slot = jnp.where(keep, sorted_e * cap + pos, e_loc * cap)
+    row_of = order
+
+    buf = jnp.zeros((e_loc * cap, d), dtype)
+    buf = buf.at[slot].set(x2[row_of], mode="drop")
+    h = buf.reshape(e_loc, cap, d)
+    act = swiglu(jnp.einsum("ecd,edf->ecf", h, wg),
+                 jnp.einsum("ecd,edf->ecf", h, wu))
+    out = jnp.einsum("ecf,efd->ecd", act, wd).reshape(e_loc * cap, d)
+
+    gathered = jnp.where(keep[:, None],
+                         out.at[slot].get(mode="fill", fill_value=0), 0)
+    y = jnp.zeros((t, d), dtype).at[row_of].add(
+        gathered * flat_w[order][:, None].astype(dtype))
+    return y
+
+
+def _apply_moe_ep2d(p, x, spec: MoESpec, mesh):
+    """Cross-pod expert parallelism (EP over pod x model; §Perf C3).
+
+    Expert storage divides by pod_sz*model_sz (236b: 29 GB -> 7.3 GB per
+    device on the 512-chip mesh); the price is one pod-level all_to_all
+    each way for the tokens routed to the remote pod's experts. Tokens
+    are packed per destination pod with a fixed capacity, exchanged,
+    dispatched through the local-expert path (k=1, pre-applied gates),
+    psum'd over "model", and returned through the inverse all_to_all.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    psz = int(mesh.shape["pod"])
+    msz = int(mesh.shape["model"])
+    e_pod = spec.n_experts // psz            # experts per pod
+    e_loc = e_pod // msz                     # experts per device
+    shape = x.shape
+    xspec = P(*((dp,) + (None,) * (len(shape) - 1)))
+    pspec = {
+        "router": {"w": P(None, None)},
+        "w_gate": P(("pod", "model"), None, None),
+        "w_up": P(("pod", "model"), None, None),
+        "w_down": P(("pod", "model"), None, None),
+    }
+    if spec.n_shared:
+        pspec["shared"] = {
+            "w_gate": {"w": P(None, "model")},
+            "w_up": {"w": P(None, "model")},
+            "w_down": {"w": P("model", None)},
+        }
+
+    def local(p_loc, x_loc):
+        t_shape = x_loc.shape
+        x2 = x_loc.reshape(-1, t_shape[-1])
+        t, d = x2.shape
+        k = spec.top_k
+        # per-destination-pod slots: mean load t*k/psz x capacity factor
+        cap_x = int(t * k * spec.capacity_factor / psz)
+        cap_x = max(8, min(t * k, -(-cap_x // 8) * 8))
+
+        gates, idx, _ = route(p_loc["router"], x2, spec)
+        flat_e = idx.reshape(-1)
+        dest = flat_e // e_pod                              # [T*K] pod id
+        rel_pod = flat_e % e_pod                            # within-pod id
+
+        # pack per destination pod
+        order = jnp.argsort(dest, stable=True)
+        sorted_d = dest[order]
+        seg = jnp.searchsorted(sorted_d, jnp.arange(psz + 1))
+        pos = jnp.arange(t * k, dtype=jnp.int32) - seg[sorted_d]
+        keep = pos < cap_x
+        slot = jnp.where(keep, sorted_d * cap_x + pos, psz * cap_x)
+        tok_of = order // k
+
+        send_x = jnp.zeros((psz * cap_x, d), x_loc.dtype)
+        send_x = send_x.at[slot].set(x2[tok_of], mode="drop")
+        send_e = jnp.full((psz * cap_x,), -1, jnp.int32)
+        send_e = send_e.at[slot].set(rel_pod[order], mode="drop")
+
+        # exchange over the pod axis (2-way swap at pod=2)
+        recv_x = jax.lax.all_to_all(send_x.reshape(psz, cap_x, d), "pod",
+                                    split_axis=0, concat_axis=0, tiled=False)
+        recv_e = jax.lax.all_to_all(send_e.reshape(psz, cap_x), "pod",
+                                    split_axis=0, concat_axis=0, tiled=False)
+        recv_x = recv_x.reshape(psz * cap_x, d)
+        recv_e = recv_e.reshape(psz * cap_x)
+
+        # dispatch through MY pod's experts (model-sharded within the pod)
+        m_rank = jax.lax.axis_index("model")
+        rel_here = jnp.where(recv_e >= 0, recv_e - m_rank * e_loc, -1)
+        cap2 = max(8, -(-psz * cap_x * 2 // e_pod) // 8 * 8)
+        out = _dispatch_local(recv_x, rel_here,
+                              jnp.ones((psz * cap_x,), jnp.float32),
+                              e_loc, cap2, p_loc["w_gate"], p_loc["w_up"],
+                              p_loc["w_down"], x_loc.dtype)
+        out = jax.lax.psum(out, "model")
+
+        # return results to the senders (inverse exchange)
+        back = jax.lax.all_to_all(out.reshape(psz, cap_x, d), "pod",
+                                  split_axis=0, concat_axis=0, tiled=False)
+        back = back.reshape(psz * cap_x, d)
+
+        contrib = jnp.where(keep[:, None],
+                            back.at[slot].get(mode="fill", fill_value=0), 0)
+        y2 = jnp.zeros((t, d), x_loc.dtype).at[tok_of].add(
+            contrib * gates.reshape(-1)[order][:, None].astype(x_loc.dtype))
+
+        if spec.n_shared:
+            y2 = y2 + jax.lax.psum(apply_mlp(p_loc["shared"], x2), "model")
+        return y2.reshape(t_shape)
+
+    return jax.shard_map(local, mesh=mesh,
+                         in_specs=(pspec, xspec),
+                         out_specs=xspec,
+                         check_vma=False)(
+        {k: p[k] for k in pspec}, x)
+
+
+def moe_ref(p, x, spec: MoESpec):
+    """O(T*E) dense oracle (no capacity drops) for tests."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    gates, idx, _ = route(p["router"], x2, spec)
+    y2 = jnp.zeros_like(x2)
+    for j in range(spec.n_experts):
+        w = jnp.sum(jnp.where(idx == j, gates, 0.0), axis=-1)   # [T]
+        act = swiglu(x2 @ p["w_gate"][j], x2 @ p["w_up"][j])
+        y2 = y2 + (act @ p["w_down"][j]) * w[:, None].astype(x2.dtype)
+    if spec.n_shared:
+        y2 = y2 + apply_mlp(p["shared"], x2)
+    return y2.reshape(shape)

@@ -1,0 +1,207 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free time mix with
+data-dependent decay, plus the RWKV channel mix.
+
+Core recurrence per head (state [N, V] = key-dim x value-dim):
+
+  y_t   = r_t · (state_{t-1} + u ⊙ k_t ⊗ v_t)
+  state_t = diag(w_t) state_{t-1} + k_t ⊗ v_t
+
+with w_t = exp(-exp(w0 + lora(x))) — the data-dependent decay.
+
+Two implementations:
+  "scan"     exact token-by-token lax.scan (oracle + decode step).
+  "chunked"  (default) the sequence is cut into chunks; the per-chunk
+             local pass runs the SAME exact recurrence but vectorized
+             over all chunks at once (chunk-length sequential steps
+             total instead of S), then a cross-chunk scan stitches
+             states via the chunk transfer operator. Bit-for-bit the
+             same math as "scan" — no exp-factorized matmul form, whose
+             1/cumprod(w) terms overflow f32 for strong decays
+             (DESIGN.md notes this as the rejected GPU-style variant).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, dense_init, norm_init
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Spec:
+    d_model: int
+    n_heads: int
+    d_ffn: int
+    mix_rank: int = 32          # ddlerp LoRA rank
+    decay_rank: int = 64        # decay LoRA rank
+    chunk: int = 64
+
+    @property
+    def d_attn(self) -> int:
+        return self.d_model
+
+    @property
+    def d_head(self) -> int:
+        return self.d_attn // self.n_heads
+
+
+def init_rwkv6_time(key, spec: RWKV6Spec, dtype):
+    ks = jax.random.split(key, 10)
+    d, da = spec.d_model, spec.d_attn
+    h, n = spec.n_heads, spec.d_head
+    rm, rd = spec.mix_rank, spec.decay_rank
+    s = 1.0 / (d ** 0.5)
+    return {
+        "mu_x": jnp.full((d,), 0.5, dtype),
+        "mu": jnp.full((5, d), 0.5, dtype),                # w,k,v,r,g lerps
+        "mix_w1": (jax.random.normal(ks[0], (d, 5 * rm), jnp.float32) * s).astype(dtype),
+        "mix_w2": (jax.random.normal(ks[1], (5, rm, d), jnp.float32) * 0.1).astype(dtype),
+        "wr": dense_init(ks[2], d, da, dtype),
+        "wk": dense_init(ks[3], d, da, dtype),
+        "wv": dense_init(ks[4], d, da, dtype),
+        "wg": dense_init(ks[5], d, da, dtype),
+        "w0": jnp.full((da,), -4.0, jnp.float32),          # slow decay at init
+        "decay_w1": (jax.random.normal(ks[6], (d, rd), jnp.float32) * s).astype(dtype),
+        "decay_w2": (jax.random.normal(ks[7], (rd, da), jnp.float32) * 0.1).astype(dtype),
+        "u": (jax.random.normal(ks[8], (h, n), jnp.float32) * 0.1),
+        "ln_x": {"g": jnp.ones((da,), dtype), "b": jnp.zeros((da,), dtype)},
+        "wo": dense_init(ks[9], da, d, dtype),
+    }
+
+
+def init_rwkv6_channel(key, spec: RWKV6Spec, dtype):
+    ks = jax.random.split(key, 3)
+    d = spec.d_model
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "wk": dense_init(ks[0], d, spec.d_ffn, dtype),
+        "wv": dense_init(ks[1], spec.d_ffn, d, dtype),
+        "wr": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def _shift(x, x_prev=None):
+    """Token shift: x_{t-1} (zeros / carried state at t=0)."""
+    if x_prev is None:
+        x_prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, xs):
+    """Data-dependent lerp producing the 5 mixed inputs [5][B,S,d]."""
+    xx = xs - x
+    xxx = x + xx * p["mu_x"]
+    r = jnp.tanh((xxx @ p["mix_w1"]).astype(jnp.float32))
+    rm = p["mix_w2"].shape[1]
+    b, s, _ = x.shape
+    r = r.reshape(b, s, 5, rm)
+    mix = jnp.einsum("bsfr,frd->fbsd", r, p["mix_w2"].astype(jnp.float32))
+    return [x + xx * (p["mu"][i] + mix[i].astype(x.dtype)) for i in range(5)]
+
+
+def _wkv_scan(r, k, v, logw, u, state0):
+    """Exact recurrence. r/k/v [B,S,H,N]; logw [B,S,H,N]; state [B,H,N,N]."""
+    def step(state, t):
+        rt, kt, vt, wt = r[:, t], k[:, t], v[:, t], jnp.exp(logw[:, t])
+        att = state + u[None, :, :, None] * kt[..., None] * vt[..., None, :]
+        y = jnp.einsum("bhn,bhnm->bhm", rt, att)
+        state = state * wt[..., None] + kt[..., None] * vt[..., None, :]
+        return state, y
+
+    state, ys = jax.lax.scan(step, state0, jnp.arange(r.shape[1]))
+    return ys.transpose(1, 0, 2, 3), state                  # [B,S,H,N]
+
+
+def _wkv_chunked(r, k, v, logw, u, state0, chunk):
+    """Same math, chunk-vectorized: L sequential steps instead of S."""
+    b, s, h, n = r.shape
+    l = min(chunk, s)
+    assert s % l == 0, (s, l)
+    nc = s // l
+    rc = r.reshape(b, nc, l, h, n)
+    kc = k.reshape(b, nc, l, h, n)
+    vc = v.reshape(b, nc, l, h, n)
+    lw = logw.reshape(b, nc, l, h, n).astype(jnp.float32)
+
+    # local pass: zero-init recurrence run for all chunks at once
+    def local_step(st, t):
+        rt, kt, vt, wt = rc[:, :, t], kc[:, :, t], vc[:, :, t], jnp.exp(lw[:, :, t])
+        att = st + u[None, None, :, :, None] * kt[..., None] * vt[..., None, :]
+        y = jnp.einsum("bchn,bchnm->bchm", rt, att)
+        st = st * wt[..., None] + kt[..., None] * vt[..., None, :]
+        return st, y
+
+    st0 = jnp.zeros((b, nc, h, n, n), jnp.float32)
+    s_loc, y_loc = jax.lax.scan(local_step, st0, jnp.arange(l))
+    y_loc = y_loc.transpose(1, 2, 0, 3, 4)                  # [B,nc,L,H,N]
+
+    # cross-chunk stitch: state entering chunk c
+    w_tot = jnp.exp(jnp.sum(lw, axis=2))                    # [B,nc,H,N]
+
+    def carry_fn(state, xs):
+        sl, wt = xs
+        new = state * wt[..., None] + sl
+        return new, state
+
+    _, states_in = jax.lax.scan(
+        carry_fn, state0,
+        (s_loc.transpose(1, 0, 2, 3, 4), w_tot.transpose(1, 0, 2, 3)))
+    states_in = states_in.transpose(1, 0, 2, 3, 4)          # [B,nc,H,N,N]
+    state_out = states_in[:, -1] * w_tot[:, -1][..., None] + s_loc[:, -1]
+
+    # inter-chunk contribution: y_t += (r_t * cumprod_excl(w)) · state_in
+    cum_excl = jnp.cumsum(lw, axis=2) - lw
+    r_eff = rc.astype(jnp.float32) * jnp.exp(cum_excl)
+    y_inter = jnp.einsum("bclhn,bchnm->bclhm", r_eff, states_in)
+    y = (y_loc + y_inter).reshape(b, s, h, n)
+    return y, state_out
+
+
+def apply_rwkv6_time(p, spec: RWKV6Spec, x, *, x_prev=None, wkv_state=None,
+                     impl: str = "chunked"):
+    """Time mix over x [B,S,d]. Returns (y, (last_x, wkv_state))."""
+    b, s, d = x.shape
+    h, n = spec.n_heads, spec.d_head
+    xw, xk, xv, xr, xg = _ddlerp(p, x, _shift(x, x_prev))
+    r = dense(p["wr"], xr).reshape(b, s, h, n)
+    k = dense(p["wk"], xk).reshape(b, s, h, n)
+    v = dense(p["wv"], xv).reshape(b, s, h, n)
+    g = dense(p["wg"], xg)
+    dw = jnp.tanh((xw @ p["decay_w1"]).astype(jnp.float32)) @ p["decay_w2"].astype(jnp.float32)
+    logw = -jnp.exp(p["w0"] + dw).reshape(b, s, h, n)       # log decay < 0
+
+    if wkv_state is None:
+        wkv_state = jnp.zeros((b, h, n, n), jnp.float32)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    if impl == "chunked" and s % min(spec.chunk, s) != 0:
+        impl = "scan"
+    if impl == "pallas":
+        from repro.kernels import ops
+        y, state = ops.wkv6(rf, kf, vf, logw, p["u"], wkv_state,
+                            block_s=min(spec.chunk, s))
+    elif impl == "chunked":
+        y, state = _wkv_chunked(rf, kf, vf, logw, p["u"], wkv_state, spec.chunk)
+    else:
+        y, state = _wkv_scan(rf, kf, vf, logw, p["u"], wkv_state)
+
+    # per-head group norm, then silu(g) gate and output proj
+    y = y.reshape(b, s, h, n)
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.mean((y - mu) ** 2, axis=-1, keepdims=True)
+    y = ((y - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(b, s, h * n)
+    y = y * p["ln_x"]["g"] + p["ln_x"]["b"]
+    y = y.astype(x.dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    return dense(p["wo"], y), (x[:, -1:], state)
+
+
+def apply_rwkv6_channel(p, x, *, x_prev=None):
+    """Channel mix. Returns (y, last_x)."""
+    xs = _shift(x, x_prev)
+    xk = x + (xs - x) * p["mu_k"]
+    xr = x + (xs - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(dense(p["wk"], xk).astype(jnp.float32))).astype(x.dtype)
+    y = jax.nn.sigmoid(dense(p["wr"], xr).astype(jnp.float32)).astype(x.dtype) * dense(p["wv"], k)
+    return y, x[:, -1:]

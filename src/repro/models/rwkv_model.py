@@ -1,0 +1,125 @@
+"""RWKV6 full model stack (the attention-free ``ssm`` family).
+
+Blocks = time-mix + channel-mix with pre-LayerNorms; ln0 after the
+embedding (RWKV convention). Serving state per layer: the [B,H,N,N] wkv
+state plus the two token-shift buffers — O(1) in sequence length, which
+is why rwkv6-3b runs the long_500k cell.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_norm, chunked_cross_entropy, embed_init, norm_init
+from repro.models.config import ModelConfig
+from repro.models.rwkv6 import (RWKV6Spec, apply_rwkv6_channel,
+                                apply_rwkv6_time, init_rwkv6_channel,
+                                init_rwkv6_time)
+
+
+def rwkv_spec(cfg: ModelConfig) -> RWKV6Spec:
+    return RWKV6Spec(d_model=cfg.d_model, n_heads=cfg.rwkv_heads,
+                     d_ffn=cfg.d_ff, mix_rank=cfg.mix_rank,
+                     decay_rank=cfg.decay_rank, chunk=cfg.rwkv_chunk)
+
+
+def _init_block(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    spec = rwkv_spec(cfg)
+    return {
+        "ln1": norm_init(cfg.d_model, cfg.pdt, kind="layer", bias=True),
+        "ln2": norm_init(cfg.d_model, cfg.pdt, kind="layer", bias=True),
+        "time": init_rwkv6_time(k1, spec, cfg.pdt),
+        "chan": init_rwkv6_channel(k2, spec, cfg.pdt),
+    }
+
+
+def init_rwkv(cfg: ModelConfig, key):
+    keys = jax.random.split(key, 3)
+    p = {
+        "embed": embed_init(keys[0], cfg.vocab, cfg.d_model, cfg.pdt),
+        "ln0": norm_init(cfg.d_model, cfg.pdt, kind="layer", bias=True),
+        "ln_f": norm_init(cfg.d_model, cfg.pdt, kind="layer", bias=True),
+        "blocks": jax.vmap(partial(_init_block, cfg))(
+            jax.random.split(keys[1], cfg.n_layers)),
+        "unembed": embed_init(keys[2], cfg.vocab, cfg.d_model, cfg.pdt),
+    }
+    return p
+
+
+def _block(cfg, p, h, *, states=None, impl="chunked"):
+    """One block; states = (x_time, wkv, x_chan) or None (zero init)."""
+    spec = rwkv_spec(cfg)
+    xt, wkv, xc = states if states is not None else (None, None, None)
+    a = apply_norm(p["ln1"], h, kind="layer", eps=cfg.norm_eps)
+    y, (last_xt, wkv) = apply_rwkv6_time(p["time"], spec, a, x_prev=xt,
+                                         wkv_state=wkv, impl=impl)
+    h = h + y
+    b = apply_norm(p["ln2"], h, kind="layer", eps=cfg.norm_eps)
+    y2, last_xc = apply_rwkv6_channel(p["chan"], b, x_prev=xc)
+    return h + y2, (last_xt, wkv, last_xc)
+
+
+def rwkv_hidden(params, cfg: ModelConfig, tokens):
+    h = apply_norm(params["ln0"],
+                   params["embed"]["emb"][tokens].astype(cfg.cdt),
+                   kind="layer", eps=cfg.norm_eps)
+    body = lambda hh, pp: (_block(cfg, pp, hh)[0], None)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["blocks"])
+    return apply_norm(params["ln_f"], h, kind="layer", eps=cfg.norm_eps)
+
+
+def rwkv_loss(params, cfg: ModelConfig, batch):
+    h = rwkv_hidden(params, cfg, batch["tokens"])
+    loss = chunked_cross_entropy(h, params["unembed"]["emb"],
+                                 batch["labels"], chunk=cfg.logits_chunk)
+    return loss, {"loss": loss}
+
+
+def rwkv_init_cache(cfg: ModelConfig, batch: int, s_max: int):
+    spec = rwkv_spec(cfg)
+    l = cfg.n_layers
+    return {
+        "x_time": jnp.zeros((l, batch, 1, cfg.d_model), cfg.cdt),
+        "wkv": jnp.zeros((l, batch, spec.n_heads, spec.d_head, spec.d_head),
+                         jnp.float32),
+        "x_chan": jnp.zeros((l, batch, 1, cfg.d_model), cfg.cdt),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _run_with_states(params, cfg, h, cache, impl):
+    def body(hh, xs):
+        pp, xt, wkv, xc = xs
+        hh, (nxt, nwkv, nxc) = _block(cfg, pp, hh,
+                                      states=(xt, wkv, xc), impl=impl)
+        return hh, (nxt, nwkv, nxc)
+    h, (xt, wkv, xc) = jax.lax.scan(
+        body, h, (params["blocks"], cache["x_time"], cache["wkv"],
+                  cache["x_chan"]))
+    cache = dict(cache, x_time=xt, wkv=wkv, x_chan=xc)
+    return h, cache
+
+
+def rwkv_prefill(params, cfg: ModelConfig, tokens, cache):
+    h = apply_norm(params["ln0"],
+                   params["embed"]["emb"][tokens].astype(cfg.cdt),
+                   kind="layer", eps=cfg.norm_eps)
+    h, cache = _run_with_states(params, cfg, h, cache, "chunked")
+    cache["pos"] = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
+    h = apply_norm(params["ln_f"], h, kind="layer", eps=cfg.norm_eps)
+    return (h[:, -1] @ params["unembed"]["emb"].T).astype(jnp.float32), cache
+
+
+def rwkv_decode_step(params, cfg: ModelConfig, cache, token):
+    h = apply_norm(params["ln0"],
+                   params["embed"]["emb"][token[:, None]].astype(cfg.cdt),
+                   kind="layer", eps=cfg.norm_eps)
+    h, cache = _run_with_states(params, cfg, h, cache, "scan")
+    cache["pos"] = cache["pos"] + 1
+    h = apply_norm(params["ln_f"], h, kind="layer", eps=cfg.norm_eps)
+    return (h[:, 0] @ params["unembed"]["emb"].T).astype(jnp.float32), cache

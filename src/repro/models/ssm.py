@@ -1,0 +1,225 @@
+"""Mamba2 (State Space Duality) mixer — Zamba2's backbone layer.
+
+Training/prefill uses the chunked SSD form: the sequence is split into
+chunks; within a chunk the output is an attention-like masked matmul
+(MXU-friendly), across chunks a [B, H, P, N] state is carried by a
+short ``lax.scan``. ``ssd_ref`` is the exact token-by-token recurrence
+used as the oracle and as the one-token decode step.
+
+State per layer (the whole serving cache for an SSM layer):
+  ssm_state  [B, H, P, N]        (P = head dim, N = d_state)
+  conv_state [B, d_conv-1, Dcv]  (causal depthwise conv tail)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, dense_init, norm_init
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Spec:
+    d_model: int
+    d_state: int = 64           # N
+    d_head: int = 64            # P
+    expand: int = 2
+    d_conv: int = 4
+    n_groups: int = 1
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.d_head
+
+    @property
+    def d_conv_ch(self) -> int:  # channels that pass through the conv
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def init_mamba2(key, spec: Mamba2Spec, dtype):
+    """Projections are SPLIT (z / x / BC / dt) rather than fused so each
+    can carry its own PartitionSpec: z and x are head-sharded over the
+    ``model`` axis, while the tiny group-shared B/C and per-head dt stay
+    replicated (Mamba2 TP per the SSD paper's n_groups constraint)."""
+    ks = jax.random.split(key, 6)
+    d_bc = 2 * spec.n_groups * spec.d_state
+    return {
+        "in_z": dense_init(ks[0], spec.d_model, spec.d_inner, dtype),
+        "in_x": dense_init(ks[1], spec.d_model, spec.d_inner, dtype),
+        "in_bc": dense_init(ks[2], spec.d_model, d_bc, dtype),
+        "in_dt": dense_init(ks[3], spec.d_model, spec.n_heads, dtype),
+        "conv_w_x": (jax.random.normal(ks[4], (spec.d_conv, spec.d_inner),
+                                       jnp.float32) * 0.2).astype(dtype),
+        "conv_b_x": jnp.zeros((spec.d_inner,), dtype),
+        "conv_w_bc": (jax.random.normal(ks[5], (spec.d_conv, d_bc),
+                                        jnp.float32) * 0.2).astype(dtype),
+        "conv_b_bc": jnp.zeros((d_bc,), dtype),
+        "A_log": jnp.zeros((spec.n_heads,), jnp.float32),   # A = -1 at init
+        "D": jnp.ones((spec.n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((spec.n_heads,), jnp.float32),
+        "norm": norm_init(spec.d_inner, dtype),
+        "out_proj": dense_init(ks[2], spec.d_inner, spec.d_model, dtype),
+    }
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv over [B, S, C]; optional [B, d_conv-1, C] tail."""
+    kw = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], kw - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    y = sum(xp[:, i:i + xbc.shape[1]] * conv_w[i] for i in range(kw)) + conv_b
+    new_state = xp[:, -(kw - 1):] if kw > 1 else pad
+    return jax.nn.silu(y.astype(jnp.float32)).astype(xbc.dtype), new_state
+
+
+def _project_in(p, x):
+    """x [B,S,d] -> (z, xc, bc, dt) via the four split projections."""
+    return (dense(p["in_z"], x), dense(p["in_x"], x),
+            dense(p["in_bc"], x), dense(p["in_dt"], x))
+
+
+def _gate_out(p, spec: Mamba2Spec, y, z):
+    """Gated RMSNorm (y * silu(z)) then output projection (in z's dtype)."""
+    b, s = y.shape[:2]
+    yf = y.reshape(b, s, spec.d_inner).astype(jnp.float32) * jax.nn.silu(
+        z.astype(jnp.float32))
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-5)
+    y = yf.astype(z.dtype) * p["norm"]["g"]
+    return dense(p["out_proj"], y)
+
+
+def apply_mamba2(p, spec: Mamba2Spec, x, *, impl: str = "chunked"):
+    """x [B, S, d] -> [B, S, d] (train / prefill)."""
+    y, _ = apply_mamba2_with_state(p, spec, x, impl=impl)
+    return y
+
+
+def apply_mamba2_with_state(p, spec: Mamba2Spec, x, *, impl: str = "chunked"):
+    """Forward returning (y, (ssm_state, conv_states)) for prefill."""
+    b, s, _ = x.shape
+    h, pp, n, g = spec.n_heads, spec.d_head, spec.d_state, spec.n_groups
+    z, xc, bc, dt = _project_in(p, x)
+    xc, conv_x = _causal_conv(xc, p["conv_w_x"], p["conv_b_x"])
+    bc, conv_bc = _causal_conv(bc, p["conv_w_bc"], p["conv_b_bc"])
+    conv_state = (conv_x, conv_bc)
+    xs = xc.reshape(b, s, h, pp)
+    bm = bc[..., :g * n].reshape(b, s, g, n)
+    cm = bc[..., g * n:].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # [B,S,H]
+    a = -jnp.exp(p["A_log"])                                         # [H]
+
+    if impl == "chunked" and s % min(spec.chunk, s) == 0:
+        y, state = _ssd_chunked(xs, bm, cm, dt, a, p["D"], spec.chunk, g, h)
+    else:
+        y, state = _ssd_scan(xs, bm, cm, dt, a, p["D"], g, h)
+    return _gate_out(p, spec, y, z), (state, conv_state)
+
+
+def _expand_groups(bm, g, h):
+    """[B,S,G,N] -> [B,S,H,N] by repeating each group across its heads."""
+    return jnp.repeat(bm, h // g, axis=2)
+
+
+def _ssd_scan(xs, bm, cm, dt, a, d_skip, g, h, state0=None):
+    """Exact recurrence (oracle / decode):
+    state_t = state_{t-1} * exp(dt_t A) + dt_t x_t ⊗ B_t;  y_t = C_t·state_t + D x_t
+    """
+    b, s, _, pp = xs.shape
+    n = bm.shape[-1]
+    bmh = _expand_groups(bm, g, h).astype(jnp.float32)
+    cmh = _expand_groups(cm, g, h).astype(jnp.float32)
+    xf = xs.astype(jnp.float32)
+    if state0 is None:
+        state0 = jnp.zeros((b, h, pp, n), jnp.float32)
+
+    def step(state, t):
+        xt, bt, ct, dtt = xf[:, t], bmh[:, t], cmh[:, t], dt[:, t]
+        decay = jnp.exp(dtt * a)[:, :, None, None]
+        state = state * decay + jnp.einsum(
+            "bhp,bhn,bh->bhpn", xt, bt, dtt)
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct) + d_skip[:, None] * xt
+        return state, y
+
+    state, ys = jax.lax.scan(step, state0, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3), state                 # [B,S,H,P]
+
+
+def _ssd_chunked(xs, bm, cm, dt, a, d_skip, chunk, g, h):
+    """Chunked SSD: intra-chunk quadratic term + inter-chunk state scan."""
+    b, s, _, pp = xs.shape
+    n = bm.shape[-1]
+    l = min(chunk, s)
+    assert s % l == 0, (s, l)
+    nc = s // l
+    bmh = _expand_groups(bm, g, h).astype(jnp.float32).reshape(b, nc, l, h, n)
+    cmh = _expand_groups(cm, g, h).astype(jnp.float32).reshape(b, nc, l, h, n)
+    xf = xs.astype(jnp.float32).reshape(b, nc, l, h, pp)
+    dtc = dt.reshape(b, nc, l, h)
+    da = dtc * a                                            # [B,nc,L,H]
+    cum = jnp.cumsum(da, axis=2)                            # inclusive
+
+    # intra-chunk: y[t] += sum_{s<=t} C_t·B_s exp(cum_t - cum_s) dt_s x_s
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # [B,nc,T,S,H]
+    tri = jnp.tril(jnp.ones((l, l), bool))
+    lmat = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcthn,bcshn->bctsh", cmh, bmh)
+    y_intra = jnp.einsum("bctsh,bcsh,bcshp->bcthp", cb * lmat, dtc, xf)
+
+    # chunk-boundary states
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)            # [B,nc,L,H]
+    chunk_states = jnp.einsum("bcsh,bcsh,bcshn,bcshp->bchpn",
+                              decay_out, dtc, bmh, xf)
+    chunk_decay = jnp.exp(cum[:, :, -1])                    # [B,nc,H]
+
+    def carry_fn(state, xs_):
+        cs, cd = xs_
+        new = state * cd[:, :, None, None] + cs
+        return new, state                                   # emit state BEFORE chunk
+
+    _, states_in = jax.lax.scan(
+        carry_fn, jnp.zeros((b, h, pp, n), jnp.float32),
+        (chunk_states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    states_in = states_in.transpose(1, 0, 2, 3, 4)          # [B,nc,H,P,N]
+
+    # inter-chunk: y[t] += C_t · (exp(cum_t) * state_in)
+    y_inter = jnp.einsum("bcthn,bcth,bchpn->bcthp",
+                         cmh, jnp.exp(cum), states_in)
+    y = y_intra + y_inter + d_skip[:, None] * xf
+    state_out = (states_in[:, -1] * chunk_decay[:, -1][..., None, None]
+                 + chunk_states[:, -1])
+    return y.reshape(b, s, h, pp), state_out
+
+
+def decode_mamba2(p, spec: Mamba2Spec, x1, ssm_state, conv_state):
+    """One-token decode. x1 [B,1,d]; returns (y [B,1,d], new states)."""
+    z, xc, bc, dt = _project_in(p, x1)
+    conv_x, conv_bc = conv_state
+    xc, conv_x = _causal_conv(xc, p["conv_w_x"], p["conv_b_x"], conv_x)
+    bc, conv_bc = _causal_conv(bc, p["conv_w_bc"], p["conv_b_bc"], conv_bc)
+    b = x1.shape[0]
+    h, pp, n, g = spec.n_heads, spec.d_head, spec.d_state, spec.n_groups
+    xs = xc.reshape(b, 1, h, pp)
+    bm = bc[..., :g * n].reshape(b, 1, g, n)
+    cm = bc[..., g * n:].reshape(b, 1, g, n)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    y, ssm_state = _ssd_scan(xs, bm, cm, dtf, a, p["D"], g, h, state0=ssm_state)
+    return _gate_out(p, spec, y, z), ssm_state, (conv_x, conv_bc)
+
+
+def init_mamba2_state(spec: Mamba2Spec, batch: int, dtype=jnp.float32):
+    return (jnp.zeros((batch, spec.n_heads, spec.d_head, spec.d_state),
+                      jnp.float32),
+            (jnp.zeros((batch, spec.d_conv - 1, spec.d_inner), dtype),
+             jnp.zeros((batch, spec.d_conv - 1, 2 * spec.n_groups * spec.d_state),
+                       dtype)))

@@ -1,0 +1,312 @@
+"""Decoder-only LM assembly (dense / MoE / VLM families).
+
+Layer params carry a leading [L] axis (built with ``jax.vmap`` over
+per-layer PRNG keys) and the forward pass is one ``lax.scan`` over
+layers — O(1) HLO size in depth. ``cfg.first_dense`` leading layers
+(DeepSeek-V2's dense layer 0) form a second, separately-scanned stack.
+
+Paths:
+  lm_loss        train: tokens -> mean next-token CE (chunked over S and
+                 over the vocab-sharded logits; no [B,S,V] materialization)
+  lm_prefill     tokens -> (last-position logits, decode cache)
+  lm_decode_step one token against the cache (GQA / ring-SWA / MLA-absorbed)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models.common import (apply_norm, chunked_cross_entropy, dense,
+                                 embed_init, norm_init)
+from repro.models.config import ModelConfig
+from repro.models.mlp import apply_mlp, init_mlp
+from repro.models.moe import MoESpec, apply_moe, init_moe, moe_capacity
+
+
+# --------------------------------------------------------------------------
+# specs
+# --------------------------------------------------------------------------
+def attn_spec(cfg: ModelConfig) -> attn.AttnSpec:
+    return attn.AttnSpec(
+        d_model=cfg.d_model, n_q=cfg.n_heads, n_kv=cfg.n_kv,
+        d_head=cfg.head_dim, causal=True, window=cfg.window,
+        rope_frac=cfg.rope_frac, rope_theta=cfg.rope_theta,
+        qkv_bias=cfg.qkv_bias, impl=cfg.impl,
+        block_q=cfg.block_q, block_k=cfg.block_k)
+
+
+def mla_spec(cfg: ModelConfig) -> mla_mod.MLASpec:
+    return mla_mod.MLASpec(
+        d_model=cfg.d_model, n_heads=cfg.n_heads,
+        q_lora_rank=cfg.q_lora_rank, kv_lora_rank=cfg.kv_lora_rank,
+        d_nope=cfg.mla_d_nope, d_rope=cfg.mla_d_rope, d_v=cfg.mla_d_v,
+        rope_theta=cfg.rope_theta, impl=cfg.impl,
+        block_q=cfg.block_q, block_k=cfg.block_k)
+
+
+def moe_spec(cfg: ModelConfig) -> MoESpec:
+    return MoESpec(
+        d_model=cfg.d_model, n_experts=cfg.n_experts, top_k=cfg.top_k,
+        d_ff_expert=cfg.d_ff_expert, n_shared=cfg.n_shared_experts,
+        capacity_factor=cfg.capacity_factor, norm_topk=cfg.norm_topk,
+        routed_scale=cfg.routed_scale)
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+def _init_block(cfg: ModelConfig, moe_layer: bool, key):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": norm_init(cfg.d_model, cfg.pdt, kind=cfg.norm,
+                          bias=cfg.norm_bias)}
+    if cfg.attn_kind == "mla":
+        p["attn"] = mla_mod.init_mla(k1, mla_spec(cfg), cfg.pdt)
+    else:
+        p["attn"] = attn.init_attention(k1, attn_spec(cfg), cfg.pdt)
+    if not cfg.parallel_block:
+        p["ln2"] = norm_init(cfg.d_model, cfg.pdt, kind=cfg.norm,
+                             bias=cfg.norm_bias)
+    if moe_layer:
+        p["moe"] = init_moe(k2, moe_spec(cfg), cfg.pdt)
+    else:
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.pdt,
+                            kind=cfg.mlp_kind)
+    return p
+
+
+def _apply_block(cfg: ModelConfig, moe_layer: bool, p, h, positions):
+    from repro.parallel.act_sharding import maybe_gather_hidden
+    a = maybe_gather_hidden(
+        apply_norm(p["ln1"], h, kind=cfg.norm, eps=cfg.norm_eps))
+    if cfg.attn_kind == "mla":
+        attn_out = mla_mod.apply_mla(p["attn"], mla_spec(cfg), a, positions)
+    else:
+        attn_out = attn.apply_attention(p["attn"], attn_spec(cfg), a, positions)
+
+    def ffn(x):
+        if moe_layer:
+            return apply_moe(p["moe"], x, moe_spec(cfg))
+        return apply_mlp(p["mlp"], x, kind=cfg.mlp_kind)
+
+    from repro.parallel.act_sharding import maybe_shard_hidden
+    if cfg.parallel_block:                       # cohere: shared norm input
+        return maybe_shard_hidden(h + attn_out + ffn(a))
+    h = h + attn_out
+    x2 = maybe_gather_hidden(
+        apply_norm(p["ln2"], h, kind=cfg.norm, eps=cfg.norm_eps))
+    h = h + ffn(x2)
+    return maybe_shard_hidden(h)
+
+
+def _prefill_block(cfg, moe_layer, p, h, positions):
+    """Like _apply_block but returns the KV-cache entry for this layer."""
+    a = apply_norm(p["ln1"], h, kind=cfg.norm, eps=cfg.norm_eps)
+    if cfg.attn_kind == "mla":
+        attn_out, kv = mla_mod.apply_mla(p["attn"], mla_spec(cfg), a,
+                                         positions, return_cache=True)
+    else:
+        attn_out, kv = attn.apply_attention(p["attn"], attn_spec(cfg), a,
+                                            positions, return_kv=True)
+    if cfg.parallel_block:
+        if moe_layer:
+            f = apply_moe(p["moe"], a, moe_spec(cfg))
+        else:
+            f = apply_mlp(p["mlp"], a, kind=cfg.mlp_kind)
+        return h + attn_out + f, kv
+    h = h + attn_out
+    x2 = apply_norm(p["ln2"], h, kind=cfg.norm, eps=cfg.norm_eps)
+    if moe_layer:
+        f = apply_moe(p["moe"], x2, moe_spec(cfg))
+    else:
+        f = apply_mlp(p["mlp"], x2, kind=cfg.mlp_kind)
+    return h + f, kv
+
+
+def _decode_block(cfg, moe_layer, p, h1, cache, pos):
+    """One-token decode through a block; cache is this layer's slice."""
+    a = apply_norm(p["ln1"], h1, kind=cfg.norm, eps=cfg.norm_eps)
+    if cfg.attn_kind == "mla":
+        attn_out, cc, cpe = mla_mod.decode_mla(
+            p["attn"], mla_spec(cfg), a, cache[0], cache[1], pos)
+        new_cache = (cc, cpe)
+    else:
+        attn_out, ck, cv = attn.decode_self_attention(
+            p["attn"], attn_spec(cfg), a, cache[0], cache[1], pos)
+        new_cache = (ck, cv)
+
+    def ffn(x):
+        if moe_layer:
+            return apply_moe(p["moe"], x, moe_spec(cfg))
+        return apply_mlp(p["mlp"], x, kind=cfg.mlp_kind)
+
+    if cfg.parallel_block:
+        return h1 + attn_out + ffn(a), new_cache
+    h1 = h1 + attn_out
+    return h1 + ffn(apply_norm(p["ln2"], h1, kind=cfg.norm,
+                               eps=cfg.norm_eps)), new_cache
+
+
+# --------------------------------------------------------------------------
+# model init
+# --------------------------------------------------------------------------
+def init_decoder(cfg: ModelConfig, key):
+    keys = jax.random.split(key, 4)
+    n_dense = cfg.first_dense if cfg.moe else 0
+    n_main = cfg.n_layers - n_dense
+    p = {"embed": embed_init(keys[0], cfg.vocab, cfg.d_model, cfg.pdt),
+         "ln_f": norm_init(cfg.d_model, cfg.pdt, kind=cfg.norm,
+                           bias=cfg.norm_bias)}
+    main_keys = jax.random.split(keys[1], n_main)
+    p["blocks"] = jax.vmap(partial(_init_block, cfg, cfg.moe))(main_keys)
+    if n_dense:
+        dkeys = jax.random.split(keys[2], n_dense)
+        p["dense_blocks"] = jax.vmap(partial(_init_block, cfg, False))(dkeys)
+    if not cfg.tie_embeddings:
+        p["unembed"] = embed_init(keys[3], cfg.vocab, cfg.d_model, cfg.pdt)
+    return p
+
+
+def _out_emb(cfg, params):
+    return (params["embed"] if cfg.tie_embeddings else params["unembed"])["emb"]
+
+
+def _embed_tokens(cfg, params, tokens):
+    return params["embed"]["emb"][tokens].astype(cfg.cdt)
+
+
+def _maybe_remat(cfg, fn):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _stack_scan(cfg, stack, h, positions, moe_layer):
+    body = _maybe_remat(cfg, lambda hh, pp: _apply_block(
+        cfg, moe_layer, pp, hh, positions))
+    return jax.lax.scan(lambda hh, pp: (body(hh, pp), None), h, stack)[0]
+
+
+# --------------------------------------------------------------------------
+# train loss
+# --------------------------------------------------------------------------
+def decoder_hidden(params, cfg: ModelConfig, tokens, frontend=None):
+    """tokens [B,S] -> final hidden [B, S(+patches), d]."""
+    h = _embed_tokens(cfg, params, tokens)
+    if cfg.family == "vlm":
+        assert frontend is not None, "vlm needs patch embeddings"
+        h = jnp.concatenate([frontend.astype(cfg.cdt), h], axis=1)
+    s_tot = h.shape[1]
+    positions = jnp.arange(s_tot)
+    if "dense_blocks" in params:
+        h = _stack_scan(cfg, params["dense_blocks"], h, positions, False)
+    h = _stack_scan(cfg, params["blocks"], h, positions, cfg.moe)
+    return apply_norm(params["ln_f"], h, kind=cfg.norm, eps=cfg.norm_eps)
+
+
+def decoder_loss(params, cfg: ModelConfig, batch):
+    """batch: tokens [B,S], labels [B,S] (-100 masked), optional frontend."""
+    h = decoder_hidden(params, cfg, batch["tokens"], batch.get("frontend"))
+    labels = batch["labels"]
+    if cfg.family == "vlm":                       # patch positions: no loss
+        pad = jnp.full(labels.shape[:1] + (cfg.n_patches,), -100, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    loss = chunked_cross_entropy(h, _out_emb(cfg, params), labels,
+                                 chunk=cfg.logits_chunk,
+                                 logit_scale=cfg.logit_scale)
+    return loss, {"loss": loss}
+
+
+# --------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# --------------------------------------------------------------------------
+def decoder_init_cache(cfg: ModelConfig, batch: int, s_max: int):
+    n_dense = cfg.first_dense if cfg.moe else 0
+    n_main = cfg.n_layers - n_dense
+    if cfg.attn_kind == "mla":
+        def mk(n):
+            return (jnp.zeros((n, batch, s_max, cfg.kv_lora_rank), cfg.cdt),
+                    jnp.zeros((n, batch, s_max, cfg.mla_d_rope), cfg.cdt))
+    else:
+        w = cfg.window if cfg.window and cfg.window < s_max else s_max
+        def mk(n):
+            return (jnp.zeros((n, batch, cfg.n_kv, w, cfg.head_dim), cfg.cdt),
+                    jnp.zeros((n, batch, cfg.n_kv, w, cfg.head_dim), cfg.cdt))
+    cache = {"main": mk(n_main), "pos": jnp.zeros((batch,), jnp.int32)}
+    if n_dense:
+        cache["dense"] = mk(n_dense)
+    return cache
+
+
+def _write_prefill(cfg, cache_pair, kv, s):
+    """Write stacked prefill KV [L,...] into the cache at positions [0,s)."""
+    ck, cv = cache_pair
+    k, v = kv
+    if cfg.attn_kind == "mla":
+        s_max = ck.shape[2]
+    else:
+        s_max = ck.shape[3]
+    if s_max < s:            # ring buffer (SWA): keep the last s_max slots
+        sl = jnp.arange(s - s_max, s) % s_max
+        if cfg.attn_kind == "mla":
+            ck = ck.at[:, :, sl].set(k[:, :, -s_max:])
+            cv = cv.at[:, :, sl].set(v[:, :, -s_max:])
+        else:
+            ck = ck.at[:, :, :, sl].set(k[:, :, :, -s_max:])
+            cv = cv.at[:, :, :, sl].set(v[:, :, :, -s_max:])
+    else:
+        if cfg.attn_kind == "mla":
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, k, 0, axis=2)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, v, 0, axis=2)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, k, 0, axis=3)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, v, 0, axis=3)
+    return ck, cv
+
+
+def decoder_prefill(params, cfg: ModelConfig, tokens, cache, frontend=None):
+    """Run the prompt; fill the cache; return last-position logits."""
+    h = _embed_tokens(cfg, params, tokens)
+    if cfg.family == "vlm":
+        h = jnp.concatenate([frontend.astype(cfg.cdt), h], axis=1)
+    s_tot = h.shape[1]
+    positions = jnp.arange(s_tot)
+
+    def run(stack, h, moe_layer):
+        body = _maybe_remat(cfg, lambda hh, pp: _prefill_block(
+            cfg, moe_layer, pp, hh, positions))
+        return jax.lax.scan(body, h, stack)
+
+    if "dense_blocks" in params:
+        h, kv = run(params["dense_blocks"], h, False)
+        cache["dense"] = _write_prefill(cfg, cache["dense"], kv, s_tot)
+    h, kv = run(params["blocks"], h, cfg.moe)
+    cache["main"] = _write_prefill(cfg, cache["main"], kv, s_tot)
+    cache["pos"] = jnp.full((tokens.shape[0],), s_tot, jnp.int32)
+    h = apply_norm(params["ln_f"], h, kind=cfg.norm, eps=cfg.norm_eps)
+    logits = (h[:, -1] @ _out_emb(cfg, params).T).astype(jnp.float32)
+    return logits * cfg.logit_scale, cache
+
+
+def decoder_decode_step(params, cfg: ModelConfig, cache, token):
+    """token [B] int32 -> (logits [B,V] f32, cache). pos = cache['pos']."""
+    pos = cache["pos"]
+    h = _embed_tokens(cfg, params, token[:, None])
+
+    def run(stack, cache_pair, h, moe_layer):
+        def body(hh, xs):
+            pp, ck, cv = xs
+            hh, (nk, nv) = _decode_block(cfg, moe_layer, pp, hh, (ck, cv), pos)
+            return hh, (nk, nv)
+        h, (nk, nv) = jax.lax.scan(body, h, (stack,) + tuple(cache_pair))
+        return h, (nk, nv)
+
+    if "dense_blocks" in params:
+        h, cache["dense"] = run(params["dense_blocks"], cache["dense"], h, False)
+    h, cache["main"] = run(params["blocks"], cache["main"], h, cfg.moe)
+    cache["pos"] = pos + 1
+    h = apply_norm(params["ln_f"], h, kind=cfg.norm, eps=cfg.norm_eps)
+    logits = (h[:, 0] @ _out_emb(cfg, params).T).astype(jnp.float32)
+    return logits * cfg.logit_scale, cache

@@ -1,0 +1,279 @@
+"""Zamba2-style hybrid stack: Mamba2 backbone + one SHARED attention
+block applied between groups of Mamba2 layers (arXiv:2411.15242).
+
+Layer layout (cfg.n_layers = G*(1+M) + T):
+  [shared-attn, M x mamba2] x G groups, then T trailing mamba2 layers.
+
+The shared block's weights are a single parameter set; each of its G
+applications adds a per-application LoRA delta on the q/k/v projections
+(Zamba2's block specialization). Its input is concat(h, h0) (2*d wide,
+h0 = the embedding output), attention + MLP run at 2*d, and the output
+is projected back to d and added to the residual stream.
+
+Serving state: G KV caches (one per shared-block application — weights
+are shared, caches are not) + per-mamba-layer SSM/conv states.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import (apply_norm, chunked_cross_entropy, dense,
+                                 dense_init, embed_init, norm_init)
+from repro.models.config import ModelConfig
+from repro.models.mlp import apply_mlp, init_mlp
+from repro.models.ssm import (Mamba2Spec, apply_mamba2,
+                              apply_mamba2_with_state, decode_mamba2,
+                              init_mamba2, init_mamba2_state)
+
+
+def mamba_spec(cfg: ModelConfig) -> Mamba2Spec:
+    return Mamba2Spec(d_model=cfg.d_model, d_state=cfg.ssm_state,
+                      d_head=cfg.ssm_head, chunk=cfg.ssm_chunk)
+
+
+def shared_attn_spec(cfg: ModelConfig) -> attn.AttnSpec:
+    d2 = 2 * cfg.d_model
+    return attn.AttnSpec(
+        d_model=d2, n_q=cfg.n_heads, n_kv=cfg.n_kv, d_head=d2 // cfg.n_heads,
+        causal=True, rope_theta=cfg.rope_theta, impl=cfg.impl,
+        block_q=cfg.block_q, block_k=cfg.block_k)
+
+
+def _init_shared(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 3)
+    d2 = 2 * cfg.d_model
+    return {
+        "ln1": norm_init(d2, cfg.pdt),
+        "attn": attn.init_attention(ks[0], shared_attn_spec(cfg), cfg.pdt),
+        "ln2": norm_init(d2, cfg.pdt),
+        "mlp": init_mlp(ks[1], d2, cfg.d_ff, cfg.pdt),
+        "out": dense_init(ks[2], d2, cfg.d_model, cfg.pdt),
+    }
+
+
+def _init_lora(cfg: ModelConfig, key):
+    d2 = 2 * cfg.d_model
+    spec = shared_attn_spec(cfg)
+    r = cfg.lora_rank
+    ks = jax.random.split(key, 6)
+    mk = lambda ka, kb, dout: {
+        "a": (jax.random.normal(ka, (d2, r), jnp.float32) * 0.01).astype(cfg.pdt),
+        "b": jnp.zeros((r, dout), cfg.pdt)}
+    return {
+        "q": mk(ks[0], ks[1], spec.n_q * spec.d_head),
+        "k": mk(ks[2], ks[3], spec.n_kv * spec.d_head),
+        "v": mk(ks[4], ks[5], spec.n_kv * spec.d_head),
+    }
+
+
+def _init_mamba_block(cfg: ModelConfig, key):
+    return {"ln": norm_init(cfg.d_model, cfg.pdt),
+            "mix": init_mamba2(key, mamba_spec(cfg), cfg.pdt)}
+
+
+def init_zamba(cfg: ModelConfig, key):
+    g, m, t = cfg.n_attn_groups, cfg.mamba_per_group, cfg.trailing_mamba
+    assert cfg.n_layers == g * (1 + m) + t, (cfg.n_layers, g, m, t)
+    keys = jax.random.split(key, 6)
+    gm_keys = jax.random.split(keys[1], g * m).reshape(g, m, 2)
+    p = {
+        "embed": embed_init(keys[0], cfg.vocab, cfg.d_model, cfg.pdt),
+        "shared": _init_shared(cfg, keys[2]),
+        "lora": jax.vmap(partial(_init_lora, cfg))(jax.random.split(keys[3], g)),
+        "mamba": jax.vmap(jax.vmap(partial(_init_mamba_block, cfg)))(gm_keys),
+        "ln_f": norm_init(cfg.d_model, cfg.pdt),
+        "unembed": embed_init(keys[5], cfg.vocab, cfg.d_model, cfg.pdt),
+    }
+    if t:
+        p["trailing"] = jax.vmap(partial(_init_mamba_block, cfg))(
+            jax.random.split(keys[4], t))
+    return p
+
+
+def _shared_qkv(p, lora, spec, a):
+    """q/k/v projections with the per-application LoRA delta."""
+    def proj(w, lr):
+        return dense(w, a) + (a @ lr["a"]) @ lr["b"]
+    q = proj(p["attn"]["wq"], lora["q"])
+    k = proj(p["attn"]["wk"], lora["k"])
+    v = proj(p["attn"]["wv"], lora["v"])
+    b, s, _ = a.shape
+    shp = lambda x, n: x.reshape(b, s, n, spec.d_head).transpose(0, 2, 1, 3)
+    return shp(q, spec.n_q), shp(k, spec.n_kv), shp(v, spec.n_kv)
+
+
+def _apply_shared(cfg, p, lora, h, h0, positions, *, cache=None, pos=None):
+    """The shared attention block. cache=(ck, cv) enables decode mode."""
+    from repro.models.common import apply_rope
+    from repro.parallel.act_sharding import maybe_gather_hidden
+    spec = shared_attn_spec(cfg)
+    xin = jnp.concatenate([h, h0], axis=-1)
+    a = maybe_gather_hidden(
+        apply_norm(p["ln1"], xin, kind=cfg.norm, eps=cfg.norm_eps))
+    q, k, v = _shared_qkv(p, lora, spec, a)
+    if cache is None:
+        pos_b = positions[None]
+        q = apply_rope(q, pos_b[:, None, :], theta=spec.rope_theta)
+        k = apply_rope(k, pos_b[:, None, :], theta=spec.rope_theta)
+        o = attn.attend(q, k, v, causal=True, impl=spec.impl,
+                        block_q=spec.block_q, block_k=spec.block_k)
+        new_kv = (k, v)
+    else:
+        ck, cv = cache
+        b = h.shape[0]
+        q = apply_rope(q, pos[:, None, None], theta=spec.rope_theta)
+        k = apply_rope(k, pos[:, None, None], theta=spec.rope_theta)
+        bi = jnp.arange(b)
+        ck = ck.at[bi, :, pos].set(k[:, :, 0])
+        cv = cv.at[bi, :, pos].set(v[:, :, 0])
+        s_max = ck.shape[2]
+        sc = attn._grouped_scores(q, ck) / (spec.d_head ** 0.5)  # [B,Hkv,G,1,S]
+        valid = jnp.arange(s_max)[None, :] < (pos + 1)[:, None]
+        sc = jnp.where(valid[:, None, None, None], sc, -1e30)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", jax.nn.softmax(sc, -1),
+                       cv.astype(jnp.float32))
+        o = o.reshape(b, spec.n_q, 1, spec.d_head).astype(h.dtype)
+        new_kv = (ck, cv)
+    b, s = h.shape[:2]
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, spec.n_q * spec.d_head)
+    xin = xin + dense(p["attn"]["wo"], o)
+    x2 = apply_norm(p["ln2"], xin, kind=cfg.norm, eps=cfg.norm_eps)
+    xin = xin + apply_mlp(p["mlp"], x2)
+    return h + dense(p["out"], xin), new_kv
+
+
+def _apply_mamba_block(cfg, p, h):
+    from repro.parallel.act_sharding import maybe_gather_hidden, maybe_shard_hidden
+    a = maybe_gather_hidden(
+        apply_norm(p["ln"], h, kind=cfg.norm, eps=cfg.norm_eps))
+    return maybe_shard_hidden(h + apply_mamba2(p["mix"], mamba_spec(cfg), a))
+
+
+def zamba_hidden(params, cfg: ModelConfig, tokens):
+    h = params["embed"]["emb"][tokens].astype(cfg.cdt)
+    h0 = h
+    positions = jnp.arange(tokens.shape[1])
+
+    def group(h, xs):
+        lora, mamba_stack = xs
+        h, _ = _apply_shared(cfg, params["shared"], lora, h, h0, positions)
+        inner = lambda hh, pp: (_apply_mamba_block(cfg, pp, hh), None)
+        if cfg.remat:
+            inner = jax.checkpoint(inner)
+        h, _ = jax.lax.scan(inner, h, mamba_stack)
+        return h, None
+
+    grp = jax.checkpoint(group) if cfg.remat else group
+    h, _ = jax.lax.scan(grp, h, (params["lora"], params["mamba"]))
+    if "trailing" in params:
+        inner = lambda hh, pp: (_apply_mamba_block(cfg, pp, hh), None)
+        if cfg.remat:
+            inner = jax.checkpoint(inner)
+        h, _ = jax.lax.scan(inner, h, params["trailing"])
+    return apply_norm(params["ln_f"], h, kind=cfg.norm, eps=cfg.norm_eps)
+
+
+def zamba_loss(params, cfg: ModelConfig, batch):
+    h = zamba_hidden(params, cfg, batch["tokens"])
+    loss = chunked_cross_entropy(h, params["unembed"]["emb"],
+                                 batch["labels"], chunk=cfg.logits_chunk)
+    return loss, {"loss": loss}
+
+
+def zamba_init_cache(cfg: ModelConfig, batch: int, s_max: int):
+    g, m, t = cfg.n_attn_groups, cfg.mamba_per_group, cfg.trailing_mamba
+    spec = mamba_spec(cfg)
+    aspec = shared_attn_spec(cfg)
+    mk_ssm = lambda n: (
+        jnp.zeros((n, batch, spec.n_heads, spec.d_head, spec.d_state),
+                  jnp.float32),
+        (jnp.zeros((n, batch, spec.d_conv - 1, spec.d_inner), cfg.cdt),
+         jnp.zeros((n, batch, spec.d_conv - 1,
+                    2 * spec.n_groups * spec.d_state), cfg.cdt)))
+    cache = {
+        "kv": (jnp.zeros((g, batch, aspec.n_kv, s_max, aspec.d_head), cfg.cdt),
+               jnp.zeros((g, batch, aspec.n_kv, s_max, aspec.d_head), cfg.cdt)),
+        "ssm": jax.tree.map(lambda x: x.reshape((g, m) + x.shape[1:]),
+                            mk_ssm(g * m)),
+        "h0": jnp.zeros((batch, 1, cfg.d_model), cfg.cdt),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+    if t:
+        cache["trail_ssm"] = mk_ssm(t)
+    return cache
+
+
+def zamba_prefill(params, cfg: ModelConfig, tokens, cache):
+    """Prefill: run the full hidden pass capturing KV + final SSM states."""
+    h = params["embed"]["emb"][tokens].astype(cfg.cdt)
+    h0 = h
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+
+    def mamba_fwd(hh, pp):
+        a = apply_norm(pp["ln"], hh, kind=cfg.norm, eps=cfg.norm_eps)
+        y, st = apply_mamba2_with_state(pp["mix"], mamba_spec(cfg), a)
+        return hh + y, st
+
+    def group(h, xs):
+        lora, mamba_stack, ck, cv = xs
+        h, (k, v) = _apply_shared(cfg, params["shared"], lora, h, h0, positions)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k, 0, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v, 0, axis=2)
+        h, ssm_states = jax.lax.scan(mamba_fwd, h, mamba_stack)
+        return h, (ck, cv, ssm_states)
+
+    h, (ck, cv, ssm) = jax.lax.scan(
+        group, h, (params["lora"], params["mamba"]) + tuple(cache["kv"]))
+    cache["kv"] = (ck, cv)
+    cache["ssm"] = ssm
+    if "trailing" in params:
+        h, trail = jax.lax.scan(mamba_fwd, h, params["trailing"])
+        cache["trail_ssm"] = trail
+    cache["h0"] = h0[:, -1:]
+    cache["pos"] = jnp.full((b,), s, jnp.int32)
+    h = apply_norm(params["ln_f"], h, kind=cfg.norm, eps=cfg.norm_eps)
+    return (h[:, -1] @ params["unembed"]["emb"].T).astype(jnp.float32), cache
+
+
+def zamba_decode_step(params, cfg: ModelConfig, cache, token):
+    pos = cache["pos"]
+    h = params["embed"]["emb"][token[:, None]].astype(cfg.cdt)
+    h0 = h  # current token's embedding feeds the shared block
+
+    def group(h, xs):
+        lora, mamba_stack, ck, cv, sst, cst = xs
+        h, (ck, cv) = _apply_shared(cfg, params["shared"], lora, h, h0,
+                                    None, cache=(ck, cv), pos=pos)
+
+        def inner(hh, xs2):
+            pp, s1, c1 = xs2
+            a = apply_norm(pp["ln"], hh, kind=cfg.norm, eps=cfg.norm_eps)
+            y, s1, c1 = decode_mamba2(pp["mix"], mamba_spec(cfg), a, s1, c1)
+            return hh + y, (s1, c1)
+
+        h, (sst, cst) = jax.lax.scan(inner, h, (mamba_stack, sst, cst))
+        return h, (ck, cv, sst, cst)
+
+    h, (ck, cv, sst, cst) = jax.lax.scan(
+        group, h,
+        (params["lora"], params["mamba"]) + tuple(cache["kv"])
+        + tuple(cache["ssm"]))
+    cache["kv"] = (ck, cv)
+    cache["ssm"] = (sst, cst)
+    if "trailing" in params:
+        def inner2(hh, xs2):
+            pp, s1, c1 = xs2
+            a = apply_norm(pp["ln"], hh, kind=cfg.norm, eps=cfg.norm_eps)
+            y, s1, c1 = decode_mamba2(pp["mix"], mamba_spec(cfg), a, s1, c1)
+            return hh + y, (s1, c1)
+        h, trail = jax.lax.scan(inner2, h,
+                                (params["trailing"],) + tuple(cache["trail_ssm"]))
+        cache["trail_ssm"] = trail
+    cache["pos"] = pos + 1
+    h = apply_norm(params["ln_f"], h, kind=cfg.norm, eps=cfg.norm_eps)
+    return (h[:, 0] @ params["unembed"]["emb"].T).astype(jnp.float32), cache

@@ -1,0 +1,3 @@
+"""Optimizer: AdamW + schedule + clipping (+ EF-int8 compression hooks)."""
+from repro.optim.adamw import OptConfig, adamw_update, clip_by_global_norm, init_opt_state, schedule
+__all__ = ["OptConfig", "adamw_update", "clip_by_global_norm", "init_opt_state", "schedule"]

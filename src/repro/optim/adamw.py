@@ -1,0 +1,85 @@
+"""AdamW + warmup-cosine schedule + global-norm clipping, mixed precision.
+
+Optimizer state keeps f32 master weights and f32 moments; model params
+may be bf16 (cast down after each update). State layout:
+
+  {"master": f32 params, "m": f32, "v": f32, "count": i32,
+   ("ef_err": f32 — error-feedback residuals when compression is on)}
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = cfg.lr * jnp.minimum(1.0, step / max(cfg.warmup_steps, 1))
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_opt_state(params, *, ef_compression: bool = False):
+    # copy=True: with f32 params, astype would alias the param buffer and
+    # break buffer donation (same buffer donated twice)
+    f32 = lambda p: jnp.array(p, jnp.float32, copy=True)
+    state = {
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if ef_compression:
+        state["ef_err"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(grads, opt_state, cfg: OptConfig, *, param_dtype):
+    """Returns (new_params_in_param_dtype, new_opt_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = opt_state["count"] + 1
+    lr = schedule(cfg, count)
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g,
+                     opt_state["m"], grads)
+    v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g,
+                     opt_state["v"], grads)
+    c = count.astype(jnp.float32)
+    bc1 = 1 - b1 ** c
+    bc2 = 1 - b2 ** c
+
+    def upd(p, mm, vv):
+        step = (mm / bc1) / (jnp.sqrt(vv / bc2) + cfg.eps)
+        return p - lr * (step + cfg.weight_decay * p)
+
+    master = jax.tree.map(upd, opt_state["master"], m, v)
+    new_params = jax.tree.map(lambda p: p.astype(param_dtype), master)
+    new_state = dict(opt_state, master=master, m=m, v=v, count=count)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,15 @@
+"""Distribution substrate: sharding rules, HLO cost analysis, roofline,
+collective helpers."""
+from repro.parallel.sharding import (batch_specs, cache_specs, dp_axes,
+                                     param_specs, validate_specs,
+                                     zero_dp_specs)
+from repro.parallel.hlo_analysis import HloCosts, analyze_compiled, analyze_hlo_text
+from repro.parallel.roofline import (Roofline, model_flops, param_counts,
+                                     roofline_from_costs)
+
+__all__ = [
+    "param_specs", "batch_specs", "cache_specs", "zero_dp_specs",
+    "validate_specs", "dp_axes",
+    "HloCosts", "analyze_compiled", "analyze_hlo_text",
+    "Roofline", "model_flops", "param_counts", "roofline_from_costs",
+]

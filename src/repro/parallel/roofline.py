@@ -1,0 +1,103 @@
+"""Three-term roofline from a compiled dry-run artifact (§Roofline).
+
+  compute_s    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory_s     = HLO_bytes_per_device / HBM_bw
+  collective_s = collective_bytes_per_device / link_bw
+
+HLO terms come from ``parallel.hlo_analysis`` (post-SPMD per-device
+module, while-loop trip counts folded in — XLA's own cost_analysis
+counts scan bodies once and is unusable here; see hlo_analysis docs).
+
+MODEL_FLOPS uses the assignment's convention: 6·N·D for training
+(N = active params, D = global tokens per step), 2·N·D for prefill,
+2·N·B for decode (one token per sequence). The useful-compute ratio
+MODEL_FLOPS / (HLO_FLOPs · chips) exposes remat/duplication waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+HBM_BYTES = 16 * 1024**3     # 16 GiB
+
+
+def param_counts(cfg) -> tuple[int, int]:
+    """(total, active) parameter counts from abstract init."""
+    from repro.models import init_lm
+    shapes = jax.eval_shape(lambda k: init_lm(cfg, k),
+                            jax.ShapeDtypeStruct((2,), np.uint32))
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+    active = total
+    if cfg.moe:
+        moe_layers = cfg.n_layers - cfg.first_dense
+        per_expert = 3 * cfg.d_model * cfg.d_ff_expert
+        active -= moe_layers * (cfg.n_experts - cfg.top_k) * per_expert
+    return total, active
+
+
+def model_flops(cfg, shape) -> float:
+    _, n_active = param_counts(cfg)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch       # decode: 1 tok/seq
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float             # per device
+    hlo_bytes: float             # per device
+    collective_bytes: float      # per device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float           # global
+    useful_ratio: float
+    device_mem_bytes: int | None = None
+    fits_hbm: bool | None = None
+    collectives: dict | None = None
+    unknown_trips: int = 0
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_from_costs(costs, *, cfg, shape, mesh_name: str, chips: int,
+                        mem_stats=None) -> Roofline:
+    compute_s = costs.flops / PEAK_FLOPS
+    memory_s = costs.bytes / HBM_BW
+    coll_s = costs.collective_bytes / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    mf = model_flops(cfg, shape)
+    dev_mem = None
+    fits = None
+    if mem_stats is not None:
+        dev_mem = int(mem_stats.argument_size_in_bytes
+                      + mem_stats.temp_size_in_bytes
+                      + mem_stats.output_size_in_bytes
+                      - mem_stats.alias_size_in_bytes)
+        fits = dev_mem <= HBM_BYTES
+    return Roofline(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=costs.flops, hlo_bytes=costs.bytes,
+        collective_bytes=costs.collective_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        bottleneck=max(terms, key=terms.get),
+        model_flops=mf,
+        useful_ratio=mf / (costs.flops * chips) if costs.flops else 0.0,
+        device_mem_bytes=dev_mem, fits_hbm=fits,
+        collectives={k: dict(v) for k, v in costs.collectives.items()},
+        unknown_trips=len(costs.unknown_trips),
+    )

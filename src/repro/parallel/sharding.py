@@ -1,0 +1,274 @@
+"""Sharding rules: param/batch/cache pytrees -> PartitionSpec trees.
+
+Logical plan (DESIGN.md §7), mesh axes ("pod",)+"data"+"model":
+  * batch            -> ("pod","data") = the DP axes (when divisible)
+  * vocab / heads / FFN hidden / experts / SSM channels -> "model"
+  * megatron pairs: column-parallel in-projections (None,"model"),
+    row-parallel out-projections ("model",None) — one all-reduce per block
+  * decode caches: KV heads -> "model" when divisible, else cache seq ->
+    "model" (SPMD flash-decode: XLA turns the softmax reductions over the
+    sharded seq axis into small all-reduces instead of gathering the cache)
+  * long_500k (batch=1): cache seq -> "data" as well
+
+Stacked layer params ([L, ...] from scan-over-layers) get leading None
+axes by stack depth of their top-level collection.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# stack depth of each top-level param collection (leading scan axes)
+_STACK_DEPTH = {
+    "blocks": 1, "dense_blocks": 1, "enc_blocks": 1, "dec_blocks": 1,
+    "trailing": 1, "mamba": 2, "lora": 1,
+}
+
+# ordered (regex on "a/b/c" path, base spec for the unstacked param)
+_RULES = [
+    (r"(embed|unembed)/emb$", ("model", None)),
+    (r"dec_pos$", (None, None)),
+    # attention projections (megatron column/row)
+    (r"(wq|wk|wv|wq_b|wk_b|wv_b)/w$", (None, "model")),
+    (r"(wq|wk|wv|wq_b|wk_b|wv_b)/b$", ("model",)),
+    (r"wo/w$", ("model", None)),
+    (r"wo/b$", (None,)),
+    (r"(wq_a|wkv_a)/w$", (None, None)),          # low-rank stems: replicated
+    # dense mlp
+    (r"(w_gate|w_up)/w$", (None, "model")),
+    (r"(w_gate|w_up)/b$", ("model",)),
+    (r"w_down/w$", ("model", None)),
+    (r"w_down/b$", (None,)),
+    # moe (expert-parallel over "model"; raw [E, ...] arrays)
+    (r"moe/(w_gate|w_up|w_down)$", ("model", None, None)),
+    (r"router/w$", (None, None)),
+    # mamba2 (split projections; B/C/dt replicated per SSD TP)
+    (r"(in_z|in_x)/w$", (None, "model")),
+    (r"(in_bc|in_dt)/w$", (None, None)),
+    (r"conv_w_x$", (None, "model")),
+    (r"conv_b_x$", ("model",)),
+    (r"conv_w_bc$", (None, None)),
+    (r"conv_b_bc$", (None,)),
+    (r"(A_log|D|dt_bias)$", ("model",)),
+    (r"mix/norm/g$", ("model",)),                # gated-rmsnorm over d_inner
+    (r"out_proj/w$", ("model", None)),
+    # rwkv6 time mix
+    (r"time/(wr|wk|wv|wg)/w$", (None, "model")),
+    (r"time/wo/w$", ("model", None)),
+    (r"time/w0$", ("model",)),
+    (r"decay_w2$", (None, "model")),
+    (r"time/u$", ("model", None)),
+    (r"ln_x/(g|b)$", ("model",)),
+    # rwkv6 channel mix
+    (r"chan/wk/w$", (None, "model")),
+    (r"chan/wv/w$", ("model", None)),
+    (r"chan/wr/w$", (None, None)),
+    # zamba2 shared block extras
+    (r"shared/out/w$", ("model", None)),
+    (r"lora/(q|k|v)/a$", (None, None)),
+    (r"lora/(q|k|v)/b$", (None, "model")),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _base_spec(path_str: str):
+    for rx, spec in _RULES:
+        if re.search(rx, path_str):
+            return spec
+    return ()
+
+
+def param_specs(params_shape, *, cfg=None, mesh=None, moe_ep2d=False) -> object:
+    """Pytree of PartitionSpec matching a params pytree (or eval_shape of it).
+
+    When cfg/mesh are given, attention projections whose HEAD COUNT does
+    not divide the model-axis size are replicated instead of column-
+    sharded (Megatron GQA rule: a fractional head per device forces XLA
+    to re-gather K/V each layer — replicating small-n_kv projections is
+    strictly cheaper). Applies to q as well (internvl's 14 heads,
+    whisper's 8, vs model=16).
+    """
+    msz = int(mesh.shape.get("model", 1)) if mesh is not None else 1
+
+    def heads_ok(ps: str) -> bool:
+        if cfg is None or msz == 1:
+            return True
+        if re.search(r"(wq|wq_b)/[wb]$", ps):
+            return cfg.n_heads % msz == 0
+        if re.search(r"(wk|wv|wk_b|wv_b)/[wb]$", ps):
+            n_kv = cfg.n_kv or cfg.n_heads
+            return n_kv % msz == 0
+        if re.search(r"wo/w$", ps):
+            return cfg.n_heads % msz == 0
+        return True
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        top = ps.split("/", 1)[0]
+        depth = _STACK_DEPTH.get(top, 0)
+        base = _base_spec(ps)
+        if not heads_ok(ps):
+            base = ()
+        if moe_ep2d and re.search(r"moe/(w_gate|w_up|w_down)$", ps):
+            base = (("pod", "model"), None, None)   # cross-pod EP storage
+        spec = (None,) * depth + tuple(base)
+        nd = len(leaf.shape)
+        spec = list((spec + (None,) * nd)[:nd])
+        if mesh is not None:    # auto-repair: drop non-dividing axes
+            for ax, part in enumerate(spec):
+                if part is None:
+                    continue
+                names = part if isinstance(part, tuple) else (part,)
+                size = int(np.prod([mesh.shape[n] for n in names]))
+                if leaf.shape[ax] % size:
+                    spec[ax] = None   # e.g. whisper's vocab 51865 vs 16
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _dp_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def batch_specs(batch_shape, mesh) -> object:
+    """Shard the leading batch axis over the DP axes when divisible."""
+    dp = dp_axes(mesh)
+    dsz = _dp_size(mesh)
+
+    def leaf_spec(path, leaf):
+        nd = len(leaf.shape)
+        if leaf.shape and leaf.shape[0] % dsz == 0:
+            return P(*((dp,) + (None,) * (nd - 1)))
+        return P(*((None,) * nd))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch_shape)
+
+
+def _model_size(mesh) -> int:
+    return int(mesh.shape.get("model", 1))
+
+
+def cache_specs(cfg, cache_shape, mesh) -> object:
+    """Decode-cache sharding (see module docstring)."""
+    dp = dp_axes(mesh)
+    dsz = _dp_size(mesh)
+    msz = _model_size(mesh)
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        top = ps.split("/", 1)[0]
+        if top == "pos":
+            return P(dp) if shape and shape[0] % dsz == 0 else P(None)
+        spec = [None] * nd
+
+        if top in ("main", "dense", "self", "cross", "kv"):
+            if nd == 5:          # gqa KV: [L, B, H, S, D]
+                b_ax, h_ax, s_ax = 1, 2, 3
+            elif nd == 4:        # mla latent: [L, B, S, R]
+                b_ax, h_ax, s_ax = 1, None, 2
+            else:
+                return P(*spec)
+            batch_ok = shape[b_ax] % dsz == 0
+            if batch_ok:
+                spec[b_ax] = dp
+            if h_ax is not None and shape[h_ax] % msz == 0:
+                spec[h_ax] = "model"
+            elif shape[s_ax] % msz == 0:
+                spec[s_ax] = "model"           # SPMD flash-decode
+            if not batch_ok and spec[s_ax] is None and \
+                    shape[s_ax] % (dsz * 1) == 0:
+                spec[s_ax] = dp                # long-context: seq over data
+            elif not batch_ok and spec[s_ax] == "model" and \
+                    shape[s_ax] % (dsz * msz) == 0:
+                spec[s_ax] = ("model",) + dp   # seq over both
+            return P(*spec)
+
+        if top in ("ssm", "trail_ssm"):
+            # [*stack, B, ...states]; stack depth 2 for grouped, 1 trailing
+            depth = 2 if top == "ssm" else 1
+            b_ax = depth
+            if shape[b_ax] % dsz == 0:
+                spec[b_ax] = dp
+            # shard head/channel axis (first axis after batch) over model
+            if nd > b_ax + 1 and shape[b_ax + 1] % msz == 0:
+                spec[b_ax + 1] = "model"
+            return P(*spec)
+
+        if top == "wkv":                        # [L, B, H, N, N]
+            if shape[1] % dsz == 0:
+                spec[1] = dp
+            if shape[2] % msz == 0:
+                spec[2] = "model"
+            return P(*spec)
+
+        if top in ("x_time", "x_chan"):         # [L, B, 1, d]
+            if shape[1] % dsz == 0:
+                spec[1] = dp
+            return P(*spec)
+
+        if top == "h0":                         # [B, 1, d]
+            if shape[0] % dsz == 0:
+                spec[0] = dp
+            return P(*spec)
+
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shape)
+
+
+def zero_dp_specs(specs, shapes, mesh) -> object:
+    """ZeRO-style extension: additionally shard large leaves over "data"
+    on the first free, divisible axis (used for optimizer moments and the
+    fp32 master copy)."""
+    dsz = int(mesh.shape.get("data", 1))
+
+    def extend(spec, leaf):
+        shape = leaf.shape
+        if int(np.prod(shape or (1,))) < (1 << 20):
+            return spec
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        for ax, dim in enumerate(shape):
+            if parts[ax] is None and dim % dsz == 0:
+                parts[ax] = "data"
+                return P(*parts)
+        return spec
+
+    return jax.tree.map(extend, specs, shapes)
+
+
+def validate_specs(specs, shapes, mesh) -> list[str]:
+    """Return a list of leaves whose spec doesn't divide the shape."""
+    bad = []
+
+    def check(path, spec, leaf):
+        for ax, part in enumerate(spec):
+            if part is None:
+                continue
+            names = part if isinstance(part, tuple) else (part,)
+            size = int(np.prod([mesh.shape[n] for n in names]))
+            if leaf.shape[ax] % size:
+                bad.append(f"{_path_str(path)}: {leaf.shape} vs {spec}")
+
+    jax.tree_util.tree_map_with_path(check, specs, shapes)
+    return bad

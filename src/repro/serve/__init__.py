@@ -1,0 +1,3 @@
+"""Serving engine (batched prefill + decode)."""
+from repro.serve.engine import Engine, GenerationResult
+__all__ = ["Engine", "GenerationResult"]

@@ -1,0 +1,68 @@
+"""Batched serving engine: prefill + step-wise decode with sampling.
+
+Minimal continuous-batching shape: a fixed pool of B slots, each with
+its own cache position; finished sequences are masked. jit-compiled
+prefill and decode steps are shared across requests of the same padded
+length bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_cache, lm_decode_step, lm_prefill
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: jnp.ndarray          # [B, max_new]
+    logprobs: jnp.ndarray        # [B, max_new]
+
+
+def _sample(key, logits, temperature: float):
+    if temperature == 0.0:
+        tok = jnp.argmax(logits, axis=-1)
+    else:
+        tok = jax.random.categorical(key, logits / temperature, axis=-1)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    return tok.astype(jnp.int32), jnp.take_along_axis(
+        lp, tok[:, None].astype(jnp.int32), axis=-1)[:, 0]
+
+
+class Engine:
+    def __init__(self, cfg, params, *, s_max: int, eos_id: int | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.s_max = s_max
+        self.eos_id = eos_id
+        self._prefill = jax.jit(partial(lm_prefill, cfg=cfg))
+        self._decode = jax.jit(partial(lm_decode_step, cfg=cfg))
+
+    def generate(self, prompts, *, max_new: int, temperature: float = 0.0,
+                 key=None, frontend=None) -> GenerationResult:
+        """prompts [B, Sp] int32 (left-aligned, equal length bucket)."""
+        b = prompts.shape[0]
+        key = key if key is not None else jax.random.PRNGKey(0)
+        cache = init_cache(self.cfg, b, self.s_max)
+        batch = {"tokens": prompts}
+        if frontend is not None:
+            batch["frontend"] = frontend
+        logits, cache = self._prefill(self.params, cache=cache, batch=batch)
+
+        toks, lps = [], []
+        done = jnp.zeros((b,), bool)
+        for i in range(max_new):
+            key, sub = jax.random.split(key)
+            tok, lp = _sample(sub, logits, temperature)
+            if self.eos_id is not None:
+                done = done | (tok == self.eos_id)
+                tok = jnp.where(done, self.eos_id or 0, tok)
+            toks.append(tok)
+            lps.append(lp)
+            if i + 1 < max_new:
+                logits, cache = self._decode(self.params, cache=cache,
+                                             token=tok)
+        return GenerationResult(jnp.stack(toks, 1), jnp.stack(lps, 1))

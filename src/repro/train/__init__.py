@@ -1,0 +1,4 @@
+"""Training loop substrate: step builders + fault-tolerant Trainer."""
+from repro.train.step import init_train_state, make_decode_step, make_prefill_step, make_train_step
+from repro.train.trainer import SimulatedFailure, Trainer
+__all__ = ["make_train_step", "init_train_state", "make_prefill_step", "make_decode_step", "Trainer", "SimulatedFailure"]

@@ -1,0 +1,78 @@
+"""train_step / serve_step builders.
+
+``make_train_step`` returns a pure (state, batch) -> (state, metrics)
+function: CE loss -> grads (optionally microbatched via lax.scan
+accumulation) -> global-norm clip -> AdamW on f32 masters -> bf16 params.
+State = {"params", "opt", "step"}; donate it at jit time.
+
+``make_prefill_step`` / ``make_decode_step`` are the serving entry
+points the dry-run lowers for the prefill_* / decode_* / long_* cells.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_cache, init_lm, lm_decode_step, lm_loss, lm_prefill
+from repro.optim.adamw import OptConfig, adamw_update, init_opt_state
+
+
+def init_train_state(cfg, opt_cfg: OptConfig, key, *, ef_compression=False):
+    params = init_lm(cfg, key)
+    return {"params": params,
+            "opt": init_opt_state(params, ef_compression=ef_compression),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg, opt_cfg: OptConfig, *, microbatch: int = 1):
+    def loss_fn(params, mb):
+        loss, metrics = lm_loss(params, cfg, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatch > 1:
+            mbatch = jax.tree.map(
+                lambda x: x.reshape((microbatch, -1) + x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / microbatch,
+                    g_acc, g)
+                return (g_acc, l_acc + loss / microbatch), None
+
+            (grads, loss), _ = jax.lax.scan(
+                acc, (zeros, jnp.zeros((), jnp.float32)), mbatch)
+        else:
+            (loss, _), grads = grad_fn(params, batch)
+
+        new_params, opt, om = adamw_update(
+            grads, state["opt"], opt_cfg, param_dtype=cfg.pdt)
+        metrics = {"loss": loss, **om}
+        return {"params": new_params, "opt": opt,
+                "step": state["step"] + 1}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, s_max: int):
+    def prefill_step(params, batch):
+        b = batch["tokens"].shape[0]
+        cache = init_cache(cfg, b, s_max)
+        logits, cache = lm_prefill(params, cfg, cache, batch)
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def decode_step(params, cache, token):
+        return lm_decode_step(params, cfg, cache, token)
+    return decode_step

@@ -1,0 +1,17 @@
+"""Shared utilities: pytree helpers, PRNG discipline, structured logging."""
+from repro.utils.prng import fold_in_str, key_iter
+from repro.utils.tree import (
+    tree_bytes,
+    tree_global_norm,
+    tree_param_count,
+    tree_zeros_like,
+)
+
+__all__ = [
+    "fold_in_str",
+    "key_iter",
+    "tree_bytes",
+    "tree_global_norm",
+    "tree_param_count",
+    "tree_zeros_like",
+]

@@ -1,0 +1,28 @@
+"""PRNG discipline.
+
+Every stochastic component derives its keys from a named fold of the root key
+so that (a) runs are bitwise reproducible given a seed, and (b) restoring from
+a checkpoint at step `s` regenerates exactly the stream that a non-interrupted
+run would have used (the data pipeline and trainer fold the step index in,
+so there is no mutable RNG state to checkpoint).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Iterator
+
+import jax
+
+
+def fold_in_str(key: jax.Array, name: str) -> jax.Array:
+    """Deterministically fold a string tag into a PRNG key."""
+    digest = hashlib.sha256(name.encode("utf-8")).digest()
+    tag = int.from_bytes(digest[:4], "little")
+    return jax.random.fold_in(key, tag)
+
+
+def key_iter(key: jax.Array) -> Iterator[jax.Array]:
+    """Infinite iterator of fresh subkeys (host-side convenience)."""
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub

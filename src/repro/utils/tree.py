@@ -1,0 +1,31 @@
+"""Pytree utilities used across the trainer / checkpoint / optim layers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_param_count(tree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(l.shape) if hasattr(l, "shape") else 1 for l in leaves))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree (uses dtype itemsize of each leaf)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_global_norm(tree) -> jax.Array:
+    """L2 norm over all leaves (float32 accumulation)."""
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)

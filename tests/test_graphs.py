@@ -1,0 +1,133 @@
+"""Tests for the graph substrate: CSR build, eq.-(4) weights, generators,
+Table-I stats, block padding."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs.blocking import block_edges
+from repro.graphs.csr import build_graph, graph_stats
+from repro.graphs.datasets import DATASETS, load_dataset
+from repro.graphs.generators import dc_sbm, erdos_renyi, grid_road, ring_of_cliques, rmat
+
+
+class TestBuildGraph:
+    def test_simple_triangle(self):
+        # edges: 0->1, 1->0 (reciprocal), 1->2 (one-way)
+        g = build_graph(np.array([0, 1, 1]), np.array([1, 0, 2]), 3)
+        assert g.n == 3 and g.m == 3
+        np.testing.assert_array_equal(g.deg_out, [1, 2, 0])
+        # symmetrized: (0,1) w2, (1,0) w2, (1,2) w1, (2,1) w1
+        assert g.num_sym_edges == 4
+        w_by_pair = {}
+        for v in range(3):
+            for i in range(g.adj_ptr[v], g.adj_ptr[v + 1]):
+                w_by_pair[(v, int(g.adj_idx[i]))] = float(g.adj_w[i])
+        assert w_by_pair == {(0, 1): 2.0, (1, 0): 2.0, (1, 2): 1.0, (2, 1): 1.0}
+
+    def test_self_loops_and_dups_removed(self):
+        g = build_graph(np.array([0, 0, 0, 1]), np.array([0, 1, 1, 1]), 2)
+        assert g.m == 1  # only 0->1 survives
+        np.testing.assert_array_equal(g.deg_out, [1, 0])
+
+    def test_load_conservation(self):
+        g = rmat(256, 2048, seed=0)
+        assert int(g.deg_out.sum()) == g.m
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(4, 64), seed=st.integers(0, 1000))
+    def test_property_symmetrized_adjacency_is_symmetric(self, n, seed):
+        rng = np.random.default_rng(seed)
+        m = 4 * n
+        g = build_graph(rng.integers(0, n, m), rng.integers(0, n, m), n)
+        pairs = set()
+        for v in range(g.n):
+            for i in range(g.adj_ptr[v], g.adj_ptr[v + 1]):
+                pairs.add((v, int(g.adj_idx[i])))
+        for (u, v) in pairs:
+            assert (v, u) in pairs  # N(v) relation is symmetric
+
+
+class TestGenerators:
+    def test_rmat_right_skewed(self):
+        s = graph_stats(rmat(2048, 16384, seed=0))
+        assert s["skewness"] > 0
+
+    def test_grid_left_skewed_sparse(self):
+        s = graph_stats(grid_road(4096, seed=0))
+        assert s["skewness"] < 0
+        assert s["mean_deg"] < 6
+
+    def test_dcsbm_skew_knob(self):
+        flat = graph_stats(dc_sbm(2048, 16384, degree_exponent=0.0, seed=0))
+        skew = graph_stats(dc_sbm(2048, 16384, degree_exponent=0.8, seed=0))
+        assert abs(flat["skewness"]) < 0.4
+        assert skew["skewness"] > flat["skewness"]
+
+    def test_ring_of_cliques_structure(self):
+        g = ring_of_cliques(4, 8)
+        assert g.n == 32
+        # each clique vertex has 7 intra out-edges; one ring edge per clique
+        assert g.m == 4 * 8 * 7 + 4
+
+    def test_erdos_density(self):
+        g = erdos_renyi(512, 4096, seed=0)
+        assert abs(g.m - 4096) / 4096 < 0.1
+
+
+class TestDatasets:
+    def test_all_datasets_load_small(self):
+        for name in DATASETS:
+            g = load_dataset(name, scale=0.0005)
+            assert g.n > 0 and g.m > 0
+
+    def test_skew_signs_match_table1(self):
+        # Table I: USA negative; WIKI/UK/LJ/EN/OK/HLWD positive
+        assert graph_stats(load_dataset("USA", scale=0.002))["skewness"] < 0
+        assert graph_stats(load_dataset("WIKI", scale=0.002))["skewness"] > 0
+        assert graph_stats(load_dataset("UK", scale=0.002))["skewness"] > 0
+
+
+class TestBlocking:
+    def test_roundtrip_all_edges_present(self):
+        g = rmat(300, 2400, seed=1)
+        be = block_edges(g, block_v=64)
+        # sum of nonzero weights must equal total symmetrized weight
+        assert np.isclose(be.edge_w.sum(), g.adj_w.sum())
+        # every real edge appears exactly once with the right local row
+        cnt = int((be.edge_w > 0).sum())
+        assert cnt == g.num_sym_edges
+
+    def test_rows_within_block(self):
+        g = rmat(300, 2400, seed=1)
+        be = block_edges(g, block_v=64)
+        assert be.edge_row.max() < be.block_v
+        assert be.edge_dst.max() < g.n
+
+    def test_histogram_equivalence_flat_vs_blocked(self):
+        """Blocked-layout histogram == flat scatter histogram."""
+        import jax.numpy as jnp
+        from repro.core.lp import edge_histogram_jnp
+
+        g = dc_sbm(256, 2048, n_comm=8, seed=2)
+        be = block_edges(g, block_v=64)
+        k = 4
+        rng = np.random.default_rng(0)
+        labels = rng.integers(0, k, size=g.n).astype(np.int32)
+
+        # flat
+        src = np.repeat(np.arange(g.n), np.diff(g.adj_ptr).astype(np.int64))
+        flat = np.asarray(edge_histogram_jnp(
+            jnp.asarray(src), jnp.asarray(labels[g.adj_idx]),
+            jnp.asarray(g.adj_w), g.n, k))
+
+        # blocked
+        labels_pad = np.zeros(be.n_pad, dtype=np.int32)
+        labels_pad[: g.n] = labels
+        out = np.zeros((be.n_pad, k), dtype=np.float32)
+        for b in range(be.n_blocks):
+            h = np.asarray(edge_histogram_jnp(
+                jnp.asarray(be.edge_row[b]),
+                jnp.asarray(labels_pad[be.edge_dst[b]]),
+                jnp.asarray(be.edge_w[b]), be.block_v, k))
+            out[b * be.block_v : (b + 1) * be.block_v] = h
+        np.testing.assert_allclose(out[: g.n], flat, rtol=1e-5)

@@ -1,0 +1,154 @@
+"""Unit + property tests for the learning-automata update rules (eqs. 6-9)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.la import (
+    classic_la_update,
+    split_weights_and_signals,
+    weighted_la_update,
+)
+
+
+def _random_simplex(rng, shape):
+    x = rng.uniform(0.1, 1.0, size=shape)
+    return x / x.sum(axis=-1, keepdims=True)
+
+
+class TestClassicLA:
+    def test_reward_increases_chosen(self):
+        p = jnp.array([[0.25, 0.25, 0.25, 0.25]])
+        out = classic_la_update(p, jnp.array([1]), jnp.array([0]), 0.1, 0.1)
+        assert out[0, 1] > 0.25
+        np.testing.assert_allclose(float(jnp.sum(out)), 1.0, rtol=1e-6)
+
+    def test_penalty_decreases_chosen(self):
+        p = jnp.array([[0.25, 0.25, 0.25, 0.25]])
+        out = classic_la_update(p, jnp.array([1]), jnp.array([1]), 0.1, 0.1)
+        assert out[0, 1] < 0.25
+        np.testing.assert_allclose(float(jnp.sum(out)), 1.0, rtol=1e-6)
+
+    def test_simplex_preserved_exactly(self):
+        rng = np.random.default_rng(0)
+        p = jnp.asarray(_random_simplex(rng, (32, 8)).astype(np.float32))
+        a = jnp.asarray(rng.integers(0, 8, size=32))
+        r = jnp.asarray(rng.integers(0, 2, size=32))
+        out = classic_la_update(p, a, r, 0.3, 0.15)
+        np.testing.assert_allclose(np.asarray(jnp.sum(out, -1)), 1.0, rtol=1e-5)
+
+
+def _split_oracle(w_row):
+    """Pure-python oracle for the mean-split normalization."""
+    m = len(w_row)
+    mean = sum(w_row) / m
+    r = [1.0 if wi <= mean else 0.0 for wi in w_row]
+    rew = sum(wi for wi, ri in zip(w_row, r) if ri == 0)
+    pen = sum(wi for wi, ri in zip(w_row, r) if ri == 1)
+    out = []
+    for wi, ri in zip(w_row, r):
+        if ri == 0:
+            out.append(wi / rew if rew > 0 else 0.0)
+        else:
+            out.append(wi / pen if pen > 0 else 0.0)
+    return out, r
+
+
+class TestSplitWeights:
+    def test_halves_sum_to_one(self):
+        rng = np.random.default_rng(1)
+        w = jnp.asarray(rng.uniform(0, 5, size=(64, 16)).astype(np.float32))
+        wn, r = split_weights_and_signals(w)
+        rew_sum = np.asarray(jnp.sum(wn * (1 - r), -1))
+        pen_sum = np.asarray(jnp.sum(wn * r, -1))
+        np.testing.assert_allclose(rew_sum, 1.0, atol=1e-5)
+        np.testing.assert_allclose(pen_sum, 1.0, atol=1e-5)
+        # so sum(W) == 2 as the paper requires
+        np.testing.assert_allclose(np.asarray(jnp.sum(wn, -1)), 2.0, atol=1e-5)
+
+    def test_matches_oracle(self):
+        rng = np.random.default_rng(2)
+        w = rng.uniform(0, 3, size=(8,)).astype(np.float32)
+        wn, r = split_weights_and_signals(jnp.asarray(w[None]))
+        expect_w, expect_r = _split_oracle(list(w))
+        np.testing.assert_allclose(np.asarray(wn[0]), expect_w, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(r[0]), expect_r)
+
+    def test_all_zero_row_is_silent(self):
+        wn, r = split_weights_and_signals(jnp.zeros((1, 8)))
+        np.testing.assert_allclose(np.asarray(wn), 0.0)
+        # zero-signal weights => weighted_la_update must be a no-op
+        p = jnp.full((1, 8), 1.0 / 8)
+        out = weighted_la_update(p, wn, r, 1.0, 0.1)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(p), atol=1e-6)
+
+
+class TestWeightedLA:
+    def test_single_reward_slot_converges(self):
+        """Consistent reinforcement of one slot must drive its prob -> ~1."""
+        k = 8
+        p = jnp.full((1, k), 1.0 / k)
+        w = jnp.zeros((1, k)).at[0, 3].set(1.0)
+        r = jnp.ones((1, k)).at[0, 3].set(0.0)
+        for _ in range(30):
+            p = weighted_la_update(p, w, r, 1.0, 0.1)
+        assert float(p[0, 3]) > 0.95
+
+    def test_ascending_order_cannot_become_decisive(self):
+        """DESIGN.md §10.6 ablation: the literal ascending pass order caps
+        max(p) well below 1 when penalty slots carry weight."""
+        k = 8
+        p = jnp.full((1, k), 1.0 / k)
+        # reward slot 0; weighted penalty slots 5,6 run AFTER it in
+        # ascending order, crushing the rewarded probability every step
+        w = jnp.zeros((1, k)).at[0, 0].set(1.0)
+        w = w.at[0, 5].set(0.5).at[0, 6].set(0.5)
+        r = jnp.ones((1, k)).at[0, 0].set(0.0)
+        p_asc = p
+        for _ in range(60):
+            p_asc = weighted_la_update(p_asc, w, r, 1.0, 0.1, pass_order="ascending")
+        p_pf = p
+        for _ in range(60):
+            p_pf = weighted_la_update(p_pf, w, r, 1.0, 0.1, pass_order="penalty_first")
+        # the reward pass runs LAST under penalty_first -> decisive
+        assert float(p_pf[0, 0]) > 0.9
+        assert float(p_asc[0, 0]) < 0.9
+
+    def test_simplex_after_renorm(self):
+        rng = np.random.default_rng(3)
+        p = jnp.asarray(_random_simplex(rng, (128, 16)).astype(np.float32))
+        w_raw = jnp.asarray(rng.uniform(0, 4, size=(128, 16)).astype(np.float32))
+        wn, r = split_weights_and_signals(w_raw)
+        out = weighted_la_update(p, wn, r, 1.0, 0.1, renorm=True)
+        np.testing.assert_allclose(np.asarray(jnp.sum(out, -1)), 1.0, atol=1e-5)
+        assert float(jnp.min(out)) >= 0.0
+
+    def test_simplex_drift_without_renorm_is_small(self):
+        """The paper claims eqs. (8)/(9) preserve sum(p)=1; measure the drift."""
+        rng = np.random.default_rng(4)
+        p = jnp.asarray(_random_simplex(rng, (256, 8)).astype(np.float32))
+        w_raw = jnp.asarray(rng.uniform(0, 4, size=(256, 8)).astype(np.float32))
+        wn, r = split_weights_and_signals(w_raw)
+        out = weighted_la_update(p, wn, r, 0.1, 0.1, renorm=False)
+        drift = np.abs(np.asarray(jnp.sum(out, -1)) - 1.0)
+        assert drift.max() < 0.2  # bounded, but not exact -> renorm needed
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(min_value=2, max_value=32),
+        rows=st.integers(min_value=1, max_value=16),
+        seed=st.integers(min_value=0, max_value=2**16),
+        alpha=st.floats(min_value=0.01, max_value=1.0),
+        beta=st.floats(min_value=0.01, max_value=1.0),
+    )
+    def test_property_valid_distribution(self, m, rows, seed, alpha, beta):
+        """For any inputs, the renormalized update is a valid distribution."""
+        rng = np.random.default_rng(seed)
+        p = jnp.asarray(_random_simplex(rng, (rows, m)).astype(np.float32))
+        w_raw = jnp.asarray(rng.uniform(0, 4, size=(rows, m)).astype(np.float32))
+        wn, r = split_weights_and_signals(w_raw)
+        out = np.asarray(weighted_la_update(p, wn, r, alpha, beta, renorm=True))
+        assert np.all(out >= 0)
+        assert np.all(out <= 1.0 + 1e-6)
+        np.testing.assert_allclose(out.sum(-1), 1.0, atol=1e-4)

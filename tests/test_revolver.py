@@ -1,0 +1,149 @@
+"""Integration tests for the Revolver partitioner and its baselines."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.device_graph import capacity, prepare_device_graph
+from repro.core.metrics import local_edges, max_normalized_load, partition_loads
+from repro.core.revolver import RevolverConfig, revolver_init, revolver_superstep
+from repro.core.runner import run_partitioner
+from repro.core.spinner import SpinnerConfig, spinner_init, spinner_superstep
+from repro.graphs.generators import dc_sbm, ring_of_cliques
+
+
+@pytest.fixture(scope="module")
+def clique_graph():
+    return ring_of_cliques(8, 16)
+
+
+@pytest.fixture(scope="module")
+def sbm_graph():
+    return dc_sbm(1024, 8192, n_comm=16, mixing=0.25, degree_exponent=0.5, seed=3)
+
+
+class TestRevolverInvariants:
+    def test_loads_match_labels_every_step(self, sbm_graph):
+        """Invariant: state.loads == recomputed b(l) after async chunk updates."""
+        dg = prepare_device_graph(sbm_graph, n_blocks=4)
+        cfg = RevolverConfig(k=4, max_steps=10)
+        st = revolver_init(dg, cfg, jax.random.PRNGKey(0))
+        for _ in range(5):
+            st = revolver_superstep(dg, cfg, st)
+            expect = partition_loads(st.labels, dg.deg_out, 4)
+            np.testing.assert_allclose(np.asarray(st.loads), np.asarray(expect), rtol=1e-5)
+
+    def test_labels_in_range(self, sbm_graph):
+        dg = prepare_device_graph(sbm_graph, n_blocks=4)
+        cfg = RevolverConfig(k=6)
+        st = revolver_init(dg, cfg, jax.random.PRNGKey(1))
+        for _ in range(3):
+            st = revolver_superstep(dg, cfg, st)
+        lab = np.asarray(st.labels)
+        assert lab.min() >= 0 and lab.max() < 6
+
+    def test_probs_remain_simplex(self, sbm_graph):
+        dg = prepare_device_graph(sbm_graph, n_blocks=4)
+        cfg = RevolverConfig(k=4)
+        st = revolver_init(dg, cfg, jax.random.PRNGKey(2))
+        for _ in range(5):
+            st = revolver_superstep(dg, cfg, st)
+        sums = np.asarray(jnp.sum(st.probs, axis=-1))
+        np.testing.assert_allclose(sums, 1.0, atol=1e-4)
+
+    def test_deterministic_given_seed(self, clique_graph):
+        r1 = run_partitioner("revolver", clique_graph, 4, max_steps=15, seed=7,
+                             track_history=False)
+        r2 = run_partitioner("revolver", clique_graph, 4, max_steps=15, seed=7,
+                             track_history=False)
+        np.testing.assert_array_equal(r1.labels, r2.labels)
+
+    def test_sync_mode_single_block(self, sbm_graph):
+        """n_blocks=1 (synchronous degenerate case) still works."""
+        r = run_partitioner("revolver", sbm_graph, 4, max_steps=20, seed=0,
+                            n_blocks=1, track_history=False)
+        assert r.local_edges > 0
+
+
+class TestRevolverQuality:
+    def test_recovers_planted_cliques(self, clique_graph):
+        r = run_partitioner("revolver", clique_graph, 8, max_steps=290, seed=0,
+                            track_history=False)
+        assert r.local_edges > 0.9          # near-perfect: one clique per part
+        assert r.max_norm_load < 1.10
+
+    def test_beats_hash_on_communities(self, sbm_graph):
+        rh = run_partitioner("hash", sbm_graph, 8)
+        rr = run_partitioner("revolver", sbm_graph, 8, max_steps=150, seed=0,
+                             track_history=False)
+        assert rr.local_edges > rh.local_edges + 0.1
+
+    def test_balance_within_epsilon_slack(self, sbm_graph):
+        """Paper claim: Revolver stays within the 5% imbalance budget."""
+        r = run_partitioner("revolver", sbm_graph, 8, max_steps=150, seed=0,
+                            track_history=False)
+        assert r.max_norm_load <= 1.10  # 1+eps (+ small sampling noise)
+
+    def test_paper_capacity_mode_runs(self, sbm_graph):
+        r = run_partitioner("revolver", sbm_graph, 4, max_steps=20, seed=0,
+                            capacity_mode="paper", track_history=False)
+        assert 0.0 <= r.local_edges <= 1.0
+
+
+class TestSpinner:
+    def test_spinner_improves_over_random(self, sbm_graph):
+        rh = run_partitioner("hash", sbm_graph, 8)
+        rs = run_partitioner("spinner", sbm_graph, 8, max_steps=150, seed=0,
+                             track_history=False)
+        assert rs.local_edges > rh.local_edges + 0.1
+
+    def test_spinner_loads_consistent(self, sbm_graph):
+        dg = prepare_device_graph(sbm_graph, n_blocks=1)
+        cfg = SpinnerConfig(k=4)
+        st = spinner_init(dg, cfg, jax.random.PRNGKey(0))
+        for _ in range(5):
+            st = spinner_superstep(dg, cfg, st)
+            expect = partition_loads(st.labels, dg.deg_out, 4)
+            np.testing.assert_allclose(np.asarray(st.loads), np.asarray(expect), rtol=1e-5)
+
+
+class TestStaticPartitioners:
+    def test_hash_balanced_on_uniform_ids(self):
+        g = dc_sbm(1024, 4096, n_comm=8, seed=0)
+        r = run_partitioner("hash", g, 8)
+        assert r.max_norm_load < 1.5
+
+    def test_range_contiguous(self):
+        g = ring_of_cliques(4, 8)
+        r = run_partitioner("range", g, 4)
+        # range partitioning on community-sorted ids == planted partition
+        assert r.local_edges > 0.9
+
+
+class TestCapacity:
+    def test_capacity_modes(self):
+        assert capacity(1000, 10, 0.05, "spinner") == pytest.approx(105.0)
+        assert capacity(1000, 10, 0.05, "paper") == pytest.approx(5.0)
+        with pytest.raises(ValueError):
+            capacity(1000, 10, 0.05, "bogus")
+
+
+class TestPaperClaims:
+    """The paper's two headline claims, validated on the DC-SBM suite
+    (EXPERIMENTS.md §Reproduction reports the full sweep)."""
+
+    def test_revolver_balance_beats_spinner(self, sbm_graph):
+        rr = run_partitioner("revolver", sbm_graph, 8, max_steps=200, seed=0,
+                             track_history=False)
+        rs = run_partitioner("spinner", sbm_graph, 8, max_steps=200, seed=0,
+                             track_history=False)
+        assert rr.max_norm_load <= rs.max_norm_load + 0.02
+
+    def test_revolver_local_edges_comparable_to_spinner(self, sbm_graph):
+        rr = run_partitioner("revolver", sbm_graph, 8, max_steps=200, seed=0,
+                             track_history=False)
+        rs = run_partitioner("spinner", sbm_graph, 8, max_steps=200, seed=0,
+                             track_history=False)
+        assert rr.local_edges >= rs.local_edges - 0.05

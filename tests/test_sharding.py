@@ -1,0 +1,113 @@
+"""Sharding-rule unit tests (specs only; no multi-device execution)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ARCHS, get_config
+from repro.launch.mesh import make_production_mesh  # noqa: F401 (import-only)
+from repro.models import init_cache, init_lm
+from repro.parallel import (batch_specs, cache_specs, param_specs,
+                            validate_specs, zero_dp_specs)
+
+
+class FakeMesh:
+    """Spec-validation stand-in (no devices needed)."""
+
+    def __init__(self, shape_map):
+        self.shape = shape_map
+        self.axis_names = tuple(shape_map)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _pshape(cfg):
+    return jax.eval_shape(lambda k: init_lm(cfg, k),
+                          jax.ShapeDtypeStruct((2,), np.uint32))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_specs_divide_for_all_archs(arch):
+    cfg = get_config(arch)
+    shapes = _pshape(cfg)
+    for mesh in (MESH, MESH_MP):
+        specs = param_specs(shapes, cfg=cfg, mesh=mesh)
+        assert validate_specs(specs, shapes, mesh) == []
+
+
+def test_kv_replication_rule():
+    cfg = get_config("tinyllama-1.1b")          # n_kv=4 < model=16
+    shapes = _pshape(cfg)
+    specs = param_specs(shapes, cfg=cfg, mesh=MESH)
+    wk = specs["blocks"]["attn"]["wk"]["w"]
+    wq = specs["blocks"]["attn"]["wq"]["w"]
+    assert wk == P(None, None, None)            # replicated (stacked axis +2d)
+    assert wq == P(None, None, "model")         # q heads still sharded
+
+
+def test_vocab_indivisible_is_repaired():
+    cfg = get_config("whisper-base")            # vocab 51865 % 16 != 0
+    shapes = _pshape(cfg)
+    specs = param_specs(shapes, cfg=cfg, mesh=MESH)
+    assert specs["embed"]["emb"] == P(None, None)
+
+
+def test_batch_specs_shard_only_divisible():
+    b_ok = {"tokens": jax.ShapeDtypeStruct((256, 128), jnp.int32)}
+    b_small = {"token": jax.ShapeDtypeStruct((1,), jnp.int32)}
+    s1 = batch_specs(b_ok, MESH)
+    assert s1["tokens"] == P(("data",), None)
+    s2 = batch_specs(b_small, MESH)
+    assert s2["token"] == P(None)
+    s3 = batch_specs(b_ok, MESH_MP)
+    assert s3["tokens"] == P(("pod", "data"), None)
+
+
+def test_cache_specs_gqa_heads_vs_seq():
+    # zamba kv cache: 32 kv heads -> heads on model
+    cfg = get_config("zamba2-7b")
+    cache = jax.eval_shape(lambda: init_cache(cfg, 128, 1024))
+    specs = cache_specs(cfg, cache, MESH)
+    assert specs["kv"][0] == P(None, ("data",), "model", None, None)
+    # danube (kv=8): heads cannot shard on 16 -> seq axis takes "model"
+    cfg2 = get_config("h2o-danube-3-4b")
+    cache2 = jax.eval_shape(lambda: init_cache(cfg2, 128, 32768))
+    specs2 = cache_specs(cfg2, cache2, MESH)
+    ck = specs2["main"][0]
+    assert ck[2] is None and ck[3] == "model"
+    assert validate_specs(specs2, cache2, MESH) == []
+
+
+def test_cache_specs_long_context_batch1():
+    cfg = get_config("zamba2-7b")
+    cache = jax.eval_shape(lambda: init_cache(cfg, 1, 524288))
+    specs = cache_specs(cfg, cache, MESH)
+    ck = specs["kv"][0]
+    assert ck[1] is None            # batch=1: unsharded
+    assert ck[2] == "model"         # kv heads on the model axis
+    assert ck[3] == "data"          # 524k cache seq sharded over data
+    assert validate_specs(specs, cache, MESH) == []
+
+
+def test_zero_dp_extends_large_leaves_only():
+    shapes = {"big": jax.ShapeDtypeStruct((64, 4096, 512), jnp.float32),
+              "small": jax.ShapeDtypeStruct((7,), jnp.float32)}
+    specs = {"big": P(None, None, "model"), "small": P(None)}
+    out = zero_dp_specs(specs, shapes, MESH)
+    assert out["big"] == P("data", None, "model")
+    assert out["small"] == P(None)
+
+
+def test_mla_cache_is_latent_sized():
+    """The MLA decode cache must store [S, kv_lora+rope] per token, not
+    per-head K/V — the paper-faithful memory win."""
+    cfg = get_config("deepseek-v2-236b")
+    cache = jax.eval_shape(lambda: init_cache(cfg, 2, 64))
+    c, pe = cache["main"]
+    per_tok = (c.shape[-1] + pe.shape[-1])
+    assert per_tok == cfg.kv_lora_rank + cfg.mla_d_rope == 576
+    gqa_equiv = cfg.n_heads * (cfg.mla_d_nope + cfg.mla_d_v)
+    assert per_tok * 18 < gqa_equiv          # >18x smaller than full KV
