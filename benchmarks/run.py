@@ -19,7 +19,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from benchmarks import (fig3_partition_quality, fig4_convergence,
-                            kernel_bench, roofline_report, table1_datasets)
+                            kernel_bench, roofline_report, streaming_bench,
+                            table1_datasets)
 
     t0 = time.time()
     print("=" * 72)
@@ -38,6 +39,14 @@ def main(argv=None):
     print("== Fig. 4: convergence (LJ, k=32) + async-vs-sync ablation ==")
     fig4_convergence.run(scale=0.001 if args.quick else 0.002,
                          max_steps=60 if args.quick else 290)
+
+    print("=" * 72)
+    print("== Streaming ingestion: quality-vs-batch / steps-to-recover ==")
+    if args.quick:
+        streaming_bench.run(dataset="WIKI", k=4, scale=0.0005, deltas=4,
+                            refine_max_steps=8)
+    else:
+        streaming_bench.run()
 
     print("=" * 72)
     print("== Kernel microbench (CPU; interpret-mode parity) ==")

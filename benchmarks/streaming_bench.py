@@ -1,0 +1,106 @@
+"""Streaming benchmark: any Table-I dataset as a timestamped edge stream.
+
+Feeds the chosen synthetic dataset to the streaming subsystem in `--deltas`
+insertion batches and reports, after each delta, the supersteps needed to
+recover (score-stall halting) and the partition quality. A one-shot batch
+run on the full graph anchors the comparison: the headline numbers are
+  * quality-vs-batch  — final streamed local-edges / batch local-edges,
+  * step ratio        — total streamed supersteps / batch steps-to-converge.
+
+  PYTHONPATH=src python benchmarks/streaming_bench.py --dataset LJ --scale 0.002
+  PYTHONPATH=src python benchmarks/streaming_bench.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core import run_partitioner
+from repro.graphs import load_dataset
+from repro.streaming import StreamConfig, StreamRunner, stream_from_graph
+
+
+def run(*, dataset="WIKI", k=8, scale=0.002, deltas=5, seed=0,
+        refine_max_steps=15, refine_patience=3, sync_every=2,
+        warm_sharpen=0.5, restream=False, out=None):
+    g = load_dataset(dataset, scale=scale, seed=seed)
+    print(f"{dataset}@{scale}: |V|={g.n:,} |E|={g.m:,} k={k} deltas={deltas}")
+
+    t0 = time.time()
+    batch = run_partitioner("revolver", g, k, seed=seed, track_history=False)
+    batch_wall = time.time() - t0
+    print(f"batch    steps={batch.steps:4d} le={batch.local_edges:.4f} "
+          f"mnl={batch.max_norm_load:.4f} wall={batch_wall:.1f}s")
+
+    cfg = StreamConfig(
+        k=k, refine_max_steps=refine_max_steps, refine_patience=refine_patience,
+        sync_every=sync_every, warm_sharpen=warm_sharpen, restream=restream,
+    )
+    runner = StreamRunner(g.n, cfg, seed=seed)
+    t0 = time.time()
+    for rep in runner.run(stream_from_graph(g, deltas, seed=seed)):
+        print(f"delta {rep.delta_idx:2d}  m={rep.m:8,d} (+{rep.added:,}) "
+              f"steps={rep.steps:3d} le={rep.local_edges:.4f} "
+              f"mnl={rep.max_norm_load:.4f} dirty={rep.dirty_blocks} "
+              f"{'repad ' if rep.repadded else ''}wall={rep.wall_s:.2f}s")
+    stream_wall = time.time() - t0
+
+    final = runner.reports[-1]
+    total_steps = runner.total_steps
+    quality_ratio = final.local_edges / max(batch.local_edges, 1e-9)
+    step_ratio = total_steps / max(batch.steps, 1)
+    print(f"stream   steps={total_steps:4d} le={final.local_edges:.4f} "
+          f"mnl={final.max_norm_load:.4f} wall={stream_wall:.1f}s")
+    print(f"quality-vs-batch={quality_ratio:.3f}  step-ratio={step_ratio:.3f}")
+
+    result = {
+        "dataset": dataset, "scale": scale, "k": k, "deltas": deltas,
+        "restream": restream,
+        "batch": {"steps": batch.steps, "local_edges": batch.local_edges,
+                  "max_norm_load": batch.max_norm_load, "wall_s": batch_wall},
+        "stream": {"total_steps": total_steps,
+                   "local_edges": final.local_edges,
+                   "max_norm_load": final.max_norm_load,
+                   "wall_s": stream_wall,
+                   "per_delta": [vars(r) for r in runner.reports]},
+        "quality_ratio": quality_ratio,
+        "step_ratio": step_ratio,
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=2)
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dataset", default="WIKI")
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--scale", type=float, default=0.002)
+    ap.add_argument("--deltas", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--refine-max-steps", type=int, default=15)
+    ap.add_argument("--refine-patience", type=int, default=3)
+    ap.add_argument("--sync-every", type=int, default=2)
+    ap.add_argument("--warm-sharpen", type=float, default=0.5)
+    ap.add_argument("--restream", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI-sized run (overrides dataset/scale/deltas)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return run(dataset="WIKI", k=4, scale=0.0005, deltas=4, seed=args.seed,
+                   refine_max_steps=8, refine_patience=2, sync_every=2,
+                   warm_sharpen=args.warm_sharpen, restream=args.restream,
+                   out=args.out)
+    return run(dataset=args.dataset, k=args.k, scale=args.scale,
+               deltas=args.deltas, seed=args.seed,
+               refine_max_steps=args.refine_max_steps,
+               refine_patience=args.refine_patience,
+               sync_every=args.sync_every, warm_sharpen=args.warm_sharpen,
+               restream=args.restream, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -3,10 +3,22 @@ from repro.core.la import classic_la_update, weighted_la_update
 from repro.core.lp import edge_histogram_jnp, normalized_penalty, spinner_penalty
 from repro.core.metrics import local_edges, max_normalized_load, partition_loads
 from repro.core.device_graph import DeviceGraph, prepare_device_graph
-from repro.core.revolver import RevolverConfig, RevolverState, revolver_init, revolver_superstep
-from repro.core.spinner import SpinnerConfig, SpinnerState, spinner_init, spinner_superstep
+from repro.core.revolver import (
+    RevolverConfig,
+    RevolverState,
+    revolver_init,
+    revolver_init_from_labels,
+    revolver_superstep,
+)
+from repro.core.spinner import (
+    SpinnerConfig,
+    SpinnerState,
+    spinner_init,
+    spinner_init_from_labels,
+    spinner_superstep,
+)
 from repro.core.static_partitioners import hash_partition, range_partition
-from repro.core.runner import PartitionResult, run_partitioner
+from repro.core.runner import PartitionResult, run_convergence_loop, run_partitioner
 
 __all__ = [
     "classic_la_update",
@@ -22,13 +34,16 @@ __all__ = [
     "RevolverConfig",
     "RevolverState",
     "revolver_init",
+    "revolver_init_from_labels",
     "revolver_superstep",
     "SpinnerConfig",
     "SpinnerState",
     "spinner_init",
+    "spinner_init_from_labels",
     "spinner_superstep",
     "hash_partition",
     "range_partition",
     "PartitionResult",
+    "run_convergence_loop",
     "run_partitioner",
 ]

@@ -84,6 +84,65 @@ def revolver_init(dg: DeviceGraph, cfg: RevolverConfig, key: jax.Array) -> Revol
     )
 
 
+def revolver_init_from_labels(
+    dg: DeviceGraph,
+    cfg: RevolverConfig,
+    key: jax.Array,
+    labels: jnp.ndarray,
+    probs: jnp.ndarray | None = None,
+    prob_sharpen: float = 0.0,
+) -> RevolverState:
+    """Warm-start state from a previous assignment (streaming repartitioning).
+
+    `labels` carries the partition of up to `len(labels)` surviving vertices
+    (clipped to [0, k)); vertices beyond it — newly arrived in the stream —
+    draw a random label, exactly like a cold `revolver_init` would. `probs`
+    optionally carries the LA probability tensor of a previous state
+    ([n_blocks', block_v', k]); surviving vertices keep their learned
+    automata, new vertices start at the uniform 1/k of Section IV-C. Loads
+    are recomputed from the (possibly changed) degree vector, so the
+    invariant b(l) == sum deg over labels==l holds from step 0.
+
+    `prob_sharpen` in [0, 1) blends every automaton toward a one-hot on its
+    carried label: p <- (1-s) p + s onehot(label). Carried probabilities
+    from a refinement that halted early are still diffuse, which makes the
+    roulette wheel re-explore settled vertices; sharpening converts the
+    carried assignment into LA confidence so refinement spends its steps on
+    genuinely contested vertices. s=0 (default) carries state untouched.
+    """
+    if not 0.0 <= prob_sharpen < 1.0:
+        raise ValueError(f"prob_sharpen must be in [0, 1), got {prob_sharpen}")
+    k_lab, key = jax.random.split(key)
+    lab = jax.random.randint(k_lab, (dg.n_pad,), 0, cfg.k, dtype=jnp.int32)
+    carried = jnp.clip(jnp.asarray(labels, jnp.int32), 0, cfg.k - 1)
+    m_keep = min(int(carried.shape[0]), dg.n_pad)
+    lab = jax.lax.dynamic_update_slice(lab, carried[:m_keep], (0,))
+    lab = jnp.where(dg.vmask, lab, 0)
+    loads = jnp.zeros((cfg.k,), jnp.float32).at[lab].add(dg.deg_out)
+
+    flat = jnp.full((dg.n_pad, cfg.k), 1.0 / cfg.k, jnp.float32)
+    if probs is not None:
+        p = jnp.asarray(probs, jnp.float32)
+        if p.shape[-1] != cfg.k:
+            raise ValueError(
+                f"carried probs have k={p.shape[-1]}, config expects k={cfg.k}")
+        p = p.reshape(-1, cfg.k)
+        p_keep = min(int(p.shape[0]), dg.n_pad)
+        flat = jax.lax.dynamic_update_slice(flat, p[:p_keep], (0, 0))
+    if prob_sharpen > 0.0:
+        onehot = jax.nn.one_hot(lab, cfg.k, dtype=jnp.float32)
+        flat = (1.0 - prob_sharpen) * flat + prob_sharpen * onehot
+    return RevolverState(
+        labels=lab,
+        lam=lab,
+        probs=flat.reshape(dg.n_blocks, dg.block_v, cfg.k),
+        loads=loads,
+        key=key,
+        step=jnp.zeros((), jnp.int32),
+        score=jnp.zeros((), jnp.float32),
+    )
+
+
 def _chunk_step(cfg: RevolverConfig, block_v: int, carry: Tuple, xs: Tuple):
     """Process one asynchronous chunk (see module docstring)."""
     labels, lam, loads, cap, key, score_sum = carry

@@ -3,6 +3,15 @@
 Runs jitted supersteps, tracks the paper's quality metrics each step, and
 halts when the LP score fails to improve by `theta` for `patience`
 consecutive steps (paper settings: theta=0.001, patience=5, max 290 steps).
+
+Host/device synchronization: materializing `state.score` as a python float
+blocks on the device every superstep, serializing dispatch. With
+`track_history=False` the loop instead buffers the per-step score arrays and
+fetches them with a single `jax.device_get` every `sync_every` supersteps,
+letting XLA pipeline the window. Convergence is then detected up to
+`sync_every - 1` steps late (the extra steps are still valid partitioning
+steps and are reflected in `PartitionResult.steps`); `sync_every=1` (the
+default) reproduces the fully synchronous behavior exactly.
 """
 from __future__ import annotations
 
@@ -15,8 +24,18 @@ import numpy as np
 
 from repro.core.device_graph import DeviceGraph, prepare_device_graph
 from repro.core.metrics import local_edges, max_normalized_load
-from repro.core.revolver import RevolverConfig, revolver_init, revolver_superstep
-from repro.core.spinner import SpinnerConfig, spinner_init, spinner_superstep
+from repro.core.revolver import (
+    RevolverConfig,
+    revolver_init,
+    revolver_init_from_labels,
+    revolver_superstep,
+)
+from repro.core.spinner import (
+    SpinnerConfig,
+    spinner_init,
+    spinner_init_from_labels,
+    spinner_superstep,
+)
 from repro.core.static_partitioners import hash_partition, range_partition
 from repro.graphs.csr import Graph
 
@@ -32,6 +51,80 @@ class PartitionResult:
     max_norm_load: float
     history: Dict[str, List[float]]
     wall_s: float
+    probs: Optional[np.ndarray] = None  # [n_blocks, block_v, k] final LA state
+                                        # (revolver with keep_probs=True only;
+                                        # feeds warm restarts)
+
+
+def run_convergence_loop(
+    step_fn,
+    state,
+    *,
+    max_steps: int,
+    patience: int,
+    theta: float,
+    sync_every: int = 1,
+    on_step=None,
+    on_score=None,
+):
+    """Drive `step_fn` with the paper's score-stall halting (Section IV-D
+    step 9): stop after `patience` consecutive steps whose score improves by
+    less than `theta`. Scores are fetched from device in `sync_every`-sized
+    windows (see module docstring); convergence is then detected up to
+    `sync_every - 1` steps late. Shared by `run_partitioner` and the
+    streaming `StreamRunner` so the halting semantics cannot drift.
+
+    `on_step(state)` fires after every superstep (history tracking);
+    `on_score(float)` fires for every drained score, in step order.
+
+    Returns (state, steps_executed, converged).
+    """
+    prev_score, stall, converged = -np.inf, 0, False
+    steps = 0
+    pending: list = []
+    for step in range(max_steps):
+        state = step_fn(state)
+        steps = step + 1
+        pending.append(state.score)
+        if on_step is not None:
+            on_step(state)
+        if len(pending) < sync_every and steps < max_steps:
+            continue
+        for score in (float(s) for s in jax.device_get(pending)):
+            if on_score is not None:
+                on_score(score)
+            if score - prev_score < theta:
+                stall += 1
+                if stall >= patience:
+                    converged = True
+                    break
+            else:
+                stall = 0
+            prev_score = score
+        pending = []
+        if converged:
+            break
+    return state, steps, converged
+
+
+def _make_cfg(cls, k: int, max_steps: Optional[int], cfg_kwargs: dict):
+    """Build an algorithm config, rejecting unknown keys loudly.
+
+    The spinner branch used to silently drop revolver-only kwargs, which
+    turned typos (e.g. `capacty_mode=`) into no-ops; both algorithms now
+    raise TypeError on anything their config dataclass doesn't define.
+    """
+    valid = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(cfg_kwargs) - valid)
+    if unknown:
+        raise TypeError(
+            f"unknown config kwargs for {cls.__name__}: {unknown}; "
+            f"valid keys: {sorted(valid - {'k'})}"
+        )
+    cfg = cls(k=k, **cfg_kwargs)
+    if max_steps is not None:
+        cfg = dataclasses.replace(cfg, max_steps=max_steps)
+    return cfg
 
 
 def run_partitioner(
@@ -44,19 +137,39 @@ def run_partitioner(
     max_steps: Optional[int] = None,
     track_history: bool = True,
     dg: Optional[DeviceGraph] = None,
+    sync_every: int = 1,
+    init_labels: Optional[np.ndarray] = None,
+    init_probs: Optional[np.ndarray] = None,
+    init_sharpen: float = 0.0,
+    keep_probs: bool = False,
     **cfg_kwargs,
 ) -> PartitionResult:
     """Partition `graph` into `k` parts with the named algorithm.
 
     algo: "revolver" | "spinner" | "hash" | "range".
-    Extra kwargs flow into the algorithm config dataclass.
+    Extra kwargs flow into the algorithm config dataclass (unknown keys raise
+    TypeError). `sync_every` batches device->host score fetches (see module
+    docstring). `init_labels` (and, for revolver, `init_probs` /
+    `init_sharpen`) warm-start the state from a previous assignment — the
+    streaming subsystem's incremental repartitioning path. Carrying labels
+    without LA state leaves the automata uniform, whose first exploration
+    steps can wreck the carried assignment; `init_sharpen > 0` blends the
+    automata toward the carried labels to prevent that (see
+    `revolver_init_from_labels`). `keep_probs=True` returns the final LA
+    probability tensor in `PartitionResult.probs` (needed to chain warm
+    restarts); it is off by default because fetching [n_pad, k] floats to
+    host is a real cost at production scale.
     """
     t0 = time.time()
+    if sync_every < 1:
+        raise ValueError(f"sync_every must be >= 1, got {sync_every}")
     if dg is None:
         dg = prepare_device_graph(graph, n_blocks=n_blocks)
     key = jax.random.PRNGKey(seed)
 
     if algo in ("hash", "range"):
+        if init_labels is not None or init_probs is not None or init_sharpen:
+            raise TypeError(f"{algo!r} is stateless; warm-start args are meaningless")
         lab_fn = hash_partition if algo == "hash" else range_partition
         labels = jax.numpy.pad(lab_fn(graph.n, k), (0, dg.n_pad - graph.n))
         le = float(local_edges(labels, dg.dir_src, dg.dir_dst))
@@ -69,43 +182,46 @@ def run_partitioner(
         )
 
     if algo == "revolver":
-        cfg = RevolverConfig(k=k, **cfg_kwargs)
-        if max_steps is not None:
-            cfg = dataclasses.replace(cfg, max_steps=max_steps)
-        state = revolver_init(dg, cfg, key)
+        cfg = _make_cfg(RevolverConfig, k, max_steps, cfg_kwargs)
+        if init_labels is not None:
+            state = revolver_init_from_labels(dg, cfg, key, init_labels,
+                                              probs=init_probs,
+                                              prob_sharpen=init_sharpen)
+        else:
+            if init_probs is not None:
+                raise TypeError("init_probs requires init_labels")
+            if init_sharpen:
+                raise TypeError("init_sharpen requires init_labels")
+            state = revolver_init(dg, cfg, key)
         step_fn = lambda s: revolver_superstep(dg, cfg, s)
     elif algo == "spinner":
-        cfg = SpinnerConfig(k=k, **{k_: v for k_, v in cfg_kwargs.items()
-                                    if k_ in {f.name for f in dataclasses.fields(SpinnerConfig)}})
-        if max_steps is not None:
-            cfg = dataclasses.replace(cfg, max_steps=max_steps)
-        state = spinner_init(dg, cfg, key)
+        if init_probs is not None or init_sharpen:
+            raise TypeError("spinner has no LA state; init_probs/init_sharpen are meaningless")
+        cfg = _make_cfg(SpinnerConfig, k, max_steps, cfg_kwargs)
+        if init_labels is not None:
+            state = spinner_init_from_labels(dg, cfg, key, init_labels)
+        else:
+            state = spinner_init(dg, cfg, key)
         step_fn = lambda s: spinner_superstep(dg, cfg, s)
     else:
         raise ValueError(f"unknown algorithm {algo!r}")
 
     history: Dict[str, List[float]] = {"local_edges": [], "max_norm_load": [], "score": []}
-    prev_score, stall, converged = -np.inf, 0, False
-    steps = 0
-    for step in range(cfg.max_steps):
-        state = step_fn(state)
-        steps = step + 1
-        score = float(state.score)
-        if track_history:
-            history["local_edges"].append(float(local_edges(state.labels, dg.dir_src, dg.dir_dst)))
-            history["max_norm_load"].append(
-                float(max_normalized_load(state.labels[: graph.n], dg.deg_out[: graph.n], k)))
-            history["score"].append(score)
-        # paper halting (Section IV-D step 9): halt after `patience`
-        # consecutive steps with (S^i - S^{i-1}) < theta
-        if score - prev_score < cfg.theta:
-            stall += 1
-            if stall >= cfg.patience:
-                converged = True
-                break
-        else:
-            stall = 0
-        prev_score = score
+
+    def on_step(s):
+        history["local_edges"].append(float(local_edges(s.labels, dg.dir_src, dg.dir_dst)))
+        history["max_norm_load"].append(
+            float(max_normalized_load(s.labels[: graph.n], dg.deg_out[: graph.n], k)))
+
+    state, steps, converged = run_convergence_loop(
+        step_fn, state,
+        max_steps=cfg.max_steps, patience=cfg.patience, theta=cfg.theta,
+        # history tracking materializes floats every step anyway, so the
+        # batched fetch only kicks in on the metrics-free fast path.
+        sync_every=1 if track_history else sync_every,
+        on_step=on_step if track_history else None,
+        on_score=history["score"].append if track_history else None,
+    )
 
     labels = np.asarray(state.labels[: graph.n])
     le = float(local_edges(state.labels, dg.dir_src, dg.dir_dst))
@@ -113,4 +229,5 @@ def run_partitioner(
     return PartitionResult(
         algo=algo, k=k, labels=labels, steps=steps, converged=converged,
         local_edges=le, max_norm_load=ml, history=history, wall_s=time.time() - t0,
+        probs=np.asarray(state.probs) if (keep_probs and algo == "revolver") else None,
     )

@@ -43,6 +43,21 @@ def spinner_init(dg: DeviceGraph, cfg: SpinnerConfig, key: jax.Array) -> Spinner
     return SpinnerState(labels, loads, key, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
 
 
+def spinner_init_from_labels(
+    dg: DeviceGraph, cfg: SpinnerConfig, key: jax.Array, labels: jnp.ndarray
+) -> SpinnerState:
+    """Warm-start from a previous assignment; new vertices draw random labels
+    (mirrors `revolver_init_from_labels`, minus the LA state Spinner lacks)."""
+    k_lab, key = jax.random.split(key)
+    lab = jax.random.randint(k_lab, (dg.n_pad,), 0, cfg.k, dtype=jnp.int32)
+    carried = jnp.clip(jnp.asarray(labels, jnp.int32), 0, cfg.k - 1)
+    m_keep = min(int(carried.shape[0]), dg.n_pad)
+    lab = jax.lax.dynamic_update_slice(lab, carried[:m_keep], (0,))
+    lab = jnp.where(dg.vmask, lab, 0)
+    loads = jnp.zeros((cfg.k,), jnp.float32).at[lab].add(dg.deg_out)
+    return SpinnerState(lab, loads, key, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
+
+
 @partial(jax.jit, static_argnames=("n", "n_pad", "cfg"))
 def _spinner_impl(edge_src, edge_dst, edge_w, deg_out, inv_wsum, vmask, cap,
                   state: SpinnerState, *, n: int, n_pad: int, cfg: SpinnerConfig):

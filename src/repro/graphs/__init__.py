@@ -1,13 +1,34 @@
-"""Graph substrate: CSR storage, synthetic dataset suite, TPU block padding."""
-from repro.graphs.csr import Graph, build_graph, graph_stats
+"""Graph substrate: CSR storage, synthetic dataset suite, TPU block padding,
+and the sorted-key incremental-merge primitives used by repro.streaming."""
+from repro.graphs.csr import (
+    Graph,
+    build_graph,
+    canonicalize_edges,
+    decode_edge_keys,
+    encode_edge_keys,
+    graph_from_sorted_state,
+    graph_stats,
+    merge_sorted_keys,
+    remove_sorted_keys,
+    sorted_isin,
+)
 from repro.graphs.generators import erdos_renyi, grid_road, rmat
 from repro.graphs.datasets import DATASETS, load_dataset
-from repro.graphs.blocking import BlockedEdges, block_edges
+from repro.graphs.blocking import BlockedEdges, block_edges, block_slab_sizes, fill_block_slab
 
 __all__ = [
     "Graph",
     "build_graph",
+    "canonicalize_edges",
+    "decode_edge_keys",
+    "encode_edge_keys",
+    "graph_from_sorted_state",
     "graph_stats",
+    "merge_sorted_keys",
+    "remove_sorted_keys",
+    "sorted_isin",
+    "block_slab_sizes",
+    "fill_block_slab",
     "erdos_renyi",
     "grid_road",
     "rmat",

@@ -38,15 +38,53 @@ class BlockedEdges:
     pad_frac: float        # fraction of padded slots (diagnostic)
 
 
+def block_slab_sizes(adj_ptr: np.ndarray, n: int, block_v: int, n_blocks: int) -> np.ndarray:
+    """Per-block symmetrized-edge counts (the slab lengths before padding)."""
+    lo = np.minimum(np.arange(n_blocks, dtype=np.int64) * block_v, n)
+    hi = np.minimum(lo + block_v, n)
+    return (adj_ptr[hi] - adj_ptr[lo]).astype(np.int64)
+
+
+def fill_block_slab(
+    g: Graph,
+    blk: int,
+    block_v: int,
+    edge_dst: np.ndarray,
+    edge_row: np.ndarray,
+    edge_w: np.ndarray,
+) -> int:
+    """Rewrite one block's slab row in place from `g`'s adjacency.
+
+    Zeroes the padded tail so stale entries from a previous layout cannot
+    survive an incremental update. Returns the slab's real edge count.
+    Raises ValueError if the block no longer fits `e_max` (the caller must
+    re-pad, see repro.streaming.delta_graph).
+    """
+    e_max = edge_dst.shape[1]
+    v0 = blk * block_v
+    v1 = min(v0 + block_v, g.n)
+    lo, hi = int(g.adj_ptr[v0]), int(g.adj_ptr[v1])
+    cnt = hi - lo
+    if cnt > e_max:
+        raise ValueError(f"block {blk} overflows e_max={e_max} with {cnt} edges")
+    rows = np.repeat(
+        np.arange(v0, v1, dtype=np.int64),
+        np.diff(g.adj_ptr[v0 : v1 + 1]).astype(np.int64),
+    )
+    edge_dst[blk, :cnt] = g.adj_idx[lo:hi]
+    edge_row[blk, :cnt] = (rows - v0).astype(np.int32)
+    edge_w[blk, :cnt] = g.adj_w[lo:hi]
+    edge_dst[blk, cnt:] = 0
+    edge_row[blk, cnt:] = 0
+    edge_w[blk, cnt:] = 0.0
+    return cnt
+
+
 def block_edges(g: Graph, block_v: int = 256, edge_chunk: int = 256) -> BlockedEdges:
     n_blocks = -(-g.n // block_v)
     n_pad = n_blocks * block_v
 
-    counts = np.diff(g.adj_ptr)
-    block_sizes = np.add.reduceat(
-        np.concatenate([counts, np.zeros(n_pad - g.n, dtype=counts.dtype)]),
-        np.arange(0, n_pad, block_v),
-    )
+    block_sizes = block_slab_sizes(g.adj_ptr, g.n, block_v, n_blocks)
     e_max = int(block_sizes.max()) if n_blocks else edge_chunk
     e_max = -(-max(e_max, 1) // edge_chunk) * edge_chunk
 
@@ -54,15 +92,8 @@ def block_edges(g: Graph, block_v: int = 256, edge_chunk: int = 256) -> BlockedE
     edge_row = np.zeros((n_blocks, e_max), dtype=np.int32)
     edge_w = np.zeros((n_blocks, e_max), dtype=np.float32)
 
-    rows_all = np.repeat(np.arange(g.n, dtype=np.int64), counts.astype(np.int64))
     for blk in range(n_blocks):
-        v0 = blk * block_v
-        v1 = min(v0 + block_v, g.n)
-        lo, hi = int(g.adj_ptr[v0]), int(g.adj_ptr[v1])
-        cnt = hi - lo
-        edge_dst[blk, :cnt] = g.adj_idx[lo:hi]
-        edge_row[blk, :cnt] = (rows_all[lo:hi] - v0).astype(np.int32)
-        edge_w[blk, :cnt] = g.adj_w[lo:hi]
+        fill_block_slab(g, blk, block_v, edge_dst, edge_row, edge_w)
 
     total = n_blocks * e_max
     pad_frac = 1.0 - (g.num_sym_edges / total) if total else 0.0

@@ -112,6 +112,103 @@ def build_graph(src: np.ndarray, dst: np.ndarray, n: int) -> Graph:
     )
 
 
+# ---------------------------------------------------------------------------
+# Incremental-merge primitives (streaming ingestion; see repro.streaming).
+#
+# The streaming subsystem never re-runs the O(m log m) `build_graph` sort on
+# the full edge list. Instead it maintains *sorted int64 key arrays*
+# (key = src * n + dst) for the directed edge set and the symmetrized
+# adjacency, and merges each delta in O(m + d log m) with the helpers below.
+# ---------------------------------------------------------------------------
+
+
+def encode_edge_keys(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
+    """Pack (src, dst) pairs into sortable int64 keys: key = src * n + dst."""
+    return np.asarray(src, dtype=np.int64) * n + np.asarray(dst, dtype=np.int64)
+
+
+def decode_edge_keys(keys: np.ndarray, n: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Inverse of `encode_edge_keys`; returns int32 (src, dst)."""
+    return (keys // n).astype(np.int32), (keys % n).astype(np.int32)
+
+
+def canonicalize_edges(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
+    """Sorted unique directed-edge keys with self loops removed.
+
+    The normal form every delta is brought into before merging: duplicates
+    within the batch collapse, (v, v) edges vanish, and the result is sorted
+    so it can be merged against the maintained key arrays without a re-sort.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if src.size == 0:
+        return np.empty(0, dtype=np.int64)
+    keep = src != dst
+    return np.unique(src[keep] * n + dst[keep])
+
+
+def sorted_isin(keys: np.ndarray, queries: np.ndarray) -> np.ndarray:
+    """Membership mask of `queries` in the *sorted* array `keys`."""
+    if keys.size == 0:
+        return np.zeros(queries.shape, dtype=bool)
+    pos = np.searchsorted(keys, queries)
+    pos_c = np.minimum(pos, keys.size - 1)
+    return (pos < keys.size) & (keys[pos_c] == queries)
+
+
+def merge_sorted_keys(keys: np.ndarray, add: np.ndarray) -> np.ndarray:
+    """Insert sorted unique `add` (disjoint from `keys`) keeping sort order.
+
+    O(m + d): one searchsorted over the existing array plus a single copy —
+    no re-sort of the maintained edge set.
+    """
+    if add.size == 0:
+        return keys
+    return np.insert(keys, np.searchsorted(keys, add), add)
+
+
+def remove_sorted_keys(keys: np.ndarray, drop: np.ndarray) -> np.ndarray:
+    """Remove every key in sorted `drop` (all present) keeping sort order."""
+    if drop.size == 0:
+        return keys
+    return np.delete(keys, np.searchsorted(keys, drop))
+
+
+def graph_from_sorted_state(
+    n: int,
+    dir_keys: np.ndarray,
+    sym_keys: np.ndarray,
+    sym_w: np.ndarray,
+) -> Graph:
+    """Materialize a `Graph` container from maintained sorted key arrays.
+
+    O(m) vectorized — the keys are already sorted, so both CSRs fall out of
+    a bincount + cumsum with no sorting. This is the bridge between the
+    incremental streaming state and every batch consumer (metrics, runner,
+    DeviceGraph preparation).
+    """
+    d_src, d_dst = decode_edge_keys(dir_keys, n)
+    deg_out = np.bincount(d_src, minlength=n).astype(np.int32)
+    row_ptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(deg_out, out=row_ptr[1:])
+
+    a_src, a_dst = decode_edge_keys(sym_keys, n)
+    adj_deg = np.bincount(a_src, minlength=n).astype(np.int64)
+    adj_ptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(adj_deg, out=adj_ptr[1:])
+
+    return Graph(
+        n=n,
+        m=int(dir_keys.size),
+        row_ptr=row_ptr,
+        col_idx=d_dst,
+        adj_ptr=adj_ptr,
+        adj_idx=a_dst,
+        adj_w=np.asarray(sym_w, dtype=np.float32),
+        deg_out=deg_out,
+    )
+
+
 def graph_stats(g: Graph) -> Dict[str, float]:
     """Table I statistics: density and Pearson's 1st skewness coefficient.
 

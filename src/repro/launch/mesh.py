@@ -8,17 +8,28 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_compat(shape, axes):
+    """`jax.make_mesh` across JAX versions.
+
+    `axis_types` / `jax.sharding.AxisType` only exist on newer JAX; older
+    versions (e.g. 0.4.x) default every axis to the same auto behavior, so
+    omitting the argument is semantically equivalent there.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """single-pod: (data=16, model=16) = 256 chips;
     multi-pod:  (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh():
     """1-chip mesh with the production axis names (tests/smoke runs)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((1, 1), ("data", "model"))

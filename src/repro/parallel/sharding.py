@@ -145,6 +145,14 @@ def dp_axes(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
+def _squeeze_axis(ax):
+    """A 1-tuple PartitionSpec entry shards identically to its scalar;
+    normalize so spec entries compare stably against axis names."""
+    if isinstance(ax, tuple) and len(ax) == 1:
+        return ax[0]
+    return ax
+
+
 def _dp_size(mesh) -> int:
     return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
 
@@ -198,7 +206,7 @@ def cache_specs(cfg, cache_shape, mesh) -> object:
                 spec[s_ax] = "model"           # SPMD flash-decode
             if not batch_ok and spec[s_ax] is None and \
                     shape[s_ax] % (dsz * 1) == 0:
-                spec[s_ax] = dp                # long-context: seq over data
+                spec[s_ax] = _squeeze_axis(dp)  # long-context: seq over data
             elif not batch_ok and spec[s_ax] == "model" and \
                     shape[s_ax] % (dsz * msz) == 0:
                 spec[s_ax] = ("model",) + dp   # seq over both

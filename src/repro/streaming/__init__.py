@@ -1,0 +1,35 @@
+"""Streaming graph ingestion + incremental Revolver repartitioning.
+
+Lifecycle: **delta -> merge -> warm-start -> refine**.
+
+  * `stream` — `EdgeDelta` batches, the `StreamBuffer` front door, and
+    `stream_from_graph` to replay any static dataset as a timestamped stream;
+  * `delta_graph` — `IncrementalGraph` (sorted-key CSR maintenance, O(m + d
+    log m) per delta) and `IncrementalDeviceGraph` (shape-stable padded
+    device layout, dirty-block slab rewrites, headroom re-pads);
+  * `runner` — `StreamRunner`, which warm-starts Revolver from the carried
+    labels + LA probabilities after each merge and refines for a handful of
+    supersteps, with an optional prioritized (high-degree-first) restream
+    pass.
+
+See README.md in this directory for the design rationale.
+"""
+from repro.streaming.stream import EdgeDelta, StreamBuffer, stream_from_graph
+from repro.streaming.delta_graph import (
+    IncrementalDeviceGraph,
+    IncrementalGraph,
+    MergeInfo,
+)
+from repro.streaming.runner import DeltaReport, StreamConfig, StreamRunner
+
+__all__ = [
+    "EdgeDelta",
+    "StreamBuffer",
+    "stream_from_graph",
+    "IncrementalGraph",
+    "IncrementalDeviceGraph",
+    "MergeInfo",
+    "StreamConfig",
+    "StreamRunner",
+    "DeltaReport",
+]

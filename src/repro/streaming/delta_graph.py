@@ -1,0 +1,245 @@
+"""Incremental graph state: merge edge deltas without a full host rebuild.
+
+Batch mode pays O(m log m) in `build_graph` (sort + dedup of the whole edge
+list) and a full re-block per graph. Streaming cannot afford that per delta.
+This module maintains three sorted structures across deltas:
+
+  * `dir_keys`  — sorted int64 keys of the directed edge set;
+  * `sym_keys`, `sym_w` — sorted keys + eq.-(4) weights of the symmetrized
+    adjacency (weight 1 = one direction present, 2 = both);
+  * the padded block slabs of the `DeviceGraph` (blk_dst / blk_row / blk_w).
+
+A delta of d events merges in O(m + d log m): canonicalize the delta (sort +
+dedup of d keys only), splice it into the maintained arrays with
+searchsorted-based inserts/deletes, recompute the eq.-(4) weights for the
+touched vertex *pairs* only, and rewrite only the block slabs owning a
+touched vertex. The device-side block layout (n_pad, block_v, e_max) is
+reused across deltas, so the jitted Revolver superstep never recompiles —
+until a block overflows `e_max`, at which point the slabs are re-padded with
+headroom (`e_headroom`) and one recompile is paid.
+
+The vertex space is declared up front (`n`): cloud deployments know their id
+space (or reserve headroom); vertices materialize implicitly as edges touch
+them and contribute nothing while isolated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.device_graph import DeviceGraph
+from repro.graphs.blocking import block_slab_sizes, fill_block_slab
+from repro.graphs.csr import (
+    Graph,
+    canonicalize_edges,
+    decode_edge_keys,
+    graph_from_sorted_state,
+    merge_sorted_keys,
+    remove_sorted_keys,
+    sorted_isin,
+)
+from repro.streaming.stream import EdgeDelta
+
+
+@dataclasses.dataclass
+class MergeInfo:
+    """What one delta merge did (diagnostics + StreamRunner reporting)."""
+
+    added: int = 0              # directed edges actually inserted
+    deleted: int = 0            # directed edges actually removed
+    dup_dropped: int = 0        # insertions already present (or in-delta dups)
+    missing_dropped: int = 0    # deletions of absent edges
+    touched_vertices: Optional[np.ndarray] = None   # endpoints of changed pairs
+    dirty_blocks: int = 0       # block slabs rewritten (device layer)
+    repadded: bool = False      # e_max overflow forced a full re-pad
+    m: int = 0                  # |E| after the merge
+
+
+class IncrementalGraph:
+    """Host-side CSR state maintained across deltas (see module docstring)."""
+
+    def __init__(self, n: int):
+        if n <= 0:
+            raise ValueError(f"vertex space must be positive, got {n}")
+        self.n = n
+        self.dir_keys = np.empty(0, dtype=np.int64)
+        self.sym_keys = np.empty(0, dtype=np.int64)
+        self.sym_w = np.empty(0, dtype=np.float32)
+
+    @property
+    def m(self) -> int:
+        return int(self.dir_keys.size)
+
+    def apply(self, delta: EdgeDelta) -> MergeInfo:
+        """Merge one delta. Deletions apply before insertions, so an edge
+        deleted and re-added within the same delta ends up present."""
+        n = self.n
+        info = MergeInfo()
+
+        dels = canonicalize_edges(delta.del_src, delta.del_dst, n)
+        dels = dels[sorted_isin(self.dir_keys, dels)]
+        info.missing_dropped = delta.n_del - int(dels.size)
+        dir_mid = remove_sorted_keys(self.dir_keys, dels)
+
+        adds = canonicalize_edges(delta.add_src, delta.add_dst, n)
+        adds = adds[~sorted_isin(dir_mid, adds)]
+        info.dup_dropped = delta.n_add - int(adds.size)
+        self.dir_keys = merge_sorted_keys(dir_mid, adds)
+        info.added, info.deleted = int(adds.size), int(dels.size)
+        info.m = self.m
+
+        # ---- eq.-(4) weight maintenance for the touched pairs only --------
+        changed = np.concatenate([dels, adds])
+        if changed.size:
+            u, v = decode_edge_keys(changed, n)
+            pu, pv = np.minimum(u, v).astype(np.int64), np.maximum(u, v).astype(np.int64)
+            pairs = np.unique(pu * n + pv)
+            pu, pv = decode_edge_keys(pairs, n)
+            pu, pv = pu.astype(np.int64), pv.astype(np.int64)
+            fwd, rev = pu * n + pv, pv * n + pu
+            cnt = (
+                sorted_isin(self.dir_keys, fwd).astype(np.int8)
+                + sorted_isin(self.dir_keys, rev).astype(np.int8)
+            )
+            present = sorted_isin(self.sym_keys, fwd)
+
+            # slots to drop: pair lost its last direction
+            gone = present & (cnt == 0)
+            if gone.any():
+                drop = np.sort(np.concatenate([fwd[gone], rev[gone]]))
+                idx = np.searchsorted(self.sym_keys, drop)
+                self.sym_keys = np.delete(self.sym_keys, idx)
+                self.sym_w = np.delete(self.sym_w, idx)
+
+            # weight rewrites: pair survives with a (possibly) new direction count
+            upd = present & (cnt > 0)
+            if upd.any():
+                keys = np.concatenate([fwd[upd], rev[upd]])
+                w = np.concatenate([cnt[upd], cnt[upd]]).astype(np.float32)
+                self.sym_w[np.searchsorted(self.sym_keys, keys)] = w
+
+            # fresh slots: pair gained its first direction
+            new = (~present) & (cnt > 0)
+            if new.any():
+                keys = np.concatenate([fwd[new], rev[new]])
+                w = np.concatenate([cnt[new], cnt[new]]).astype(np.float32)
+                order = np.argsort(keys)
+                keys, w = keys[order], w[order]
+                idx = np.searchsorted(self.sym_keys, keys)
+                self.sym_keys = np.insert(self.sym_keys, idx, keys)
+                self.sym_w = np.insert(self.sym_w, idx, w)
+
+            info.touched_vertices = np.unique(np.concatenate([pu, pv])).astype(np.int64)
+        else:
+            info.touched_vertices = np.empty(0, dtype=np.int64)
+        return info
+
+    def to_graph(self) -> Graph:
+        """O(m) materialization of the standard `Graph` container."""
+        return graph_from_sorted_state(self.n, self.dir_keys, self.sym_keys, self.sym_w)
+
+
+class IncrementalDeviceGraph:
+    """Pads an evolving graph into a shape-stable `DeviceGraph`.
+
+    `apply(delta)` returns a fresh `DeviceGraph` whose blocked arrays keep
+    their shapes across deltas (jit-cache friendly); only slabs of blocks
+    owning a touched vertex are rewritten. The flat metric arrays
+    (dir_src/dir_dst, edge_*) track the true edge count and therefore change
+    length — they feed cheap eager metrics, not the jitted superstep.
+    """
+
+    def __init__(
+        self,
+        n: int,
+        *,
+        n_blocks: int = 8,
+        block_multiple: int = 8,
+        edge_chunk: int = 256,
+        e_headroom: float = 1.5,
+    ):
+        self.inc = IncrementalGraph(n)
+        n_blocks = max(1, min(n_blocks, n))
+        block_v = -(-n // n_blocks)
+        block_v = -(-block_v // block_multiple) * block_multiple
+        self.block_v = block_v
+        self.n_blocks = -(-n // block_v)
+        self.n_pad = self.n_blocks * block_v
+        self.edge_chunk = edge_chunk
+        self.e_headroom = float(e_headroom)
+        self.e_max = 0
+        self._blk_dst = np.zeros((self.n_blocks, 0), dtype=np.int32)
+        self._blk_row = np.zeros((self.n_blocks, 0), dtype=np.int32)
+        self._blk_w = np.zeros((self.n_blocks, 0), dtype=np.float32)
+        self.graph: Optional[Graph] = None
+        self.device_graph: Optional[DeviceGraph] = None
+
+    @property
+    def n(self) -> int:
+        return self.inc.n
+
+    def _round_e(self, need: int) -> int:
+        return -(-max(need, 1) // self.edge_chunk) * self.edge_chunk
+
+    def apply(self, delta: EdgeDelta) -> Tuple[DeviceGraph, MergeInfo]:
+        info = self.inc.apply(delta)
+        g = self.inc.to_graph()
+        self.graph = g
+
+        sizes = block_slab_sizes(g.adj_ptr, g.n, self.block_v, self.n_blocks)
+        need = int(sizes.max()) if sizes.size else 0
+        if need > self.e_max or self.e_max == 0:
+            # overflow: re-pad every slab with headroom (one jit recompile)
+            self.e_max = self._round_e(int(need * self.e_headroom))
+            self._blk_dst = np.zeros((self.n_blocks, self.e_max), dtype=np.int32)
+            self._blk_row = np.zeros((self.n_blocks, self.e_max), dtype=np.int32)
+            self._blk_w = np.zeros((self.n_blocks, self.e_max), dtype=np.float32)
+            dirty = np.arange(self.n_blocks)
+            info.repadded = True
+        else:
+            touched = info.touched_vertices
+            dirty = np.unique(touched // self.block_v) if touched.size else np.empty(0, np.int64)
+        for blk in dirty:
+            fill_block_slab(g, int(blk), self.block_v, self._blk_dst, self._blk_row, self._blk_w)
+        info.dirty_blocks = int(len(dirty))
+
+        self.device_graph = self._to_device(g)
+        return self.device_graph, info
+
+    def _to_device(self, g: Graph) -> DeviceGraph:
+        n_pad = self.n_pad
+        deg_out = np.zeros(n_pad, dtype=np.float32)
+        deg_out[: g.n] = g.deg_out.astype(np.float32)
+        wsum = np.zeros(n_pad, dtype=np.float32)
+        np.add.at(
+            wsum,
+            np.repeat(np.arange(g.n), np.diff(g.adj_ptr).astype(np.int64)),
+            g.adj_w,
+        )
+        inv_wsum = np.where(wsum > 0, 1.0 / np.maximum(wsum, 1e-30), 0.0).astype(np.float32)
+        vmask = np.zeros(n_pad, dtype=bool)
+        vmask[: g.n] = True
+        src_flat = np.repeat(np.arange(g.n, dtype=np.int32), np.diff(g.adj_ptr).astype(np.int64))
+        dir_src = np.repeat(np.arange(g.n, dtype=np.int32), np.diff(g.row_ptr).astype(np.int64))
+        return DeviceGraph(
+            n=g.n,
+            n_pad=n_pad,
+            m=g.m,
+            n_blocks=self.n_blocks,
+            block_v=self.block_v,
+            e_max=self.e_max,
+            edge_src=jnp.asarray(src_flat),
+            edge_dst=jnp.asarray(g.adj_idx),
+            edge_w=jnp.asarray(g.adj_w),
+            dir_src=jnp.asarray(dir_src),
+            dir_dst=jnp.asarray(g.col_idx),
+            blk_dst=jnp.asarray(self._blk_dst),
+            blk_row=jnp.asarray(self._blk_row),
+            blk_w=jnp.asarray(self._blk_w),
+            deg_out=jnp.asarray(deg_out),
+            inv_wsum=jnp.asarray(inv_wsum),
+            vmask=jnp.asarray(vmask),
+        )

@@ -1,0 +1,80 @@
+"""Deterministic stand-in for `hypothesis` when the real library is absent.
+
+The test image does not ship hypothesis and nothing may be pip-installed, so
+`conftest.py` registers this module under the `hypothesis` name as a
+fallback. Property tests degrade into seeded fuzz tests: `@given` draws
+`max_examples` pseudo-random examples per strategy from a fixed-seed RNG
+(no shrinking, no example database). When the real hypothesis is
+installed it always wins — see conftest.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import types
+
+DEFAULT_MAX_EXAMPLES = 20
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: random.Random):
+        return self._sample(rng)
+
+
+def _integers(min_value=0, max_value=1 << 30) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(int(min_value), int(max_value)))
+
+
+def _floats(min_value=0.0, max_value=1.0, **_unused) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(float(min_value), float(max_value)))
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def _sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.floats = _floats
+strategies.booleans = _booleans
+strategies.sampled_from = _sampled_from
+
+
+def given(*args, **strategy_kwargs):
+    if args:
+        raise TypeError("the hypothesis stub only supports keyword strategies")
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*call_args, **call_kwargs):
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(_SEED)
+            for _ in range(n):
+                drawn = {name: s.sample(rng) for name, s in strategy_kwargs.items()}
+                fn(*call_args, **drawn, **call_kwargs)
+
+        # pytest must see the wrapper's (*args, **kwargs) signature — not the
+        # wrapped function's — or it would treat the strategy parameters as
+        # missing fixtures.
+        del wrapper.__wrapped__
+        wrapper._stub_max_examples = DEFAULT_MAX_EXAMPLES
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_unused):
+    def decorate(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return decorate

@@ -1,0 +1,27 @@
+"""Shared test configuration.
+
+Registers a deterministic stub under the `hypothesis` module name when the
+real library is not installed (the pinned test image ships without it and
+the suite must not depend on network installs). The real hypothesis, when
+present, always takes precedence.
+"""
+import importlib.util
+import pathlib
+import sys
+
+
+def _ensure_hypothesis() -> None:
+    try:
+        import hypothesis  # noqa: F401
+        return
+    except ModuleNotFoundError:
+        pass
+    stub_path = pathlib.Path(__file__).with_name("_hypothesis_stub.py")
+    spec = importlib.util.spec_from_file_location("hypothesis", stub_path)
+    module = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(module)
+    sys.modules["hypothesis"] = module
+    sys.modules["hypothesis.strategies"] = module.strategies
+
+
+_ensure_hypothesis()

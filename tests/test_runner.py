@@ -1,0 +1,160 @@
+"""Tests for the host-side convergence loop in repro.core.runner:
+patience/theta halting, warm-start vs cold-start behavior, the hash/range
+fast paths, strict config kwargs, and the windowed score-fetch knob."""
+import numpy as np
+import pytest
+
+from repro.core.runner import run_partitioner
+from repro.graphs.generators import dc_sbm, ring_of_cliques
+
+
+@pytest.fixture(scope="module")
+def sbm_graph():
+    return dc_sbm(768, 6144, n_comm=12, mixing=0.25, degree_exponent=0.5, seed=5)
+
+
+@pytest.fixture(scope="module")
+def clique_graph():
+    return ring_of_cliques(6, 12)
+
+
+class TestHalting:
+    def test_huge_theta_halts_at_patience(self, sbm_graph):
+        """theta=inf makes every step a stall -> halt after patience+1
+        supersteps (the first step always improves on prev_score=-inf)."""
+        r = run_partitioner("revolver", sbm_graph, 4, seed=0, theta=np.inf,
+                            patience=3, track_history=False)
+        assert r.converged
+        assert r.steps == 4
+
+    def test_impossible_patience_runs_to_max_steps(self, sbm_graph):
+        r = run_partitioner("revolver", sbm_graph, 4, seed=0, max_steps=12,
+                            patience=10_000, track_history=False)
+        assert not r.converged
+        assert r.steps == 12
+
+    def test_spinner_halting_same_contract(self, sbm_graph):
+        r = run_partitioner("spinner", sbm_graph, 4, seed=0, theta=np.inf,
+                            patience=4, track_history=False)
+        assert r.converged and r.steps == 5
+
+    def test_history_lengths_match_steps(self, sbm_graph):
+        r = run_partitioner("revolver", sbm_graph, 4, seed=0, max_steps=8,
+                            patience=10_000, track_history=True)
+        assert len(r.history["score"]) == r.steps
+        assert len(r.history["local_edges"]) == r.steps
+        assert len(r.history["max_norm_load"]) == r.steps
+
+
+class TestSyncEvery:
+    def test_sync_every_equivalent_labels(self, sbm_graph):
+        """The windowed fetch only batches host syncs; with a fixed step
+        budget (no early halt) the trajectory is identical."""
+        r1 = run_partitioner("revolver", sbm_graph, 4, seed=3, max_steps=10,
+                             patience=10_000, track_history=False, sync_every=1)
+        r4 = run_partitioner("revolver", sbm_graph, 4, seed=3, max_steps=10,
+                             patience=10_000, track_history=False, sync_every=4)
+        np.testing.assert_array_equal(r1.labels, r4.labels)
+        assert r1.steps == r4.steps == 10
+
+    def test_sync_every_overshoot_bounded(self, sbm_graph):
+        """Convergence is detected at most sync_every-1 steps late."""
+        r1 = run_partitioner("revolver", sbm_graph, 4, seed=0, theta=np.inf,
+                             patience=3, track_history=False, sync_every=1)
+        r4 = run_partitioner("revolver", sbm_graph, 4, seed=0, theta=np.inf,
+                             patience=3, track_history=False, sync_every=4)
+        assert r1.converged and r4.converged
+        assert r1.steps <= r4.steps <= r1.steps + 3
+
+    def test_sync_every_validation(self, sbm_graph):
+        with pytest.raises(ValueError):
+            run_partitioner("revolver", sbm_graph, 4, sync_every=0)
+
+
+class TestWarmStart:
+    def test_warm_start_converges_faster(self, sbm_graph):
+        """10 warm supersteps reach the quality 120 cold supersteps buy;
+        a cold run is nowhere near it after its own first 10."""
+        cold = run_partitioner("revolver", sbm_graph, 8, seed=0, max_steps=120,
+                               track_history=True, keep_probs=True)
+        warm = run_partitioner("revolver", sbm_graph, 8, seed=1, max_steps=10,
+                               init_labels=cold.labels, init_probs=cold.probs,
+                               init_sharpen=0.9, track_history=False)
+        assert warm.local_edges >= cold.local_edges - 0.03
+        assert cold.history["local_edges"][9] < warm.local_edges - 0.15
+
+    def test_warm_start_labels_only(self, sbm_graph):
+        """Without carried LA probs, sharpening toward the carried labels
+        keeps the assignment from being wrecked by uniform exploration."""
+        cold = run_partitioner("revolver", sbm_graph, 8, seed=0, max_steps=120,
+                               track_history=False)
+        warm = run_partitioner("revolver", sbm_graph, 8, seed=1, max_steps=20,
+                               init_labels=cold.labels, init_sharpen=0.9,
+                               track_history=False)
+        assert warm.local_edges >= cold.local_edges - 0.1
+
+    def test_spinner_warm_start(self, sbm_graph):
+        cold = run_partitioner("spinner", sbm_graph, 8, seed=0,
+                               track_history=False)
+        warm = run_partitioner("spinner", sbm_graph, 8, seed=1,
+                               init_labels=cold.labels, track_history=False)
+        assert warm.steps <= cold.steps
+
+    def test_revolver_result_carries_probs_on_request(self, sbm_graph):
+        r = run_partitioner("revolver", sbm_graph, 4, seed=0, max_steps=5,
+                            patience=10_000, track_history=False,
+                            keep_probs=True)
+        assert r.probs is not None and r.probs.shape[-1] == 4
+        np.testing.assert_allclose(r.probs.sum(-1), 1.0, atol=1e-4)
+        # default: no LA-state fetch (the tensor is big at production scale)
+        r2 = run_partitioner("revolver", sbm_graph, 4, seed=0, max_steps=2,
+                             patience=10_000, track_history=False)
+        assert r2.probs is None
+
+    def test_spinner_rejects_probs(self, sbm_graph):
+        with pytest.raises(TypeError):
+            run_partitioner("spinner", sbm_graph, 4,
+                            init_labels=np.zeros(sbm_graph.n, np.int32),
+                            init_probs=np.ones((1, 1, 4)))
+
+    def test_probs_without_labels_rejected(self, sbm_graph):
+        with pytest.raises(TypeError):
+            run_partitioner("revolver", sbm_graph, 4, init_probs=np.ones((1, 1, 4)))
+        with pytest.raises(TypeError):
+            run_partitioner("revolver", sbm_graph, 4, init_sharpen=0.5)
+
+
+class TestFastPaths:
+    @pytest.mark.parametrize("algo", ["hash", "range"])
+    def test_static_partitioners_skip_the_loop(self, clique_graph, algo):
+        r = run_partitioner(algo, clique_graph, 4)
+        assert r.steps == 0 and r.converged
+        assert r.labels.shape == (clique_graph.n,)
+        assert 0.0 <= r.local_edges <= 1.0
+        assert len(r.history["local_edges"]) == 1
+
+    @pytest.mark.parametrize("algo", ["hash", "range"])
+    def test_static_partitioners_reject_warm_start(self, clique_graph, algo):
+        with pytest.raises(TypeError):
+            run_partitioner(algo, clique_graph, 4,
+                            init_labels=np.zeros(clique_graph.n, np.int32))
+
+
+class TestStrictKwargs:
+    def test_revolver_unknown_kwarg_raises(self, sbm_graph):
+        with pytest.raises(TypeError, match="capacty_mode"):
+            run_partitioner("revolver", sbm_graph, 4, capacty_mode="spinner")
+
+    def test_spinner_unknown_kwarg_raises(self, sbm_graph):
+        """The spinner branch used to silently drop unknown keys."""
+        with pytest.raises(TypeError, match="weight_mode"):
+            run_partitioner("spinner", sbm_graph, 4, weight_mode="self_lambda")
+
+    def test_known_kwargs_still_flow(self, sbm_graph):
+        r = run_partitioner("spinner", sbm_graph, 4, epsilon=0.10, max_steps=3,
+                            patience=10_000, track_history=False)
+        assert r.steps == 3
+
+    def test_unknown_algo(self, sbm_graph):
+        with pytest.raises(ValueError):
+            run_partitioner("metis", sbm_graph, 4)

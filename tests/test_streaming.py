@@ -1,0 +1,331 @@
+"""Tests for the streaming subsystem: delta batching, incremental CSR /
+DeviceGraph maintenance, warm-start state carry, and the end-to-end
+streaming-vs-batch acceptance criterion."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import run_partitioner
+from repro.core.device_graph import prepare_device_graph
+from repro.core.metrics import partition_loads
+from repro.core.revolver import RevolverConfig, revolver_init_from_labels
+from repro.graphs.csr import build_graph
+from repro.graphs.datasets import load_dataset
+from repro.graphs.generators import dc_sbm, edge_split
+from repro.streaming import (
+    EdgeDelta,
+    IncrementalDeviceGraph,
+    IncrementalGraph,
+    StreamBuffer,
+    StreamConfig,
+    StreamRunner,
+    stream_from_graph,
+)
+
+
+@pytest.fixture(scope="module")
+def sbm_graph():
+    return dc_sbm(512, 4096, n_comm=8, mixing=0.3, degree_exponent=0.5, seed=1)
+
+
+class TestStreamBuffer:
+    def test_emits_fixed_size_deltas(self):
+        buf = StreamBuffer(delta_size=10)
+        buf.push(np.arange(7), np.arange(7) + 1)
+        assert buf.pop_delta() is None
+        buf.push(np.arange(7), np.arange(7) + 2)
+        d = buf.pop_delta()
+        assert d is not None and d.n_add == 10
+        assert buf.pop_delta() is None          # 4 left, below threshold
+        tail = buf.flush()
+        assert tail.n_add == 4
+        assert buf.flush() is None
+
+    def test_deletions_ride_along(self):
+        buf = StreamBuffer(delta_size=4)
+        buf.push(3, 4, delete=True)
+        assert buf.pop_delta() is None          # deletions alone never emit
+        buf.push(np.arange(4), np.arange(4) + 1)
+        d = buf.pop_delta()
+        assert d.n_add == 4 and d.n_del == 1
+        assert int(d.del_src[0]) == 3 and int(d.del_dst[0]) == 4
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            StreamBuffer(delta_size=0)
+        buf = StreamBuffer(delta_size=4)
+        with pytest.raises(ValueError):
+            buf.push(np.arange(3), np.arange(4))
+
+    def test_delete_never_overtakes_insert(self):
+        """Regression: insert(e) then delete(e) in the stream must leave e
+        absent regardless of how the events land in deltas — a deletion may
+        neither travel ahead into an earlier delta nor share a delta with
+        an earlier insertion of the same edge (deltas apply dels first)."""
+        buf = StreamBuffer(delta_size=4)
+        buf.push(np.arange(5), np.arange(5) + 1)       # inserts e1..e5
+        buf.push(4, 5, delete=True)                    # deletes e5 (still buffered)
+        inc = IncrementalGraph(8)
+        inc.apply(buf.pop_delta())                     # e1..e4, no deletion yet
+        while (d := buf.flush()) is not None:
+            info = inc.apply(d)
+            assert info.missing_dropped == 0
+        g = inc.to_graph()
+        assert g.m == 4
+        assert g.row_ptr[4] == g.row_ptr[5]            # vertex 4 has no out-edge
+
+    def test_insert_delete_reinsert_stays_present(self):
+        buf = StreamBuffer(delta_size=100)
+        buf.push(0, 1)
+        buf.push(0, 1, delete=True)
+        buf.push(0, 1)
+        inc = IncrementalGraph(4)
+        while (d := buf.flush()) is not None:
+            inc.apply(d)
+        assert inc.m == 1
+
+    def test_preserves_arrival_order(self):
+        buf = StreamBuffer(delta_size=3)
+        for i in range(5):
+            buf.push(i, i + 1)
+        d = buf.pop_delta()
+        np.testing.assert_array_equal(d.add_src, [0, 1, 2])
+        np.testing.assert_array_equal(buf.flush().add_src, [3, 4])
+
+
+class TestStreamFromGraph:
+    def test_covers_every_edge_exactly_once(self, sbm_graph):
+        g = sbm_graph
+        seen = []
+        for d in stream_from_graph(g, 7, seed=3):
+            assert d.n_del == 0
+            seen.append(d.add_src.astype(np.int64) * g.n + d.add_dst)
+        keys = np.concatenate(seen)
+        assert keys.size == g.m
+        assert np.unique(keys).size == g.m
+
+    def test_orders(self, sbm_graph):
+        n_arr = sum(d.n_add for d in stream_from_graph(sbm_graph, 4, order="arrival"))
+        assert n_arr == sbm_graph.m
+        with pytest.raises(ValueError):
+            list(stream_from_graph(sbm_graph, 4, order="bogus"))
+
+
+class TestIncrementalGraph:
+    def test_insert_merge_equals_batch_build(self, sbm_graph):
+        g = sbm_graph
+        inc = IncrementalGraph(g.n)
+        for d in stream_from_graph(g, 6, seed=2):
+            inc.apply(d)
+        g2 = inc.to_graph()
+        np.testing.assert_array_equal(g2.row_ptr, g.row_ptr)
+        np.testing.assert_array_equal(g2.col_idx, g.col_idx)
+        np.testing.assert_array_equal(g2.adj_ptr, g.adj_ptr)
+        np.testing.assert_array_equal(g2.adj_idx, g.adj_idx)
+        np.testing.assert_array_equal(g2.adj_w, g.adj_w)
+        np.testing.assert_array_equal(g2.deg_out, g.deg_out)
+
+    def test_deletions_match_rebuilt_graph(self, sbm_graph):
+        g = sbm_graph
+        inc = IncrementalGraph(g.n)
+        inc.apply(next(stream_from_graph(g, 1)))
+        src, dst = edge_split(g)
+        sel = np.random.default_rng(0).choice(g.m, 64, replace=False)
+        empty = np.empty(0, np.int32)
+        inc.apply(EdgeDelta(empty, empty, src[sel].astype(np.int32),
+                            dst[sel].astype(np.int32)))
+        keep = np.ones(g.m, bool)
+        keep[sel] = False
+        ref = build_graph(src[keep], dst[keep], g.n)
+        g2 = inc.to_graph()
+        assert g2.m == ref.m
+        np.testing.assert_array_equal(g2.adj_idx, ref.adj_idx)
+        np.testing.assert_array_equal(g2.adj_w, ref.adj_w)
+        np.testing.assert_array_equal(g2.deg_out, ref.deg_out)
+
+    def test_eq4_weight_transitions(self):
+        """1 direction -> w=1; both -> w=2; back to 1 -> w=1; none -> gone."""
+        inc = IncrementalGraph(4)
+        empty = np.empty(0, np.int32)
+
+        inc.apply(EdgeDelta.inserts(np.array([0]), np.array([1])))
+        g = inc.to_graph()
+        assert g.adj_w.tolist() == [1.0, 1.0]          # (0,1) and (1,0) slots
+
+        inc.apply(EdgeDelta.inserts(np.array([1]), np.array([0])))
+        g = inc.to_graph()
+        assert g.adj_w.tolist() == [2.0, 2.0]
+
+        inc.apply(EdgeDelta(empty, empty, np.array([0], np.int32),
+                            np.array([1], np.int32)))
+        g = inc.to_graph()
+        assert g.m == 1 and g.adj_w.tolist() == [1.0, 1.0]
+
+        inc.apply(EdgeDelta(empty, empty, np.array([1], np.int32),
+                            np.array([0], np.int32)))
+        g = inc.to_graph()
+        assert g.m == 0 and g.num_sym_edges == 0
+
+    def test_dup_and_missing_accounting(self):
+        inc = IncrementalGraph(8)
+        info = inc.apply(EdgeDelta.inserts(np.array([0, 0, 1, 2]),
+                                           np.array([1, 1, 2, 2])))
+        # one in-delta duplicate + one self loop dropped
+        assert info.added == 2 and info.dup_dropped == 2
+        info = inc.apply(EdgeDelta.inserts(np.array([0]), np.array([1])))
+        assert info.added == 0 and info.dup_dropped == 1
+        empty = np.empty(0, np.int32)
+        info = inc.apply(EdgeDelta(empty, empty, np.array([5], np.int32),
+                                   np.array([6], np.int32)))
+        assert info.deleted == 0 and info.missing_dropped == 1
+
+    def test_delete_then_readd_same_delta_survives(self):
+        inc = IncrementalGraph(4)
+        inc.apply(EdgeDelta.inserts(np.array([0]), np.array([1])))
+        info = inc.apply(EdgeDelta(np.array([0], np.int32), np.array([1], np.int32),
+                                   np.array([0], np.int32), np.array([1], np.int32)))
+        assert info.deleted == 1 and info.added == 1
+        assert inc.m == 1
+
+
+class TestIncrementalDeviceGraph:
+    def test_layout_stable_and_slabs_match_batch(self, sbm_graph):
+        g = sbm_graph
+        idg = IncrementalDeviceGraph(g.n, n_blocks=4)
+        layouts = set()
+        for d in stream_from_graph(g, 5, seed=1):
+            dg, info = idg.apply(d)
+            layouts.add((dg.n_pad, dg.block_v, dg.n_blocks))
+        assert len(layouts) == 1                       # vertex layout never moves
+        ref = prepare_device_graph(g, n_blocks=4)
+        assert dg.n_pad == ref.n_pad and dg.block_v == ref.block_v
+        # final slabs hold the same edge multiset per block as a cold build
+        for b in range(dg.n_blocks):
+            got = sorted(
+                (int(r), int(c), float(w))
+                for r, c, w in zip(np.asarray(dg.blk_row[b]),
+                                   np.asarray(dg.blk_dst[b]),
+                                   np.asarray(dg.blk_w[b]))
+                if w > 0)
+            want = sorted(
+                (int(r), int(c), float(w))
+                for r, c, w in zip(np.asarray(ref.blk_row[b]),
+                                   np.asarray(ref.blk_dst[b]),
+                                   np.asarray(ref.blk_w[b]))
+                if w > 0)
+            assert got == want
+
+    def test_local_delta_dirties_few_blocks(self, sbm_graph):
+        g = sbm_graph
+        idg = IncrementalDeviceGraph(g.n, n_blocks=8, e_headroom=4.0)
+        idg.apply(next(stream_from_graph(g, 1, seed=0)))
+        # a delta touching only vertices 0..3 must not rewrite other blocks
+        _, info = idg.apply(EdgeDelta.inserts(np.array([0, 1]), np.array([2, 3])))
+        assert not info.repadded
+        assert info.dirty_blocks == 1
+
+    def test_overflow_triggers_repad(self):
+        g0 = dc_sbm(256, 512, n_comm=4, seed=0)
+        idg = IncrementalDeviceGraph(256, n_blocks=4, e_headroom=1.0)
+        _, info0 = idg.apply(next(stream_from_graph(g0, 1, seed=0)))
+        assert info0.repadded
+        e0 = idg.e_max
+        # dense burst into one block overflows its slab
+        rng = np.random.default_rng(1)
+        _, info1 = idg.apply(EdgeDelta.inserts(
+            rng.integers(0, 64, 3000).astype(np.int32),
+            rng.integers(0, 256, 3000).astype(np.int32)))
+        assert info1.repadded and idg.e_max > e0
+
+
+class TestWarmStartInit:
+    def test_loads_invariant_and_label_carry(self, sbm_graph):
+        dg = prepare_device_graph(sbm_graph, n_blocks=4)
+        cfg = RevolverConfig(k=4)
+        labels = np.random.default_rng(0).integers(0, 4, sbm_graph.n).astype(np.int32)
+        st = revolver_init_from_labels(dg, cfg, jax.random.PRNGKey(0), labels)
+        np.testing.assert_array_equal(np.asarray(st.labels[: sbm_graph.n]), labels)
+        expect = partition_loads(st.labels, dg.deg_out, 4)
+        np.testing.assert_allclose(np.asarray(st.loads), np.asarray(expect), rtol=1e-5)
+
+    def test_probs_carried_and_uniform_for_new(self, sbm_graph):
+        dg = prepare_device_graph(sbm_graph, n_blocks=4)
+        cfg = RevolverConfig(k=4)
+        labels = np.zeros(100, np.int32)     # only 100 surviving vertices
+        probs = np.full((100, 4), 0.0, np.float32)
+        probs[:, 2] = 1.0
+        st = revolver_init_from_labels(dg, cfg, jax.random.PRNGKey(0), labels,
+                                       probs=probs)
+        flat = np.asarray(st.probs).reshape(dg.n_pad, 4)
+        np.testing.assert_allclose(flat[:100, 2], 1.0)
+        np.testing.assert_allclose(flat[100:], 0.25)
+
+    def test_k_mismatch_rejected(self, sbm_graph):
+        dg = prepare_device_graph(sbm_graph, n_blocks=4)
+        with pytest.raises(ValueError):
+            revolver_init_from_labels(dg, RevolverConfig(k=4),
+                                      jax.random.PRNGKey(0),
+                                      np.zeros(8, np.int32),
+                                      probs=np.ones((8, 5), np.float32))
+
+
+class TestStreamRunner:
+    def test_reports_and_carry(self, sbm_graph):
+        cfg = StreamConfig(k=4, n_blocks=4, refine_max_steps=6,
+                           refine_patience=2, sync_every=2)
+        runner = StreamRunner(sbm_graph.n, cfg, seed=0)
+        reports = runner.run(stream_from_graph(sbm_graph, 4, seed=0))
+        assert len(reports) == 4
+        assert reports[-1].m == sbm_graph.m
+        assert runner.labels.shape == (sbm_graph.n,)
+        assert runner.probs.shape[-1] == 4
+        for r in reports:
+            assert 0.0 <= r.local_edges <= 1.0
+            assert r.steps <= 6
+
+    def test_restream_mode_runs(self, sbm_graph):
+        cfg = StreamConfig(k=4, n_blocks=4, refine_max_steps=4,
+                           refine_patience=2, restream=True,
+                           restream_frac=0.2, restream_chunks=2,
+                           restream_steps_per_chunk=1)
+        runner = StreamRunner(sbm_graph.n, cfg, seed=0)
+        reports = runner.run(stream_from_graph(sbm_graph, 3, seed=0))
+        # replay passes only fire from the second delta on
+        assert reports[0].steps <= 4
+        assert reports[1].steps > reports[0].steps or reports[1].converged
+        assert 0.0 <= reports[-1].local_edges <= 1.0
+
+    def test_deletion_delta_keeps_partition_sane(self, sbm_graph):
+        cfg = StreamConfig(k=4, n_blocks=4, refine_max_steps=4, refine_patience=2)
+        runner = StreamRunner(sbm_graph.n, cfg, seed=0)
+        runner.ingest(next(stream_from_graph(sbm_graph, 1, seed=0)))
+        src, dst = edge_split(sbm_graph)
+        sel = np.random.default_rng(3).choice(sbm_graph.m, 128, replace=False)
+        empty = np.empty(0, np.int32)
+        rep = runner.ingest(EdgeDelta(empty, empty, src[sel].astype(np.int32),
+                                      dst[sel].astype(np.int32)))
+        assert rep.deleted == 128
+        assert rep.m == sbm_graph.m - 128
+        assert 0.0 <= rep.local_edges <= 1.0
+
+
+class TestStreamingEndToEnd:
+    def test_quality_within_10pct_at_half_the_steps(self):
+        """ISSUE 1 acceptance: >= 4 deltas, warm-start refinement, final
+        local-edges within 10% of the one-shot batch run, total supersteps
+        < 50% of the batch steps-to-convergence (seed 0, scale=0.002, k=8)."""
+        g = load_dataset("WIKI", scale=0.002, seed=0)
+        batch = run_partitioner("revolver", g, 8, seed=0, track_history=False)
+
+        cfg = StreamConfig(k=8, refine_max_steps=15, refine_patience=3,
+                           sync_every=2, warm_sharpen=0.5)
+        runner = StreamRunner(g.n, cfg, seed=0)
+        reports = runner.run(stream_from_graph(g, 5, seed=0))
+
+        assert len(reports) >= 4
+        assert reports[-1].m == g.m
+        total = runner.total_steps
+        assert reports[-1].local_edges >= 0.9 * batch.local_edges, (
+            f"stream le {reports[-1].local_edges:.4f} vs batch {batch.local_edges:.4f}")
+        assert total < 0.5 * batch.steps, (
+            f"stream used {total} supersteps vs batch {batch.steps}")
