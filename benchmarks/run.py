@@ -20,7 +20,7 @@ def main(argv=None):
 
     from benchmarks import (fig3_partition_quality, fig4_convergence,
                             kernel_bench, roofline_report, streaming_bench,
-                            table1_datasets)
+                            superstep_bench, table1_datasets)
 
     t0 = time.time()
     print("=" * 72)
@@ -47,6 +47,12 @@ def main(argv=None):
                             refine_max_steps=8)
     else:
         streaming_bench.run()
+
+    print("=" * 72)
+    print("== Superstep perf baseline ({hist,la}_impl sweep + parity gate) ==")
+    bench = superstep_bench.run(quick=args.quick)
+    if not bench["meta"]["parity_ok"]:
+        raise SystemExit("superstep kernel-parity regression (see above)")
 
     print("=" * 72)
     print("== Kernel microbench (CPU; interpret-mode parity) ==")

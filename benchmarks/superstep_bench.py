@@ -1,0 +1,236 @@
+"""Superstep throughput baseline: the repo's first perf-trajectory artifact.
+
+Times Revolver supersteps-per-second and edges-per-second for every
+``{hist_impl} x {la_impl}`` combination on Table-I generator datasets, plus
+a kernel-level comparison of the fused dual-histogram edge phase against two
+independent ``edge_histogram`` launches, and writes everything to
+``BENCH_superstep.json`` so later PRs have a measured baseline to hold
+against.
+
+Two hard gates (process exits nonzero on failure — the CI regression check):
+  * superstep parity — ``hist_impl="pallas"`` must reproduce the
+    ``"jnp"`` partition at fixed seed within the score tolerance;
+  * kernel parity — the fused kernel's histograms must match the two-call
+    path within float tolerance.
+
+On this CPU container the Pallas paths execute in interpret mode, so their
+wall-clock is a harness/correctness sanity check, not TPU perf (see
+kernel_bench.py); the numbers that matter for the trajectory are the XLA-path
+throughputs and the fused-vs-two-call ratio measured under the same mode.
+
+  PYTHONPATH=src python benchmarks/superstep_bench.py            # full
+  PYTHONPATH=src python benchmarks/superstep_bench.py --quick    # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.device_graph import prepare_device_graph
+from repro.core.revolver import RevolverConfig, revolver_init, revolver_superstep
+from repro.graphs import load_dataset
+
+IMPLS = ("jnp", "pallas")
+PARITY_TOL = 1e-5
+
+
+def _time_supersteps(dg, cfg, *, steps: int, seed: int = 0) -> float:
+    """Supersteps/second after a compile+warmup step (block on completion)."""
+    st = revolver_init(dg, cfg, jax.random.PRNGKey(seed))
+    st = revolver_superstep(dg, cfg, st)           # compile + warm
+    jax.block_until_ready(st.labels)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        st = revolver_superstep(dg, cfg, st)
+    jax.block_until_ready(st.labels)
+    return steps / (time.perf_counter() - t0)
+
+
+def _superstep_parity(dg, k: int, *, steps: int, seed: int,
+                      weight_mode: str) -> dict:
+    """Fixed-seed jnp-vs-pallas superstep trajectory comparison."""
+    finals = {}
+    for impl in IMPLS:
+        cfg = RevolverConfig(k=k, hist_impl=impl, weight_mode=weight_mode)
+        st = revolver_init(dg, cfg, jax.random.PRNGKey(seed))
+        for _ in range(steps):
+            st = revolver_superstep(dg, cfg, st)
+        finals[impl] = (float(st.score), np.asarray(st.labels))
+    score_diff = abs(finals["jnp"][0] - finals["pallas"][0])
+    labels_eq = float((finals["jnp"][1] == finals["pallas"][1]).mean())
+    return {
+        "weight_mode": weight_mode,
+        "steps": steps,
+        "score_diff": score_diff,
+        "labels_equal_frac": labels_eq,
+        "tol": PARITY_TOL,
+        "pass": bool(score_diff <= PARITY_TOL),
+    }
+
+
+def _kernel_compare(dg, k: int, *, iters: int, seed: int) -> dict:
+    """Fused single-pass kernel vs two independent edge_histogram launches.
+
+    Both paths run in the same (interpret-on-CPU / compiled-on-TPU) mode and
+    compute the same pair of [nb, block_v, k] histograms with
+    weight_mode="neighbor_lambda" semantics, so the comparison isolates the
+    fusion win: one slab read + one shared row-indicator instead of two.
+    """
+    from repro.kernels.ops import edge_histogram, fused_edge_phase
+
+    key = jax.random.PRNGKey(seed)
+    nb, bv = dg.n_blocks, dg.block_v
+    labels = jax.random.randint(key, (dg.n_pad,), 0, k, dtype=jnp.int32)
+    lam = jax.random.randint(jax.random.fold_in(key, 1), (dg.n_pad,), 0, k,
+                             dtype=jnp.int32)
+    actions = jax.random.randint(jax.random.fold_in(key, 2), (nb, bv), 0, k,
+                                 dtype=jnp.int32)
+    feasible = (jax.random.uniform(jax.random.fold_in(key, 3), (nb, k))
+                > 0.3).astype(jnp.float32)
+
+    @jax.jit
+    def fused(labels, lam, actions, feasible):
+        return fused_edge_phase(
+            dg.blk_dst, dg.blk_row, dg.blk_w, labels, lam, actions, feasible,
+            block_v=bv, k=k, weight_mode="neighbor_lambda")
+
+    @jax.jit
+    def two_call(labels, lam, actions, feasible):
+        nbr_lbl = labels[dg.blk_dst]
+        lam_nbr = lam[dg.blk_dst]
+        live = (dg.blk_w > 0).astype(jnp.float32)
+        agree = jnp.take_along_axis(actions, dg.blk_row, axis=1) == lam_nbr
+        val = jnp.where(agree, dg.blk_w,
+                        jnp.take_along_axis(feasible, lam_nbr, axis=1)) * live
+        h1 = edge_histogram(nbr_lbl, dg.blk_row, dg.blk_w, block_v=bv, k=k)
+        h2 = edge_histogram(lam_nbr, dg.blk_row, val, block_v=bv, k=k)
+        return h1, h2
+
+    def timeit(fn):
+        jax.block_until_ready(fn(labels, lam, actions, feasible))  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(labels, lam, actions, feasible)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / iters * 1e6            # us
+
+    f_out = fused(labels, lam, actions, feasible)
+    t_out = two_call(labels, lam, actions, feasible)
+    err = max(float(jnp.abs(f_out[0] - t_out[0]).max()),
+              float(jnp.abs(f_out[1] - t_out[1]).max()))
+    us_fused = timeit(fused)
+    us_two = timeit(two_call)
+    return {
+        "fused_us": us_fused,
+        "two_call_us": us_two,
+        "fused_speedup": us_two / max(us_fused, 1e-9),
+        "max_abs_err": err,
+        "pass": bool(err <= 1e-3),
+    }
+
+
+def run(*, quick: bool = False, out: str = "BENCH_superstep.json",
+        datasets=None, scale: float | None = None, k: int = 8,
+        n_blocks: int = 8, steps: int | None = None, seed: int = 0) -> dict:
+    if datasets is None:
+        datasets = ("WIKI",) if quick else ("WIKI", "LJ")
+    if not datasets:
+        raise ValueError("need at least one dataset (parity would be vacuous)")
+    if scale is None:
+        scale = 3e-4 if quick else 1e-3
+    if steps is None:
+        steps = 3 if quick else 8
+
+    results = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "quick": quick,
+            "k": k,
+            "n_blocks": n_blocks,
+            "scale": scale,
+            "steps_timed": steps,
+            "unix_time": time.time(),
+        },
+        "superstep": [],
+        "kernel": None,
+        "parity": [],
+    }
+
+    print(f"{'dataset':8s} {'hist':7s} {'la':7s} {'supersteps/s':>12s} "
+          f"{'edges/s':>12s}")
+    dg = None
+    for name in datasets:
+        g = load_dataset(name, scale=scale, seed=seed)
+        dg = prepare_device_graph(g, n_blocks=n_blocks)
+        for hist_impl in IMPLS:
+            for la_impl in IMPLS:
+                cfg = RevolverConfig(k=k, hist_impl=hist_impl, la_impl=la_impl)
+                sps = _time_supersteps(dg, cfg, steps=steps, seed=seed)
+                row = {
+                    "dataset": name,
+                    "n": g.n,
+                    "m": g.m,
+                    "hist_impl": hist_impl,
+                    "la_impl": la_impl,
+                    "supersteps_per_s": sps,
+                    "edges_per_s": sps * g.m,
+                    "sym_slab_edges": dg.n_blocks * dg.e_max,
+                }
+                results["superstep"].append(row)
+                print(f"{name:8s} {hist_impl:7s} {la_impl:7s} {sps:12.2f} "
+                      f"{sps * g.m:12.0f}")
+        for weight_mode in ("self_lambda", "neighbor_lambda"):
+            par = _superstep_parity(dg, k, steps=steps, seed=seed,
+                                    weight_mode=weight_mode)
+            par["dataset"] = name
+            results["parity"].append(par)
+            print(f"parity  {name}/{weight_mode}: score_diff="
+                  f"{par['score_diff']:.2e} labels_eq="
+                  f"{par['labels_equal_frac']:.4f} "
+                  f"{'PASS' if par['pass'] else 'FAIL'}")
+
+    results["kernel"] = _kernel_compare(dg, k, iters=3 if quick else 5,
+                                        seed=seed)
+    kc = results["kernel"]
+    print(f"kernel  fused={kc['fused_us']:.0f}us two_call="
+          f"{kc['two_call_us']:.0f}us speedup={kc['fused_speedup']:.2f}x "
+          f"err={kc['max_abs_err']:.1e} "
+          f"{'PASS' if kc['pass'] else 'FAIL'}")
+
+    ok = all(p["pass"] for p in results["parity"]) and results["kernel"]["pass"]
+    results["meta"]["parity_ok"] = ok
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {out}")
+    if not ok:
+        print("KERNEL PARITY REGRESSION", file=sys.stderr)
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_superstep.json")
+    ap.add_argument("--datasets", nargs="*", default=None)
+    ap.add_argument("--scale", type=float, default=None)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--n-blocks", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    results = run(quick=args.quick, out=args.out, datasets=args.datasets,
+                  scale=args.scale, k=args.k, n_blocks=args.n_blocks,
+                  steps=args.steps, seed=args.seed)
+    return 0 if results["meta"]["parity_ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,6 +14,7 @@ never influence loads or scores.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax.numpy as jnp
@@ -92,6 +93,9 @@ def prepare_device_graph(g: Graph, n_blocks: int = 8, block_multiple: int = 8) -
     )
 
 
+CAPACITY_MODES = ("spinner", "paper")
+
+
 def capacity(m: int, k: int, epsilon: float, mode: str) -> float:
     """Partition capacity C.
 
@@ -105,3 +109,15 @@ def capacity(m: int, k: int, epsilon: float, mode: str) -> float:
     if mode == "paper":
         return epsilon * m / k
     raise ValueError(f"unknown capacity mode {mode!r}")
+
+
+@functools.lru_cache(maxsize=512)
+def capacity_device(m: int, k: int, epsilon: float, mode: str) -> jnp.ndarray:
+    """`capacity(...)` as a device-resident f32 scalar, cached on its inputs.
+
+    Capacity depends only on (|E|, cfg); the supersteps call this instead of
+    recomputing + re-`asarray`-ing it every step, so the same graph/config
+    pair reuses one committed device buffer across the whole convergence
+    loop (and across warm restarts in the streaming runner).
+    """
+    return jnp.asarray(capacity(m, k, epsilon, mode), jnp.float32)

@@ -28,9 +28,18 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.device_graph import DeviceGraph, capacity
+from repro.core.device_graph import CAPACITY_MODES, DeviceGraph, capacity_device
 from repro.core.la import split_weights_and_signals, weighted_la_update
 from repro.core.lp import edge_histogram_jnp, revolver_scores
+
+# valid values per config knob; typos used to silently fall back to the jnp
+# path (e.g. la_impl="palas"), now they raise at construction
+_VALID_CHOICES = {
+    "la_impl": ("jnp", "pallas"),
+    "hist_impl": ("jnp", "pallas"),
+    "weight_mode": ("self_lambda", "neighbor_lambda"),
+    "capacity_mode": CAPACITY_MODES,
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,13 +56,21 @@ class RevolverConfig:
     capacity_mode: str = "spinner"  # see device_graph.capacity
     renorm: bool = True           # simplex re-projection after eqs. (8)/(9)
     la_impl: str = "jnp"          # "jnp" | "pallas"
-    hist_impl: str = "jnp"        # "jnp" | "pallas"
+    hist_impl: str = "jnp"        # "jnp" (scatter-add) | "pallas" (fused
+                                  # dual-histogram edge-phase kernel)
     # eq. (13) ambiguity (DESIGN.md §10): which W slot a neighbor u reinforces.
     #   "self_lambda":     the literal LHS w(v, lambda(v)) — each neighbor
     #                      contributes to v's own argmax-score slot.
     #   "neighbor_lambda": slot lambda(u) — v accumulates a histogram of its
     #                      neighbors' argmax labels.
     weight_mode: str = "self_lambda"
+
+    def __post_init__(self):
+        for name, valid in _VALID_CHOICES.items():
+            value = getattr(self, name)
+            if value not in valid:
+                raise ValueError(
+                    f"RevolverConfig.{name}={value!r} is not one of {valid}")
 
 
 class RevolverState(NamedTuple):
@@ -73,9 +90,11 @@ def revolver_init(dg: DeviceGraph, cfg: RevolverConfig, key: jax.Array) -> Revol
     labels = jnp.where(dg.vmask, labels, 0)
     loads = jnp.zeros((cfg.k,), jnp.float32).at[labels].add(dg.deg_out)
     probs = jnp.full((dg.n_blocks, dg.block_v, cfg.k), 1.0 / cfg.k, jnp.float32)
+    # lam is a *copy*: labels and lam are separately donated superstep
+    # buffers, so the initial state must not alias them to one buffer
     return RevolverState(
         labels=labels,
-        lam=labels,
+        lam=jnp.copy(labels),
         probs=probs,
         loads=loads,
         key=key,
@@ -134,7 +153,7 @@ def revolver_init_from_labels(
         flat = (1.0 - prob_sharpen) * flat + prob_sharpen * onehot
     return RevolverState(
         labels=lab,
-        lam=lab,
+        lam=jnp.copy(lab),   # no aliasing: both buffers are donated
         probs=flat.reshape(dg.n_blocks, dg.block_v, cfg.k),
         loads=loads,
         key=key,
@@ -168,9 +187,28 @@ def _chunk_step(cfg: RevolverConfig, block_v: int, carry: Tuple, xs: Tuple):
         1.0,
     )
 
-    # -- 3. normalized LP scores + lambda ------------------------------------
-    nbr_labels = labels[e_dst]                       # async: freshest labels
-    hist = edge_histogram_jnp(e_row, nbr_labels, e_w, bv, k)
+    # -- 3. + 5. edge phase: LP-score histogram + eq.-13 accumulation --------
+    # Both histograms read the same edge slab. Every input they need
+    # (labels, lam, action, p_mig) exists *before* the edge phase, so the
+    # pallas path computes both in one fused slab pass (see
+    # kernels/edge_phase.py; for weight_mode="self_lambda" the kernel
+    # returns the per-row (A, N) factorization and the lambda(v) one-hot
+    # scatter is finished below once scores exist). The jnp path is the
+    # two-scatter-add reference with identical semantics.
+    if cfg.hist_impl == "pallas":
+        from repro.kernels.ops import fused_edge_phase
+
+        feasible_f = (p_mig > 0).astype(jnp.float32)
+        hist, w_acc = fused_edge_phase(
+            e_dst[None], e_row[None], e_w[None], labels, lam,
+            action[None], feasible_f[None],
+            block_v=bv, k=k, weight_mode=cfg.weight_mode)
+        hist, w_acc = hist[0], w_acc[0]
+    else:
+        nbr_labels = labels[e_dst]                   # async: freshest labels
+        hist = edge_histogram_jnp(e_row, nbr_labels, e_w, bv, k)
+        w_acc = None
+
     scores = revolver_scores(hist, inv_wsum, loads, cap)
     lam_chunk = jnp.argmax(scores, axis=-1).astype(jnp.int32)
     best = jnp.max(scores, axis=-1)
@@ -196,18 +234,27 @@ def _chunk_step(cfg: RevolverConfig, block_v: int, carry: Tuple, xs: Tuple):
     # The slot written depends on cfg.weight_mode (eq. 13 ambiguity):
     #   self_lambda     -> slot lambda(v) (the literal LHS w(v, lambda(v)))
     #   neighbor_lambda -> slot lambda(u)
-    lam_nbr = lam[e_dst]
-    agree = (action[e_row] == lam_nbr)
-    if cfg.weight_mode == "self_lambda":
-        slot = lam_chunk[e_row]
-    elif cfg.weight_mode == "neighbor_lambda":
-        slot = lam_nbr
+    if w_acc is not None:
+        if cfg.weight_mode == "self_lambda":
+            # finish the kernel's (A, N) packing: every edge of row v lands
+            # in slot lambda(v), feasibility is a per-row scalar
+            contrib = w_acc[:, 0] + jnp.where(
+                p_mig[lam_chunk] > 0, w_acc[:, 1], 0.0)
+            w_raw = jax.nn.one_hot(
+                lam_chunk, k, dtype=jnp.float32) * contrib[:, None]
+        else:
+            w_raw = w_acc                            # finished in-kernel
     else:
-        raise ValueError(f"unknown weight_mode {cfg.weight_mode!r}")
-    feasible = p_mig[slot] > 0
-    val = jnp.where(agree, e_w, jnp.where(feasible, 1.0, 0.0))
-    val = jnp.where(e_w > 0, val, 0.0)  # kill padding slots
-    w_raw = edge_histogram_jnp(e_row, slot, val, bv, k)
+        lam_nbr = lam[e_dst]
+        agree = (action[e_row] == lam_nbr)
+        if cfg.weight_mode == "self_lambda":
+            slot = lam_chunk[e_row]
+        else:
+            slot = lam_nbr
+        feasible = p_mig[slot] > 0
+        val = jnp.where(agree, e_w, jnp.where(feasible, 1.0, 0.0))
+        val = jnp.where(e_w > 0, val, 0.0)  # kill padding slots
+        w_raw = edge_histogram_jnp(e_row, slot, val, bv, k)
 
     # async lambda visibility for later chunks
     lam = jax.lax.dynamic_update_slice(lam, lam_chunk, (v0,))
@@ -224,9 +271,11 @@ def _chunk_step(cfg: RevolverConfig, block_v: int, carry: Tuple, xs: Tuple):
     return (labels, lam, loads, cap, key, score_sum), new_probs
 
 
-@partial(jax.jit, static_argnames=("n", "n_blocks", "block_v", "cfg"))
+@partial(jax.jit, static_argnames=("n", "n_blocks", "block_v", "cfg"),
+         donate_argnames=("labels", "lam", "probs", "loads"))
 def _superstep_impl(
-    blk_dst, blk_row, blk_w, deg_out, inv_wsum, vmask, cap, state,
+    blk_dst, blk_row, blk_w, deg_out, inv_wsum, vmask, cap,
+    labels, lam, probs, loads, key, step,
     *, n: int, n_blocks: int, block_v: int, cfg: RevolverConfig,
 ):
     deg_b = deg_out.reshape(n_blocks, block_v)
@@ -237,13 +286,12 @@ def _superstep_impl(
         blk_dst,
         blk_row,
         blk_w,
-        state.probs,
+        probs,
         deg_b,
         inv_b,
         msk_b,
     )
-    carry = (state.labels, state.lam, state.loads, cap, state.key,
-             jnp.zeros((), jnp.float32))
+    carry = (labels, lam, loads, cap, key, jnp.zeros((), jnp.float32))
     step_fn = partial(_chunk_step, cfg, block_v)
     (labels, lam, loads, _, key, score_sum), probs = jax.lax.scan(step_fn, carry, xs)
     return RevolverState(
@@ -252,16 +300,26 @@ def _superstep_impl(
         probs=probs,
         loads=loads,
         key=key,
-        step=state.step + 1,
+        step=step + 1,
         score=score_sum / n,
     )
 
 
 def revolver_superstep(dg: DeviceGraph, cfg: RevolverConfig, state: RevolverState) -> RevolverState:
-    """One full superstep over all chunks. Jitted; static on (dg shape, cfg)."""
-    cap = jnp.asarray(capacity(dg.m, cfg.k, cfg.epsilon, cfg.capacity_mode), jnp.float32)
+    """One full superstep over all chunks. Jitted; static on (dg shape, cfg).
+
+    The state's labels / lam / probs / loads buffers are **donated**: the
+    [n_blocks, block_v, k] probability tensor and the label vectors are
+    updated in place instead of copied every superstep. The passed-in
+    `state` must therefore not be reused after this call (every caller in
+    the repo rebinds, `state = revolver_superstep(...)`); the small `key` /
+    `step` / `score` leaves stay valid, so the convergence loop's windowed
+    score buffering is unaffected.
+    """
+    cap = capacity_device(dg.m, cfg.k, cfg.epsilon, cfg.capacity_mode)
     return _superstep_impl(
         dg.blk_dst, dg.blk_row, dg.blk_w, dg.deg_out, dg.inv_wsum, dg.vmask,
-        cap, state,
+        cap, state.labels, state.lam, state.probs, state.loads, state.key,
+        state.step,
         n=dg.n, n_blocks=dg.n_blocks, block_v=dg.block_v, cfg=cfg,
     )

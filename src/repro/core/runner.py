@@ -5,13 +5,16 @@ halts when the LP score fails to improve by `theta` for `patience`
 consecutive steps (paper settings: theta=0.001, patience=5, max 290 steps).
 
 Host/device synchronization: materializing `state.score` as a python float
-blocks on the device every superstep, serializing dispatch. With
-`track_history=False` the loop instead buffers the per-step score arrays and
-fetches them with a single `jax.device_get` every `sync_every` supersteps,
-letting XLA pipeline the window. Convergence is then detected up to
+blocks on the device every superstep, serializing dispatch. The loop instead
+buffers the per-step score arrays and fetches them with a single
+`jax.device_get` every `sync_every` supersteps, letting XLA pipeline the
+window; with `track_history=True` the per-step `local_edges` /
+`max_norm_load` arrays are buffered and drained on the same window (no
+per-step host sync there either). Convergence is then detected up to
 `sync_every - 1` steps late (the extra steps are still valid partitioning
-steps and are reflected in `PartitionResult.steps`); `sync_every=1` (the
-default) reproduces the fully synchronous behavior exactly.
+steps and are reflected in `PartitionResult.steps` and the history lists);
+`sync_every=1` (the default) reproduces the fully synchronous behavior
+exactly.
 """
 from __future__ import annotations
 
@@ -66,6 +69,7 @@ def run_convergence_loop(
     sync_every: int = 1,
     on_step=None,
     on_score=None,
+    on_drain=None,
 ):
     """Drive `step_fn` with the paper's score-stall halting (Section IV-D
     step 9): stop after `patience` consecutive steps whose score improves by
@@ -75,7 +79,13 @@ def run_convergence_loop(
     streaming `StreamRunner` so the halting semantics cannot drift.
 
     `on_step(state)` fires after every superstep (history tracking);
-    `on_score(float)` fires for every drained score, in step order.
+    `on_score(float)` fires for every drained score, in step order — every
+    *executed* step's score is drained, including the up-to-`sync_every - 1`
+    steps past the detected convergence point, so history lists stay aligned
+    with `steps_executed`. `on_drain()` fires once per fetched window, after
+    its scores; callers buffering their own per-step device arrays (e.g.
+    `run_partitioner`'s history metrics) drain them there, on the same
+    cadence as the score fetch.
 
     Returns (state, steps_executed, converged).
     """
@@ -93,15 +103,18 @@ def run_convergence_loop(
         for score in (float(s) for s in jax.device_get(pending)):
             if on_score is not None:
                 on_score(score)
+            if converged:
+                continue  # window tail past the detection point
             if score - prev_score < theta:
                 stall += 1
                 if stall >= patience:
                     converged = True
-                    break
             else:
                 stall = 0
             prev_score = score
         pending = []
+        if on_drain is not None:
+            on_drain()
         if converged:
             break
     return state, steps, converged
@@ -207,20 +220,30 @@ def run_partitioner(
         raise ValueError(f"unknown algorithm {algo!r}")
 
     history: Dict[str, List[float]] = {"local_edges": [], "max_norm_load": [], "score": []}
+    # per-step metric arrays stay on device and are drained on the same
+    # sync_every window as the scores — history tracking no longer forces a
+    # host sync per superstep
+    pending_le: List[jax.Array] = []
+    pending_ml: List[jax.Array] = []
 
     def on_step(s):
-        history["local_edges"].append(float(local_edges(s.labels, dg.dir_src, dg.dir_dst)))
-        history["max_norm_load"].append(
-            float(max_normalized_load(s.labels[: graph.n], dg.deg_out[: graph.n], k)))
+        pending_le.append(local_edges(s.labels, dg.dir_src, dg.dir_dst))
+        pending_ml.append(
+            max_normalized_load(s.labels[: graph.n], dg.deg_out[: graph.n], k))
+
+    def drain_metrics():
+        history["local_edges"].extend(float(x) for x in jax.device_get(pending_le))
+        history["max_norm_load"].extend(float(x) for x in jax.device_get(pending_ml))
+        pending_le.clear()
+        pending_ml.clear()
 
     state, steps, converged = run_convergence_loop(
         step_fn, state,
         max_steps=cfg.max_steps, patience=cfg.patience, theta=cfg.theta,
-        # history tracking materializes floats every step anyway, so the
-        # batched fetch only kicks in on the metrics-free fast path.
-        sync_every=1 if track_history else sync_every,
+        sync_every=sync_every,
         on_step=on_step if track_history else None,
         on_score=history["score"].append if track_history else None,
+        on_drain=drain_metrics if track_history else None,
     )
 
     labels = np.asarray(state.labels[: graph.n])

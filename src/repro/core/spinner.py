@@ -13,7 +13,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.device_graph import DeviceGraph, capacity
+from repro.core.device_graph import CAPACITY_MODES, DeviceGraph, capacity_device
 from repro.core.lp import edge_histogram_jnp, spinner_scores
 
 
@@ -25,6 +25,12 @@ class SpinnerConfig:
     patience: int = 5
     theta: float = 0.001
     capacity_mode: str = "spinner"
+
+    def __post_init__(self):
+        if self.capacity_mode not in CAPACITY_MODES:
+            raise ValueError(
+                f"SpinnerConfig.capacity_mode={self.capacity_mode!r} is not "
+                f"one of {CAPACITY_MODES}")
 
 
 class SpinnerState(NamedTuple):
@@ -90,7 +96,7 @@ def _spinner_impl(edge_src, edge_dst, edge_w, deg_out, inv_wsum, vmask, cap,
 
 
 def spinner_superstep(dg: DeviceGraph, cfg: SpinnerConfig, state: SpinnerState) -> SpinnerState:
-    cap = jnp.asarray(capacity(dg.m, cfg.k, cfg.epsilon, cfg.capacity_mode), jnp.float32)
+    cap = capacity_device(dg.m, cfg.k, cfg.epsilon, cfg.capacity_mode)
     return _spinner_impl(
         dg.edge_src, dg.edge_dst, dg.edge_w, dg.deg_out, dg.inv_wsum, dg.vmask,
         cap, state, n=dg.n, n_pad=dg.n_pad, cfg=cfg,

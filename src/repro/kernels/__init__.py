@@ -5,12 +5,18 @@ wrappers in ops.py (jit'd public API), oracles in ref.py (pure jnp /
 numpy). Validated under interpret=True on CPU; TPU is the target.
 
   edge_histogram    LP-score / eq.-13 accumulation (partitioner O(E) loop)
+  edge_phase        fused dual-histogram edge phase (both superstep
+                    histograms in one slab pass; the hist_impl="pallas" path)
   la_update         weighted-LA probability update, eqs. (8)/(9)
   flash_attention   causal/SWA GQA flash attention (LM training)
   decode_attention  flash-decode over a KV cache (LM serving)
+
+See README.md in this package for the kernel inventory and the edge-phase
+fusion rationale.
 """
 from repro.kernels import ops, ref
 from repro.kernels.edge_histogram import edge_histogram_pallas
+from repro.kernels.edge_phase import fused_edge_phase_pallas
 from repro.kernels.la_update import la_update_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.decode_attention import decode_attention_pallas
@@ -19,6 +25,7 @@ __all__ = [
     "ops",
     "ref",
     "edge_histogram_pallas",
+    "fused_edge_phase_pallas",
     "la_update_pallas",
     "flash_attention_pallas",
     "decode_attention_pallas",

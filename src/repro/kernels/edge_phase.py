@@ -1,0 +1,164 @@
+"""Pallas TPU kernel: fused dual-histogram edge phase for the Revolver superstep.
+
+The superstep's O(E) work per chunk is *two* edge-label histograms over the
+same blocked edge slab (DESIGN.md §3, Section IV-D steps 3 and 5):
+
+  * the LP-score histogram (eqs. 10-12): hist[v, l] += w(e) over v's edges
+    whose neighbor currently carries label l;
+  * the eq.-13 weight accumulation: w_raw[v, slot(e)] += val(e), where val
+    depends on whether the neighbor's latest lambda agrees with v's selected
+    action and on slot feasibility (p_mig > 0).
+
+Run separately (`edge_histogram` twice) each histogram re-reads the slab from
+HBM, re-builds the [Ec, Bv] row-indicator matrix R, and re-launches the grid.
+This kernel computes **both in a single pass**: one R shared across two MXU
+matmuls (R^T @ L_score and R^T @ L_w), with the neighbor-label gathers, the
+agreement/feasibility masking, and the padding kill done in-kernel, so the
+two [Bv, k] accumulators stay VMEM-resident across all edge chunks of a
+block (grid minor dimension = edge chunks). Versus two independent kernel
+launches this halves slab HBM traffic and indicator construction; versus the
+XLA path it eliminates the double scatter-add.
+
+Slot-selection for the two `weight_mode`s (the eq.-13 ambiguity, DESIGN.md
+§10):
+
+  * ``neighbor_lambda`` — the weight histogram's slot is lambda(u), known
+    per edge in-kernel, so L_w is a full [Ec, k] indicator and the kernel
+    returns the finished w_raw.
+  * ``self_lambda`` — the slot is lambda(v) = argmax score(v, :), which only
+    exists *after* all edge chunks are reduced. But every edge of row v then
+    lands in the same slot, so the row's contribution factors into two
+    scalars independent of lambda(v):
+
+        A[v] = sum_e agree(e) * w(e)          (agreement mass)
+        N[v] = #{e : !agree(e), non-padding}  (disagreement count)
+
+    The kernel accumulates A into column 0 and N into column 1 of the
+    second output; the caller scatters ``A + feasible(lambda(v)) * N`` into
+    the one-hot lambda(v) slot. The fusion is exact: every kernel input
+    (labels, lam, action, p_mig) is available before the edge phase.
+
+VMEM budget: the label/lambda gathers keep the full [n_pad] int32 vectors
+VMEM-resident (8 bytes/vertex total). That holds to n_pad ~ 1M/core; beyond
+that the slab's dst ids must be pre-translated host-side into per-block
+label chunks (the streaming layer's dirty-block machinery already tracks the
+needed locality) — see kernels/README.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_WEIGHT_MODES = ("self_lambda", "neighbor_lambda")
+
+
+def _kernel(dst_ref, row_ref, w_ref, lbl_ref, lam_ref, act_ref, feas_ref,
+            hist_ref, wacc_ref, *, block_v: int, k: int, weight_mode: str):
+    """One (vertex-block, edge-chunk) grid cell; accumulates both outputs."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+        wacc_ref[...] = jnp.zeros_like(wacc_ref)
+
+    dst = dst_ref[0]            # [Ec] int32 global neighbor id
+    row = row_ref[0]            # [Ec] int32 local row per edge
+    w = w_ref[0]                # [Ec] f32   eq.-4 weight (0 for padding)
+    labels = lbl_ref[...]       # [n_pad] int32 freshest labels (async)
+    lam = lam_ref[...]          # [n_pad] int32 latest argmax labels
+    action = act_ref[0]         # [Bv] int32 LA-selected action psi(v)
+    feas = feas_ref[0]          # [k] f32 1.0 where p_mig(l) > 0
+    ec = dst.shape[0]
+
+    nbr_lbl = labels[dst]       # in-kernel gathers: one slab read serves both
+    lam_nbr = lam[dst]
+    live = (w > 0).astype(jnp.float32)          # padding kill
+    agree = action[row] == lam_nbr              # psi(v) == lambda(u)
+
+    rows_iota = jax.lax.broadcasted_iota(jnp.int32, (ec, block_v), 1)
+    slot_iota = jax.lax.broadcasted_iota(jnp.int32, (ec, k), 1)
+    r_mat = (row[:, None] == rows_iota).astype(jnp.float32)      # shared R
+    l_score = (nbr_lbl[:, None] == slot_iota).astype(jnp.float32) * w[:, None]
+
+    if weight_mode == "neighbor_lambda":
+        # slot = lambda(u): full indicator, finished w_raw out of the kernel
+        val = jnp.where(agree, w, feas[lam_nbr]) * live
+        l_w = (lam_nbr[:, None] == slot_iota).astype(jnp.float32) * val[:, None]
+    else:  # self_lambda: per-row (A, N) factorization, see module docstring
+        a_col = jnp.where(agree, w, 0.0)[:, None]
+        n_col = jnp.where(agree, 0.0, live)[:, None]
+        l_w = jnp.where(slot_iota == 0, a_col,
+                        jnp.where(slot_iota == 1, n_col, 0.0))
+
+    dn = (((0,), (0,)), ((), ()))               # R^T @ L
+    hist_ref[0] += jax.lax.dot_general(
+        r_mat, l_score, dimension_numbers=dn,
+        preferred_element_type=jnp.float32)
+    wacc_ref[0] += jax.lax.dot_general(
+        r_mat, l_w, dimension_numbers=dn,
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_v", "k", "weight_mode", "edge_chunk", "interpret"))
+def fused_edge_phase_pallas(
+    edge_dst: jax.Array,    # [nb, e_max] int32 global neighbor id
+    edge_rows: jax.Array,   # [nb, e_max] int32 local row per edge
+    edge_vals: jax.Array,   # [nb, e_max] f32 eq.-4 weight (0 = padding)
+    labels: jax.Array,      # [n_pad] int32 current labels
+    lam: jax.Array,         # [n_pad] int32 latest argmax labels
+    actions: jax.Array,     # [nb, block_v] int32 LA-selected actions
+    feasible: jax.Array,    # [nb, k] f32 1.0 where p_mig(l) > 0
+    *,
+    block_v: int,
+    k: int,
+    weight_mode: str = "self_lambda",
+    edge_chunk: int = 256,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (hist_score, w_acc), both [nb, block_v, k] f32.
+
+    ``w_acc`` is the finished eq.-13 histogram for ``neighbor_lambda``; for
+    ``self_lambda`` column 0 carries A[v] and column 1 carries N[v] (the
+    caller finishes the one-hot scatter once lambda(v) is known).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    if weight_mode not in _WEIGHT_MODES:
+        raise ValueError(
+            f"unknown weight_mode {weight_mode!r}; expected {_WEIGHT_MODES}")
+    if weight_mode == "self_lambda" and k < 2:
+        raise ValueError("self_lambda packing needs k >= 2 output columns")
+    nb, e_max = edge_dst.shape
+    if e_max % edge_chunk != 0:
+        # a floored chunk count would silently drop the slab tail
+        raise ValueError(f"e_max={e_max} not a multiple of edge_chunk={edge_chunk}")
+    n_pad = labels.shape[0]
+    n_chunks = e_max // edge_chunk
+
+    grid = (nb, n_chunks)
+    out_shape = [jax.ShapeDtypeStruct((nb, block_v, k), jnp.float32)] * 2
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, block_v=block_v, k=k, weight_mode=weight_mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, edge_chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, edge_chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, edge_chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((n_pad,), lambda i, j: (0,)),
+            pl.BlockSpec((n_pad,), lambda i, j: (0,)),
+            pl.BlockSpec((1, block_v), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_v, k), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, block_v, k), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(edge_dst, edge_rows, edge_vals, labels, lam, actions, feasible)

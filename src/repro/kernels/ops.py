@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.edge_histogram import edge_histogram_pallas
+from repro.kernels.edge_phase import fused_edge_phase_pallas
 from repro.kernels.la_update import la_update_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.decode_attention import decode_attention_pallas
@@ -24,6 +25,29 @@ def edge_histogram(edge_slots, edge_rows, edge_vals, *, block_v: int, k: int,
     return edge_histogram_pallas(
         edge_slots, edge_rows, edge_vals,
         block_v=block_v, k=k, edge_chunk=edge_chunk, interpret=interpret)
+
+
+def fused_edge_phase(edge_dst, edge_rows, edge_vals, labels, lam, actions,
+                     feasible, *, block_v: int, k: int,
+                     weight_mode: str = "self_lambda",
+                     edge_chunk: int | None = None,
+                     interpret: bool | None = None):
+    """(hist_score, w_acc), both [nb, block_v, k] — see kernels/edge_phase.py.
+
+    Both Revolver edge histograms in one slab pass; `w_acc` is the finished
+    eq.-13 histogram for weight_mode="neighbor_lambda", or the (A, N)
+    column packing for "self_lambda". `edge_chunk=None` picks 256 when the
+    slab divides (the `block_edges` invariant) or one whole-slab chunk for
+    sub-256 slabs; a larger non-divisible slab raises in the kernel wrapper
+    rather than silently building an oversized [e_max, block_v] indicator.
+    """
+    e_max = edge_dst.shape[-1]
+    if edge_chunk is None:
+        edge_chunk = e_max if (e_max < 256 and e_max % 256 != 0) else 256
+    return fused_edge_phase_pallas(
+        edge_dst, edge_rows, edge_vals, labels, lam, actions, feasible,
+        block_v=block_v, k=k, weight_mode=weight_mode,
+        edge_chunk=edge_chunk, interpret=interpret)
 
 
 def la_update(probs, weights, signals, alpha: float, beta: float, *,

@@ -36,6 +36,49 @@ def edge_histogram_ref(
 
 
 # --------------------------------------------------------------------------
+# fused_edge_phase (eq. 11 score histogram + eq. 13 accumulation, one pass)
+# --------------------------------------------------------------------------
+def fused_edge_phase_ref(
+    edge_dst: np.ndarray,   # [nb, e_max] int32 global neighbor id
+    edge_rows: np.ndarray,  # [nb, e_max] int32 local row per edge
+    edge_vals: np.ndarray,  # [nb, e_max] f32 weight (0 = padding)
+    labels: np.ndarray,     # [n_pad] int32
+    lam: np.ndarray,        # [n_pad] int32
+    actions: np.ndarray,    # [nb, block_v] int32
+    feasible: np.ndarray,   # [nb, k] f32 (1.0 where p_mig > 0)
+    *,
+    block_v: int,
+    k: int,
+    weight_mode: str = "self_lambda",
+) -> tuple[np.ndarray, np.ndarray]:
+    """Two scatter-add loops mirroring the fused kernel's output contract:
+    (hist_score, w_acc) with w_acc = finished eq.-13 histogram for
+    neighbor_lambda, or the per-row (A, N) column packing for self_lambda."""
+    edge_dst = np.asarray(edge_dst)
+    edge_rows = np.asarray(edge_rows)
+    edge_vals = np.asarray(edge_vals, dtype=np.float32)
+    labels = np.asarray(labels)
+    lam = np.asarray(lam)
+    actions = np.asarray(actions)
+    feasible = np.asarray(feasible, dtype=np.float32)
+    nb, _ = edge_dst.shape
+    hist = np.zeros((nb, block_v, k), np.float32)
+    wacc = np.zeros((nb, block_v, k), np.float32)
+    for b in range(nb):
+        dst, row, w = edge_dst[b], edge_rows[b], edge_vals[b]
+        live = (w > 0).astype(np.float32)
+        agree = actions[b][row] == lam[dst]
+        np.add.at(hist[b], (row, labels[dst]), w)
+        if weight_mode == "neighbor_lambda":
+            val = np.where(agree, w, feasible[b][lam[dst]]) * live
+            np.add.at(wacc[b], (row, lam[dst]), val)
+        else:
+            np.add.at(wacc[b][:, 0], row, np.where(agree, w, 0.0))
+            np.add.at(wacc[b][:, 1], row, np.where(agree, 0.0, live))
+    return hist, wacc
+
+
+# --------------------------------------------------------------------------
 # la_update (eqs. 8/9, m sequential passes, penalty-first schedule)
 # --------------------------------------------------------------------------
 def la_update_ref(

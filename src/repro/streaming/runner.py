@@ -89,6 +89,13 @@ class StreamRunner:
     The runner owns the incremental graph state plus the carried assignment
     (labels + LA probabilities). Each `ingest(delta)` returns a
     `DeltaReport`; `run(stream)` drains an iterator of deltas.
+
+    `**revolver_kwargs` flow into the shared `RevolverConfig`, so the kernel
+    dispatch knobs plumb through the streaming path exactly as in the batch
+    runner: `StreamRunner(n, cfg, hist_impl="pallas", la_impl="pallas")`
+    refines every delta through the fused dual-histogram edge-phase kernel
+    and the Pallas LA update (typos raise at construction, see
+    `RevolverConfig.__post_init__`).
     """
 
     def __init__(self, n: int, cfg: StreamConfig, *, seed: int = 0, **revolver_kwargs):

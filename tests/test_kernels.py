@@ -34,6 +34,85 @@ def test_edge_histogram_sweep(nb, e_max, block_v, k, chunk):
 
 
 # --------------------------------------------------------------------------
+# fused_edge_phase (dual-histogram edge phase; both weight_modes, padded
+# slabs, k not a multiple of 128)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("weight_mode", ["self_lambda", "neighbor_lambda"])
+@pytest.mark.parametrize("nb,e_max,block_v,k,chunk", [
+    (1, 256, 64, 8, 256),
+    (3, 512, 128, 10, 256),     # k=10: not a lane multiple
+    (2, 1024, 256, 32, 512),
+    (2, 768, 32, 5, 256),       # odd k, short rows
+])
+def test_fused_edge_phase_sweep(nb, e_max, block_v, k, chunk, weight_mode):
+    rng = np.random.default_rng(nb * 1000 + k)
+    n_pad = nb * block_v
+    dst = rng.integers(0, n_pad, (nb, e_max)).astype(np.int32)
+    rows = rng.integers(0, block_v, (nb, e_max)).astype(np.int32)
+    vals = rng.uniform(0.1, 2, (nb, e_max)).astype(np.float32)
+    # padded tail: ~40% of the back half are padding slots (val 0, row/dst 0)
+    pad = rng.random((nb, e_max)) > 0.6
+    pad[:, : e_max // 2] = False
+    vals[pad] = 0.0
+    dst[pad] = 0
+    rows[pad] = 0
+    labels = rng.integers(0, k, n_pad).astype(np.int32)
+    lam = rng.integers(0, k, n_pad).astype(np.int32)
+    actions = rng.integers(0, k, (nb, block_v)).astype(np.int32)
+    feasible = (rng.random((nb, k)) > 0.3).astype(np.float32)
+
+    hist, wacc = ops.fused_edge_phase(
+        jnp.asarray(dst), jnp.asarray(rows), jnp.asarray(vals),
+        jnp.asarray(labels), jnp.asarray(lam), jnp.asarray(actions),
+        jnp.asarray(feasible), block_v=block_v, k=k,
+        weight_mode=weight_mode, edge_chunk=chunk)
+    hist_want, wacc_want = ref.fused_edge_phase_ref(
+        dst, rows, vals, labels, lam, actions, feasible,
+        block_v=block_v, k=k, weight_mode=weight_mode)
+    np.testing.assert_allclose(np.asarray(hist), hist_want,
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(wacc), wacc_want,
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_fused_edge_phase_score_hist_matches_edge_histogram():
+    """The fused kernel's first output == the standalone histogram kernel
+    fed the externally gathered neighbor labels (the two-call path)."""
+    rng = np.random.default_rng(7)
+    nb, e_max, block_v, k = 2, 512, 64, 8
+    n_pad = nb * block_v
+    dst = rng.integers(0, n_pad, (nb, e_max)).astype(np.int32)
+    rows = rng.integers(0, block_v, (nb, e_max)).astype(np.int32)
+    vals = (rng.uniform(0.1, 2, (nb, e_max))
+            * (rng.random((nb, e_max)) > 0.3)).astype(np.float32)
+    labels = rng.integers(0, k, n_pad).astype(np.int32)
+    lam = rng.integers(0, k, n_pad).astype(np.int32)
+    actions = rng.integers(0, k, (nb, block_v)).astype(np.int32)
+    feasible = np.ones((nb, k), np.float32)
+
+    hist, _ = ops.fused_edge_phase(
+        jnp.asarray(dst), jnp.asarray(rows), jnp.asarray(vals),
+        jnp.asarray(labels), jnp.asarray(lam), jnp.asarray(actions),
+        jnp.asarray(feasible), block_v=block_v, k=k)
+    want = ops.edge_histogram(
+        jnp.asarray(labels)[jnp.asarray(dst)], jnp.asarray(rows),
+        jnp.asarray(vals), block_v=block_v, k=k)
+    np.testing.assert_allclose(np.asarray(hist), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_fused_edge_phase_rejects_bad_mode():
+    z2 = jnp.zeros((1, 256), jnp.int32)
+    zf = jnp.zeros((1, 256), jnp.float32)
+    zl = jnp.zeros((64,), jnp.int32)
+    with pytest.raises(ValueError, match="weight_mode"):
+        ops.fused_edge_phase(z2, z2, zf, zl, zl,
+                             jnp.zeros((1, 64), jnp.int32),
+                             jnp.zeros((1, 4), jnp.float32),
+                             block_v=64, k=4, weight_mode="bogus")
+
+
+# --------------------------------------------------------------------------
 # la_update
 # --------------------------------------------------------------------------
 @pytest.mark.parametrize("v,k,alpha,beta", [

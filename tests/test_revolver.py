@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.device_graph import capacity, prepare_device_graph
+from repro.core.device_graph import capacity, capacity_device, prepare_device_graph
 from repro.core.metrics import local_edges, max_normalized_load, partition_loads
 from repro.core.revolver import RevolverConfig, revolver_init, revolver_superstep
 from repro.core.runner import run_partitioner
@@ -128,6 +128,87 @@ class TestCapacity:
         assert capacity(1000, 10, 0.05, "paper") == pytest.approx(5.0)
         with pytest.raises(ValueError):
             capacity(1000, 10, 0.05, "bogus")
+
+    def test_capacity_device_cached(self):
+        """The superstep-side capacity is hoisted: same (m, cfg) inputs hit
+        one committed device buffer instead of a per-step recompute."""
+        a = capacity_device(1000, 10, 0.05, "spinner")
+        b = capacity_device(1000, 10, 0.05, "spinner")
+        assert a is b
+        assert float(a) == pytest.approx(105.0)
+        assert capacity_device(1000, 10, 0.05, "paper") is not a
+
+
+class TestConfigValidation:
+    """Impl/mode knobs reject typos at construction instead of silently
+    falling back to the jnp path."""
+
+    @pytest.mark.parametrize("field,bad", [
+        ("la_impl", "palas"),
+        ("hist_impl", "cuda"),
+        ("weight_mode", "self_lamda"),
+        ("capacity_mode", "bogus"),
+    ])
+    def test_revolver_bad_choice_raises(self, field, bad):
+        with pytest.raises(ValueError, match=field):
+            RevolverConfig(k=4, **{field: bad})
+
+    def test_revolver_valid_choices_accepted(self):
+        cfg = RevolverConfig(k=4, la_impl="pallas", hist_impl="pallas",
+                             weight_mode="neighbor_lambda",
+                             capacity_mode="paper")
+        assert cfg.hist_impl == "pallas"
+
+    def test_spinner_bad_capacity_mode_raises(self):
+        with pytest.raises(ValueError, match="capacity_mode"):
+            SpinnerConfig(k=4, capacity_mode="bogus")
+
+
+class TestFusedHistParity:
+    """hist_impl="pallas" routes the superstep through the fused
+    dual-histogram edge-phase kernel; at fixed seed it must reproduce the
+    jnp scatter-add partition (acceptance: 1e-5 score tolerance)."""
+
+    @pytest.mark.parametrize("weight_mode", ["self_lambda", "neighbor_lambda"])
+    def test_superstep_trajectory_matches_jnp(self, sbm_graph, weight_mode):
+        dg = prepare_device_graph(sbm_graph, n_blocks=4)
+        finals = {}
+        for impl in ("jnp", "pallas"):
+            cfg = RevolverConfig(k=4, hist_impl=impl, weight_mode=weight_mode)
+            st = revolver_init(dg, cfg, jax.random.PRNGKey(0))
+            for _ in range(6):
+                st = revolver_superstep(dg, cfg, st)
+            finals[impl] = st
+        assert abs(float(finals["jnp"].score)
+                   - float(finals["pallas"].score)) <= 1e-5
+        np.testing.assert_allclose(np.asarray(finals["jnp"].probs),
+                                   np.asarray(finals["pallas"].probs),
+                                   atol=1e-5, rtol=1e-5)
+        # bit-exact labels only hold where both paths accumulate f32 the
+        # same way (CPU interpret mode); a compiled MXU reduction may flip
+        # ULP-level argmax ties, which the score tolerance above absorbs
+        if jax.default_backend() == "cpu":
+            np.testing.assert_array_equal(np.asarray(finals["jnp"].labels),
+                                          np.asarray(finals["pallas"].labels))
+
+    def test_end_to_end_partition_matches_jnp(self, clique_graph):
+        rj = run_partitioner("revolver", clique_graph, 4, max_steps=15, seed=7,
+                             track_history=False, hist_impl="jnp")
+        rp = run_partitioner("revolver", clique_graph, 4, max_steps=15, seed=7,
+                             track_history=False, hist_impl="pallas")
+        assert rp.local_edges == pytest.approx(rj.local_edges, abs=1e-5)
+        assert rp.max_norm_load == pytest.approx(rj.max_norm_load, abs=1e-5)
+        if jax.default_backend() == "cpu":  # see trajectory test above
+            assert rp.steps == rj.steps
+            np.testing.assert_array_equal(rj.labels, rp.labels)
+
+    def test_pallas_hist_with_pallas_la(self, clique_graph):
+        """Both kernel knobs on at once (the full-TPU configuration)."""
+        r = run_partitioner("revolver", clique_graph, 4, max_steps=10, seed=0,
+                            track_history=False, hist_impl="pallas",
+                            la_impl="pallas")
+        assert 0.0 <= r.local_edges <= 1.0
+        assert r.max_norm_load > 0.0
 
 
 class TestPaperClaims:

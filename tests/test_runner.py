@@ -70,6 +70,27 @@ class TestSyncEvery:
         with pytest.raises(ValueError):
             run_partitioner("revolver", sbm_graph, 4, sync_every=0)
 
+    def test_history_windowed_fetch_matches_per_step(self, sbm_graph):
+        """track_history now buffers the per-step metric arrays and drains
+        them through the sync_every window; the recorded values must be
+        identical to the fully synchronous per-step fetch."""
+        r1 = run_partitioner("revolver", sbm_graph, 4, seed=3, max_steps=10,
+                             patience=10_000, track_history=True, sync_every=1)
+        r4 = run_partitioner("revolver", sbm_graph, 4, seed=3, max_steps=10,
+                             patience=10_000, track_history=True, sync_every=4)
+        assert r1.history == r4.history
+        for key in ("score", "local_edges", "max_norm_load"):
+            assert len(r4.history[key]) == r4.steps
+
+    def test_history_full_on_windowed_early_halt(self, sbm_graph):
+        """Convergence inside a fetch window: every *executed* step still
+        lands in all three history lists (they stay aligned with steps)."""
+        r = run_partitioner("revolver", sbm_graph, 4, seed=0, theta=np.inf,
+                            patience=3, track_history=True, sync_every=4)
+        assert r.converged
+        for key in ("score", "local_edges", "max_norm_load"):
+            assert len(r.history[key]) == r.steps
+
 
 class TestWarmStart:
     def test_warm_start_converges_faster(self, sbm_graph):

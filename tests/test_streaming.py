@@ -295,6 +295,27 @@ class TestStreamRunner:
         assert reports[1].steps > reports[0].steps or reports[1].converged
         assert 0.0 <= reports[-1].local_edges <= 1.0
 
+    def test_fused_kernel_knob_plumbs_through(self, sbm_graph):
+        """hist_impl/la_impl flow through StreamRunner into the shared
+        RevolverConfig: the fused pallas edge phase must reproduce the jnp
+        refinement trajectory at fixed seed (same deltas, same stream)."""
+        finals = {}
+        for impl in ("jnp", "pallas"):
+            cfg = StreamConfig(k=4, n_blocks=4, refine_max_steps=4,
+                               refine_patience=2)
+            runner = StreamRunner(sbm_graph.n, cfg, seed=0, hist_impl=impl)
+            assert runner.rcfg.hist_impl == impl
+            runner.run(stream_from_graph(sbm_graph, 2, seed=0))
+            finals[impl] = runner.labels
+        # bit-exact only where both paths accumulate f32 identically (CPU
+        # interpret mode); see the parity tests in test_revolver.py
+        if jax.default_backend() == "cpu":
+            np.testing.assert_array_equal(finals["jnp"], finals["pallas"])
+
+    def test_bad_impl_knob_rejected_at_construction(self, sbm_graph):
+        with pytest.raises(ValueError, match="hist_impl"):
+            StreamRunner(sbm_graph.n, StreamConfig(k=4), hist_impl="palas")
+
     def test_deletion_delta_keeps_partition_sane(self, sbm_graph):
         cfg = StreamConfig(k=4, n_blocks=4, refine_max_steps=4, refine_patience=2)
         runner = StreamRunner(sbm_graph.n, cfg, seed=0)
