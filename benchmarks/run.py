@@ -19,8 +19,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from benchmarks import (fig3_partition_quality, fig4_convergence,
-                            kernel_bench, roofline_report, streaming_bench,
-                            superstep_bench, table1_datasets)
+                            kernel_bench, roofline_report, scaling_bench,
+                            streaming_bench, superstep_bench, table1_datasets)
 
     t0 = time.time()
     print("=" * 72)
@@ -53,6 +53,12 @@ def main(argv=None):
     bench = superstep_bench.run(quick=args.quick)
     if not bench["meta"]["parity_ok"]:
         raise SystemExit("superstep kernel-parity regression (see above)")
+
+    print("=" * 72)
+    print("== Sharded superstep scaling (1/2/4/8 devices + quality gate) ==")
+    scaling = scaling_bench.run(quick=args.quick)
+    if not scaling["meta"]["quality_ok"]:
+        raise SystemExit("sharded-schedule quality regression (see above)")
 
     print("=" * 72)
     print("== Kernel microbench (CPU; interpret-mode parity) ==")

@@ -1,0 +1,236 @@
+"""Multi-device scaling benchmark for the sharded superstep schedule.
+
+Measures supersteps/s and edges/s for ``chunk_schedule="sharded"`` at 1, 2,
+4, and 8 devices on a fixed block layout, plus the partition-quality ratio
+of the Jacobi merge against the sequential schedule, and writes
+``BENCH_scaling.json``.
+
+Device count must be pinned before the backend initializes, so each count
+runs in its own **worker subprocess** launched with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``; the parent process
+orchestrates, merges the workers' JSON, and applies the quality gate (the CI
+regression check: exit nonzero when the sharded schedule's quality ratio
+drops below ``--quality-gate``, default 0.97).
+
+On a CPU container the forced host devices share the machine's physical
+cores (this box has very few), so the recorded wall-clock speedups are
+bounded by ``cpu_count``, not by the schedule — the provenance stamp records
+both so the trajectory stays comparable. On a real 8-device TPU slice the
+same harness measures true scaling.
+
+  PYTHONPATH=src python benchmarks/scaling_bench.py            # full
+  PYTHONPATH=src python benchmarks/scaling_bench.py --quick    # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+DEVICE_COUNTS = (1, 2, 4, 8)
+
+
+# --------------------------------------------------------------------------
+# worker: one device count, prints one JSON document to stdout
+# --------------------------------------------------------------------------
+def _worker(args) -> dict:
+    import jax
+
+    from repro.core.device_graph import prepare_sharded_device_graph
+    from repro.core.revolver import (
+        RevolverConfig,
+        place_revolver_state,
+        revolver_init,
+        revolver_superstep,
+    )
+    from repro.core.runner import run_partitioner
+    from repro.graphs import load_dataset
+    from repro.launch.mesh import make_blocks_mesh
+
+    assert jax.device_count() >= args.devices, (
+        f"worker has {jax.device_count()} devices, need {args.devices} "
+        "(launch via the parent so XLA_FLAGS is set)")
+    mesh = make_blocks_mesh(args.devices)
+    out = {"devices": args.devices, "rows": [], "quality": []}
+
+    for name in args.datasets:
+        g = load_dataset(name, scale=args.scale, seed=args.seed)
+        sdg = prepare_sharded_device_graph(g, mesh, n_blocks=args.n_blocks)
+        cfg = RevolverConfig(k=args.k, chunk_schedule="sharded")
+
+        st = place_revolver_state(
+            revolver_init(sdg, cfg, jax.random.PRNGKey(args.seed)), sdg)
+        st = revolver_superstep(sdg, cfg, st)          # compile + warm
+        jax.block_until_ready(st.labels)
+        t0 = time.perf_counter()
+        for _ in range(args.steps):
+            st = revolver_superstep(sdg, cfg, st)
+        jax.block_until_ready(st.labels)
+        sps = args.steps / (time.perf_counter() - t0)
+        out["rows"].append({
+            "dataset": name, "n": g.n, "m": g.m,
+            "n_blocks": sdg.n_blocks, "blocks_per_shard": sdg.blocks_per_shard,
+            "supersteps_per_s": sps, "edges_per_s": sps * g.m,
+        })
+
+        if args.quality:
+            common = dict(seed=args.seed, max_steps=args.quality_steps,
+                          patience=10_000, track_history=False)
+            seq = run_partitioner("revolver", g, args.k, **common)
+            sh = run_partitioner("revolver", g, args.k, mesh=mesh,
+                                 chunk_schedule="sharded", **common)
+            out["quality"].append({
+                "dataset": name,
+                "sequential_local_edges": seq.local_edges,
+                "sharded_local_edges": sh.local_edges,
+                "quality_ratio": sh.local_edges / max(seq.local_edges, 1e-9),
+                "sequential_max_norm_load": seq.max_norm_load,
+                "sharded_max_norm_load": sh.max_norm_load,
+            })
+    return out
+
+
+# --------------------------------------------------------------------------
+# parent: orchestrate workers, merge, gate
+# --------------------------------------------------------------------------
+_MARK = "SCALING_WORKER_JSON:"
+
+
+def _spawn_worker(args, devices: int, quality: bool) -> dict:
+    env = dict(os.environ)
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if not f.startswith("--xla_force_host_platform_device_count")]
+    flags.append(f"--xla_force_host_platform_device_count={devices}")
+    env["XLA_FLAGS"] = " ".join(flags)
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+        + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    cmd = [
+        sys.executable, os.path.abspath(__file__), "--worker",
+        "--devices", str(devices),
+        "--datasets", *args.datasets,
+        "--scale", str(args.scale), "--k", str(args.k),
+        "--n-blocks", str(args.n_blocks), "--steps", str(args.steps),
+        "--quality-steps", str(args.quality_steps), "--seed", str(args.seed),
+    ] + (["--quality"] if quality else [])
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stdout + proc.stderr)
+        raise RuntimeError(f"scaling worker ({devices} devices) failed")
+    for line in proc.stdout.splitlines():
+        if line.startswith(_MARK):
+            return json.loads(line[len(_MARK):])
+    sys.stderr.write(proc.stdout + proc.stderr)
+    raise RuntimeError(f"scaling worker ({devices} devices) printed no result")
+
+
+def run(*, quick: bool = False, out: str = "BENCH_scaling.json",
+        datasets=None, scale: float | None = None, k: int = 8,
+        n_blocks: int = 8, steps: int | None = None,
+        quality_steps: int | None = None, quality_gate: float = 0.97,
+        device_counts=DEVICE_COUNTS, seed: int = 0) -> dict:
+    from repro.utils.provenance import bench_provenance
+
+    if datasets is None:
+        datasets = ("WIKI",) if quick else ("WIKI", "LJ")
+    if scale is None:
+        scale = 3e-4 if quick else 1e-3
+    if steps is None:
+        steps = 3 if quick else 8
+    if quality_steps is None:
+        quality_steps = 20 if quick else 60
+    args = argparse.Namespace(
+        datasets=list(datasets), scale=scale, k=k, n_blocks=n_blocks,
+        steps=steps, quality_steps=quality_steps, seed=seed)
+
+    results = {
+        "meta": {
+            "provenance": bench_provenance(),
+            "quick": quick,
+            "k": k, "n_blocks": n_blocks, "scale": scale,
+            "steps_timed": steps, "quality_steps": quality_steps,
+            "device_counts": list(device_counts),
+            "quality_gate": quality_gate,
+        },
+        "scaling": [],
+        "quality": [],
+    }
+
+    base = {}   # dataset -> 1-device sharded steps/s
+    print(f"{'devices':>7s} {'dataset':8s} {'supersteps/s':>12s} "
+          f"{'edges/s':>12s} {'speedup':>8s}")
+    for devices in device_counts:
+        # quality needs the Jacobi merge actually split across shards, so it
+        # is measured in the max-device worker (and trivially at 1 device,
+        # where sharded == sequential bit-exactly)
+        worker = _spawn_worker(args, devices, quality=devices == max(device_counts))
+        for row in worker["rows"]:
+            row["devices"] = devices
+            if devices == min(device_counts):
+                base[row["dataset"]] = row["supersteps_per_s"]
+            row["speedup_vs_1dev"] = (
+                row["supersteps_per_s"] / max(base.get(row["dataset"], 0.0), 1e-9))
+            results["scaling"].append(row)
+            print(f"{devices:7d} {row['dataset']:8s} "
+                  f"{row['supersteps_per_s']:12.2f} {row['edges_per_s']:12.0f} "
+                  f"{row['speedup_vs_1dev']:7.2f}x")
+        for q in worker["quality"]:
+            q["devices"] = devices
+            results["quality"].append(q)
+            print(f"quality {q['dataset']}@{devices}dev: "
+                  f"ratio={q['quality_ratio']:.4f} "
+                  f"(seq le={q['sequential_local_edges']:.4f} "
+                  f"sharded le={q['sharded_local_edges']:.4f})")
+
+    # an empty quality list must fail the gate, not vacuously pass it
+    ok = bool(results["quality"]) and all(
+        q["quality_ratio"] >= quality_gate for q in results["quality"])
+    results["meta"]["quality_ok"] = ok
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {out}")
+    if not ok:
+        print(f"SHARDED QUALITY REGRESSION (gate {quality_gate})",
+              file=sys.stderr)
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker", action="store_true",
+                    help="internal: run one device-count measurement")
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--quality", action="store_true")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_scaling.json")
+    ap.add_argument("--datasets", nargs="*", default=None)
+    ap.add_argument("--scale", type=float, default=None)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--n-blocks", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--quality-steps", type=int, default=None)
+    ap.add_argument("--quality-gate", type=float, default=0.97)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.worker:
+        if args.datasets is None or args.scale is None or args.steps is None:
+            raise SystemExit("--worker requires explicit dataset/scale/steps")
+        result = _worker(args)
+        print(_MARK + json.dumps(result))
+        return 0
+
+    results = run(quick=args.quick, out=args.out, datasets=args.datasets,
+                  scale=args.scale, k=args.k, n_blocks=args.n_blocks,
+                  steps=args.steps, quality_steps=args.quality_steps,
+                  quality_gate=args.quality_gate, seed=args.seed)
+    return 0 if results["meta"]["quality_ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

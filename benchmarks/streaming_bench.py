@@ -19,6 +19,7 @@ import time
 from repro.core import run_partitioner
 from repro.graphs import load_dataset
 from repro.streaming import StreamConfig, StreamRunner, stream_from_graph
+from repro.utils.provenance import bench_provenance
 
 
 def run(*, dataset="WIKI", k=8, scale=0.002, deltas=5, seed=0,
@@ -55,6 +56,7 @@ def run(*, dataset="WIKI", k=8, scale=0.002, deltas=5, seed=0,
     print(f"quality-vs-batch={quality_ratio:.3f}  step-ratio={step_ratio:.3f}")
 
     result = {
+        "meta": {"provenance": bench_provenance()},
         "dataset": dataset, "scale": scale, "k": k, "deltas": deltas,
         "restream": restream,
         "batch": {"steps": batch.steps, "local_edges": batch.local_edges,

@@ -35,6 +35,7 @@ import numpy as np
 from repro.core.device_graph import prepare_device_graph
 from repro.core.revolver import RevolverConfig, revolver_init, revolver_superstep
 from repro.graphs import load_dataset
+from repro.utils.provenance import bench_provenance
 
 IMPLS = ("jnp", "pallas")
 PARITY_TOL = 1e-5
@@ -81,8 +82,15 @@ def _kernel_compare(dg, k: int, *, iters: int, seed: int) -> dict:
     compute the same pair of [nb, block_v, k] histograms with
     weight_mode="neighbor_lambda" semantics, so the comparison isolates the
     fusion win: one slab read + one shared row-indicator instead of two.
+    The two-call dispatch path is retired from the superstep; the
+    single-histogram kernel survives only as this oracle, imported from its
+    kernel module directly (no ops.py wrapper).
     """
-    from repro.kernels.ops import edge_histogram, fused_edge_phase
+    from repro.kernels.edge_histogram import edge_histogram_pallas
+    from repro.kernels.ops import fused_edge_phase
+
+    def edge_histogram(slots, rows, vals, *, block_v, k):
+        return edge_histogram_pallas(slots, rows, vals, block_v=block_v, k=k)
 
     key = jax.random.PRNGKey(seed)
     nb, bv = dg.n_blocks, dg.block_v
@@ -149,14 +157,12 @@ def run(*, quick: bool = False, out: str = "BENCH_superstep.json",
 
     results = {
         "meta": {
-            "backend": jax.default_backend(),
-            "jax": jax.__version__,
+            "provenance": bench_provenance(),
             "quick": quick,
             "k": k,
             "n_blocks": n_blocks,
             "scale": scale,
             "steps_timed": steps,
-            "unix_time": time.time(),
         },
         "superstep": [],
         "kernel": None,

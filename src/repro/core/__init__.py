@@ -2,7 +2,13 @@
 from repro.core.la import classic_la_update, weighted_la_update
 from repro.core.lp import edge_histogram_jnp, normalized_penalty, spinner_penalty
 from repro.core.metrics import local_edges, max_normalized_load, partition_loads
-from repro.core.device_graph import DeviceGraph, prepare_device_graph
+from repro.core.device_graph import (
+    DeviceGraph,
+    ShardedDeviceGraph,
+    prepare_device_graph,
+    prepare_sharded_device_graph,
+    shard_device_graph,
+)
 from repro.core.revolver import (
     RevolverConfig,
     RevolverState,
@@ -30,7 +36,10 @@ __all__ = [
     "max_normalized_load",
     "partition_loads",
     "DeviceGraph",
+    "ShardedDeviceGraph",
     "prepare_device_graph",
+    "prepare_sharded_device_graph",
+    "shard_device_graph",
     "RevolverConfig",
     "RevolverState",
     "revolver_init",

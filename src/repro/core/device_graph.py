@@ -14,11 +14,14 @@ never influence loads or scores.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.graphs.blocking import block_edges
 from repro.graphs.csr import Graph
@@ -91,6 +94,122 @@ def prepare_device_graph(g: Graph, n_blocks: int = 8, block_multiple: int = 8) -
         inv_wsum=jnp.asarray(inv_wsum),
         vmask=jnp.asarray(vmask),
     )
+
+
+# ---------------------------------------------------------------------------
+# sharded (multi-device) layout: chunk_schedule="sharded"
+# ---------------------------------------------------------------------------
+# arrays indexed by block (or by block-major vertex) shard over "blocks";
+# the flat metric arrays are replicated so eager metrics stay SPMD-legal
+_BLOCKED_FIELDS = ("blk_dst", "blk_row", "blk_w")
+_VERTEX_FIELDS = ("deg_out", "inv_wsum", "vmask")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedDeviceGraph:
+    """A `DeviceGraph` placed on a 1-D ``("blocks",)`` mesh.
+
+    The block axis (and the block-major padded vertex axis) is sharded:
+    device d owns `blocks_per_shard` contiguous blocks and the matching
+    `[n_pad / n_shards]` slices of every per-vertex array, so the sharded
+    superstep's edge phase reads only device-local slabs. Flat metric
+    arrays are replicated. Attribute access falls through to the wrapped
+    `DeviceGraph`, so metric/runner code consumes either layout unchanged.
+
+    `n_blocks` is always a multiple of `n_shards` (see `align_blocks`):
+    alignment pads with empty blocks (zero slabs, masked vertices) rather
+    than resizing `block_v`, keeping per-shard shapes static and identical.
+    """
+
+    dg: DeviceGraph
+    mesh: jax.sharding.Mesh
+    n_shards: int
+    blocks_per_shard: int
+
+    def __getattr__(self, name):
+        return getattr(self.dg, name)
+
+
+def align_blocks(dg: DeviceGraph, multiple: int) -> DeviceGraph:
+    """Pad `dg` with empty blocks until `n_blocks % multiple == 0`.
+
+    Padding blocks carry all-zero slabs (dst=0, row=0, w=0.0) and masked-out
+    vertices with zero degree, exactly like the in-block padding the kernels
+    already ignore, so they change no score, load, or migration.
+    """
+    if multiple <= 0:
+        raise ValueError(f"multiple must be positive, got {multiple}")
+    pad_blocks = (-dg.n_blocks) % multiple
+    if pad_blocks == 0:
+        return dg
+    nb = dg.n_blocks + pad_blocks
+    n_pad = nb * dg.block_v
+    pad_v = n_pad - dg.n_pad
+
+    def pad_rows(a, fill):
+        return jnp.concatenate(
+            [a, jnp.full((pad_blocks, a.shape[1]), fill, a.dtype)], axis=0)
+
+    return dg._replace(
+        n_pad=n_pad,
+        n_blocks=nb,
+        blk_dst=pad_rows(dg.blk_dst, 0),
+        blk_row=pad_rows(dg.blk_row, 0),
+        blk_w=pad_rows(dg.blk_w, 0.0),
+        deg_out=jnp.pad(dg.deg_out, (0, pad_v)),
+        inv_wsum=jnp.pad(dg.inv_wsum, (0, pad_v)),
+        vmask=jnp.pad(dg.vmask, (0, pad_v)),
+    )
+
+
+def shard_device_graph(dg: DeviceGraph, mesh: jax.sharding.Mesh) -> ShardedDeviceGraph:
+    """Align `dg` to the mesh and place every array with a `NamedSharding`.
+
+    Blocked slabs and per-vertex arrays land sliced on their owning device
+    (`P("blocks", ...)`), flat metric arrays replicated (`P()`), so the
+    sharded superstep starts from committed, correctly-placed buffers and
+    donation can reuse them in place.
+    """
+    if "blocks" not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh.axis_names} has no 'blocks' axis")
+    n_shards = int(mesh.shape["blocks"])
+    dg = align_blocks(dg, n_shards)
+    placed = {}
+    for name in dg._fields:
+        value = getattr(dg, name)
+        if not isinstance(value, jnp.ndarray):
+            placed[name] = value
+            continue
+        if name in _BLOCKED_FIELDS:
+            spec = P("blocks", None)
+        elif name in _VERTEX_FIELDS:
+            spec = P("blocks")
+        else:
+            spec = P()
+        placed[name] = jax.device_put(value, NamedSharding(mesh, spec))
+    return ShardedDeviceGraph(
+        dg=DeviceGraph(**placed),
+        mesh=mesh,
+        n_shards=n_shards,
+        blocks_per_shard=dg.n_blocks // n_shards,
+    )
+
+
+def prepare_sharded_device_graph(
+    g: Graph,
+    mesh: jax.sharding.Mesh,
+    n_blocks: int = 8,
+    block_multiple: int = 8,
+) -> ShardedDeviceGraph:
+    """`prepare_device_graph` + device-aligned blocking + NamedSharding placement.
+
+    Requests at least one block per shard; whatever block count the blocking
+    pass settles on is then padded up to a multiple of the mesh size.
+    """
+    n_shards = int(mesh.shape["blocks"])
+    dg = prepare_device_graph(
+        g, n_blocks=max(n_blocks, n_shards), block_multiple=block_multiple)
+    return shard_device_graph(dg, mesh)
 
 
 CAPACITY_MODES = ("spinner", "paper")

@@ -27,10 +27,23 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.device_graph import CAPACITY_MODES, DeviceGraph, capacity_device
+from repro.core.device_graph import (
+    CAPACITY_MODES,
+    DeviceGraph,
+    ShardedDeviceGraph,
+    capacity_device,
+)
 from repro.core.la import split_weights_and_signals, weighted_la_update
 from repro.core.lp import edge_histogram_jnp, revolver_scores
+from repro.parallel.collectives import (
+    gather_shards,
+    psum_delta_merge,
+    replicated_chain_key,
+    shard_chain_key,
+)
 
 # valid values per config knob; typos used to silently fall back to the jnp
 # path (e.g. la_impl="palas"), now they raise at construction
@@ -39,6 +52,7 @@ _VALID_CHOICES = {
     "hist_impl": ("jnp", "pallas"),
     "weight_mode": ("self_lambda", "neighbor_lambda"),
     "capacity_mode": CAPACITY_MODES,
+    "chunk_schedule": ("sequential", "sharded"),
 }
 
 
@@ -64,6 +78,14 @@ class RevolverConfig:
     #   "neighbor_lambda": slot lambda(u) — v accumulates a histogram of its
     #                      neighbors' argmax labels.
     weight_mode: str = "self_lambda"
+    # superstep execution schedule:
+    #   "sequential": one device, lax.scan over all vertex blocks — the PR-2
+    #                 async semantics, bit-identical at fixed seed.
+    #   "sharded":    shard_map over a 1-D ("blocks",) mesh — each device
+    #                 scans only its own blocks (async within the shard),
+    #                 labels are all-gathered and load deltas psum-merged
+    #                 once per superstep (Jacobi sync across shards).
+    chunk_schedule: str = "sequential"
 
     def __post_init__(self):
         for name, valid in _VALID_CHOICES.items():
@@ -163,8 +185,14 @@ def revolver_init_from_labels(
 
 
 def _chunk_step(cfg: RevolverConfig, block_v: int, carry: Tuple, xs: Tuple):
-    """Process one asynchronous chunk (see module docstring)."""
-    labels, lam, loads, cap, key, score_sum = carry
+    """Process one asynchronous chunk (see module docstring).
+
+    Besides the drifting load view, the carry tracks `delta` — the same
+    migration updates accumulated from zero. The sequential schedule drops
+    it (XLA dead-code-eliminates the chain); the sharded schedule psum-merges
+    the per-shard deltas into the global loads at the superstep boundary.
+    """
+    labels, lam, loads, delta, cap, key, score_sum = carry
     (blk_idx, e_dst, e_row, e_w, probs, deg, inv_wsum, vmask) = xs
     bv, k = probs.shape
 
@@ -222,6 +250,7 @@ def _chunk_step(cfg: RevolverConfig, block_v: int, carry: Tuple, xs: Tuple):
     # -- 8. exact load update (visible to the next chunk) --------------------
     dmig = deg * migrate
     loads = loads.at[cur].add(-dmig).at[action].add(dmig)
+    delta = delta.at[cur].add(-dmig).at[action].add(dmig)
     labels = jax.lax.dynamic_update_slice(labels, new_lbl, (v0,))
 
     # -- 5. eq. (13) weight accumulation --------------------------------------
@@ -268,7 +297,7 @@ def _chunk_step(cfg: RevolverConfig, block_v: int, carry: Tuple, xs: Tuple):
     else:
         new_probs = weighted_la_update(probs, w_norm, r, cfg.alpha, cfg.beta, renorm=cfg.renorm)
 
-    return (labels, lam, loads, cap, key, score_sum), new_probs
+    return (labels, lam, loads, delta, cap, key, score_sum), new_probs
 
 
 @partial(jax.jit, static_argnames=("n", "n_blocks", "block_v", "cfg"),
@@ -291,9 +320,10 @@ def _superstep_impl(
         inv_b,
         msk_b,
     )
-    carry = (labels, lam, loads, cap, key, jnp.zeros((), jnp.float32))
+    carry = (labels, lam, loads, jnp.zeros_like(loads), cap, key,
+             jnp.zeros((), jnp.float32))
     step_fn = partial(_chunk_step, cfg, block_v)
-    (labels, lam, loads, _, key, score_sum), probs = jax.lax.scan(step_fn, carry, xs)
+    (labels, lam, loads, _, _, key, score_sum), probs = jax.lax.scan(step_fn, carry, xs)
     return RevolverState(
         labels=labels,
         lam=lam,
@@ -305,18 +335,146 @@ def _superstep_impl(
     )
 
 
-def revolver_superstep(dg: DeviceGraph, cfg: RevolverConfig, state: RevolverState) -> RevolverState:
+def _sharded_shard_body(
+    blk_dst, blk_row, blk_w, deg, inv_wsum, vmask, cap,
+    labels, lam, probs, loads, key,
+    *, block_v: int, blocks_per_shard: int, cfg: RevolverConfig,
+):
+    """Per-shard superstep body (runs under shard_map on the "blocks" mesh).
+
+    Jacobi across shards, async within: every shard all-gathers the
+    start-of-superstep labels/lam once, then scans its own blocks exactly
+    like the sequential schedule — its local migrations and argmax labels
+    are visible to its later blocks, remote shards' are not until the next
+    superstep. The drifting load view each shard scores against is the
+    global start-of-superstep loads plus its own migrations; the exact
+    global loads are restored at the boundary by psum-merging the per-shard
+    deltas (integer-valued degree sums, so the merge is exact and, on one
+    shard, bit-identical to the sequential update chain).
+    """
+    idx = jax.lax.axis_index("blocks")
+    local_n = blocks_per_shard * block_v
+    labels_g = gather_shards(labels, "blocks")        # [n_pad] Jacobi view
+    lam_g = gather_shards(lam, "blocks")
+    key_shard = shard_chain_key(key, "blocks")        # shard 0 keeps `key`
+
+    xs = (
+        idx * blocks_per_shard + jnp.arange(blocks_per_shard, dtype=jnp.int32),
+        blk_dst,
+        blk_row,
+        blk_w,
+        probs,
+        deg.reshape(blocks_per_shard, block_v),
+        inv_wsum.reshape(blocks_per_shard, block_v),
+        vmask.reshape(blocks_per_shard, block_v),
+    )
+    carry = (labels_g, lam_g, loads, jnp.zeros_like(loads), cap, key_shard,
+             jnp.zeros((), jnp.float32))
+    step_fn = partial(_chunk_step, cfg, block_v)
+    (labels_g, lam_g, _, delta, _, key_fin, score_sum), probs = \
+        jax.lax.scan(step_fn, carry, xs)
+
+    v0 = idx * local_n
+    labels_local = jax.lax.dynamic_slice(labels_g, (v0,), (local_n,))
+    lam_local = jax.lax.dynamic_slice(lam_g, (v0,), (local_n,))
+    loads_new = psum_delta_merge(loads, delta, "blocks")
+    score_sum = jax.lax.psum(score_sum, "blocks")
+    key_new = replicated_chain_key(key_fin, "blocks")
+    return labels_local, lam_local, probs, loads_new, key_new, score_sum
+
+
+@partial(jax.jit,
+         static_argnames=("mesh", "n", "block_v", "blocks_per_shard", "cfg"),
+         donate_argnames=("labels", "lam", "probs", "loads"))
+def _sharded_superstep_impl(
+    blk_dst, blk_row, blk_w, deg_out, inv_wsum, vmask, cap,
+    labels, lam, probs, loads, key, step,
+    *, mesh, n: int, block_v: int, blocks_per_shard: int, cfg: RevolverConfig,
+):
+    body = partial(
+        _sharded_shard_body,
+        block_v=block_v, blocks_per_shard=blocks_per_shard, cfg=cfg,
+    )
+    sharded = shard_map(
+        body, mesh=mesh,
+        in_specs=(
+            P("blocks", None), P("blocks", None), P("blocks", None),  # slabs
+            P("blocks"), P("blocks"), P("blocks"),                    # vertex
+            P(),                                                      # cap
+            P("blocks"), P("blocks"),                                 # labels/lam
+            P("blocks", None, None),                                  # probs
+            P(), P(),                                                 # loads/key
+        ),
+        out_specs=(P("blocks"), P("blocks"), P("blocks", None, None),
+                   P(), P(), P()),
+        check_rep=False,
+    )
+    labels, lam, probs, loads, key, score_sum = sharded(
+        blk_dst, blk_row, blk_w, deg_out, inv_wsum, vmask, cap,
+        labels, lam, probs, loads, key)
+    return RevolverState(
+        labels=labels,
+        lam=lam,
+        probs=probs,
+        loads=loads,
+        key=key,
+        step=step + 1,
+        score=score_sum / n,
+    )
+
+
+def place_revolver_state(state: RevolverState, sdg: ShardedDeviceGraph) -> RevolverState:
+    """Commit a freshly-initialized state to the sharded layout: per-vertex
+    buffers sliced onto their owning device, loads/key/scalars replicated —
+    so the donated superstep buffers are reused in place from step one."""
+    mesh = sdg.mesh
+
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return RevolverState(
+        labels=put(state.labels, P("blocks")),
+        lam=put(state.lam, P("blocks")),
+        probs=put(state.probs, P("blocks", None, None)),
+        loads=put(state.loads, P()),
+        key=put(state.key, P()),
+        step=put(state.step, P()),
+        score=put(state.score, P()),
+    )
+
+
+def revolver_superstep(dg, cfg: RevolverConfig, state: RevolverState) -> RevolverState:
     """One full superstep over all chunks. Jitted; static on (dg shape, cfg).
 
-    The state's labels / lam / probs / loads buffers are **donated**: the
-    [n_blocks, block_v, k] probability tensor and the label vectors are
-    updated in place instead of copied every superstep. The passed-in
-    `state` must therefore not be reused after this call (every caller in
-    the repo rebinds, `state = revolver_superstep(...)`); the small `key` /
-    `step` / `score` leaves stay valid, so the convergence loop's windowed
-    score buffering is unaffected.
+    `cfg.chunk_schedule` selects the execution plan: "sequential" scans all
+    blocks on one device (`dg` is a plain DeviceGraph); "sharded" runs the
+    per-shard scans data-parallel under shard_map (`dg` must be a
+    ShardedDeviceGraph, see `prepare_sharded_device_graph`).
+
+    The state's labels / lam / probs / loads buffers are **donated** under
+    either schedule: the [n_blocks, block_v, k] probability tensor and the
+    label vectors are updated in place instead of copied every superstep
+    (per-shard slices in the sharded schedule). The passed-in `state` must
+    therefore not be reused after this call (every caller in the repo
+    rebinds, `state = revolver_superstep(...)`); the small `key` / `step` /
+    `score` leaves stay valid, so the convergence loop's windowed score
+    buffering is unaffected.
     """
     cap = capacity_device(dg.m, cfg.k, cfg.epsilon, cfg.capacity_mode)
+    if cfg.chunk_schedule == "sharded":
+        if not isinstance(dg, ShardedDeviceGraph):
+            raise TypeError(
+                "chunk_schedule='sharded' needs a ShardedDeviceGraph "
+                "(see prepare_sharded_device_graph); got a plain DeviceGraph")
+        return _sharded_superstep_impl(
+            dg.blk_dst, dg.blk_row, dg.blk_w, dg.deg_out, dg.inv_wsum,
+            dg.vmask, cap, state.labels, state.lam, state.probs, state.loads,
+            state.key, state.step,
+            mesh=dg.mesh, n=dg.n, block_v=dg.block_v,
+            blocks_per_shard=dg.blocks_per_shard, cfg=cfg,
+        )
+    if isinstance(dg, ShardedDeviceGraph):
+        dg = dg.dg   # sequential schedule over a sharded layout's arrays
     return _superstep_impl(
         dg.blk_dst, dg.blk_row, dg.blk_w, dg.deg_out, dg.inv_wsum, dg.vmask,
         cap, state.labels, state.lam, state.probs, state.loads, state.key,

@@ -25,16 +25,24 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
-from repro.core.device_graph import DeviceGraph, prepare_device_graph
+from repro.core.device_graph import (
+    DeviceGraph,
+    ShardedDeviceGraph,
+    prepare_device_graph,
+    prepare_sharded_device_graph,
+    shard_device_graph,
+)
 from repro.core.metrics import local_edges, max_normalized_load
 from repro.core.revolver import (
     RevolverConfig,
+    place_revolver_state,
     revolver_init,
     revolver_init_from_labels,
     revolver_superstep,
 )
 from repro.core.spinner import (
     SpinnerConfig,
+    place_spinner_state,
     spinner_init,
     spinner_init_from_labels,
     spinner_superstep,
@@ -150,6 +158,7 @@ def run_partitioner(
     max_steps: Optional[int] = None,
     track_history: bool = True,
     dg: Optional[DeviceGraph] = None,
+    mesh=None,
     sync_every: int = 1,
     init_labels: Optional[np.ndarray] = None,
     init_probs: Optional[np.ndarray] = None,
@@ -172,11 +181,33 @@ def run_partitioner(
     probability tensor in `PartitionResult.probs` (needed to chain warm
     restarts); it is off by default because fetching [n_pad, k] floats to
     host is a real cost at production scale.
+
+    `chunk_schedule="sharded"` (a revolver/spinner config knob) runs the
+    superstep data-parallel over a 1-D ``("blocks",)`` mesh — `mesh` selects
+    it (default: all visible devices, see `make_blocks_mesh`); a passed `dg`
+    is aligned and placed onto the mesh if it is not already a
+    `ShardedDeviceGraph`.
     """
     t0 = time.time()
     if sync_every < 1:
         raise ValueError(f"sync_every must be >= 1, got {sync_every}")
-    if dg is None:
+    sharded = cfg_kwargs.get("chunk_schedule") == "sharded"
+    if mesh is not None and not sharded:
+        raise ValueError("mesh is only meaningful with chunk_schedule='sharded'")
+    if algo in ("hash", "range") and sharded:
+        raise TypeError(f"{algo!r} runs no supersteps; chunk_schedule is meaningless")
+    if sharded:
+        if mesh is None and isinstance(dg, ShardedDeviceGraph):
+            mesh = dg.mesh
+        if mesh is None:
+            from repro.launch.mesh import make_blocks_mesh
+
+            mesh = make_blocks_mesh()
+        if dg is None:
+            dg = prepare_sharded_device_graph(graph, mesh, n_blocks=n_blocks)
+        elif not isinstance(dg, ShardedDeviceGraph):
+            dg = shard_device_graph(dg, mesh)
+    elif dg is None:
         dg = prepare_device_graph(graph, n_blocks=n_blocks)
     key = jax.random.PRNGKey(seed)
 
@@ -206,6 +237,8 @@ def run_partitioner(
             if init_sharpen:
                 raise TypeError("init_sharpen requires init_labels")
             state = revolver_init(dg, cfg, key)
+        if sharded:
+            state = place_revolver_state(state, dg)
         step_fn = lambda s: revolver_superstep(dg, cfg, s)
     elif algo == "spinner":
         if init_probs is not None or init_sharpen:
@@ -215,6 +248,8 @@ def run_partitioner(
             state = spinner_init_from_labels(dg, cfg, key, init_labels)
         else:
             state = spinner_init(dg, cfg, key)
+        if sharded:
+            state = place_spinner_state(state, dg)
         step_fn = lambda s: spinner_superstep(dg, cfg, s)
     else:
         raise ValueError(f"unknown algorithm {algo!r}")
@@ -246,11 +281,25 @@ def run_partitioner(
         on_drain=drain_metrics if track_history else None,
     )
 
-    labels = np.asarray(state.labels[: graph.n])
-    le = float(local_edges(state.labels, dg.dir_src, dg.dir_dst))
-    ml = float(max_normalized_load(state.labels[: graph.n], dg.deg_out[: graph.n], k))
+    # final fetch: one device_get for everything still needed. With history
+    # tracking on, the final step's local_edges/max_norm_load already came
+    # back through the windowed drain — reuse them instead of issuing two
+    # extra blocking float(...) syncs after convergence.
+    fetch = {"labels": state.labels[: graph.n]}
+    if track_history and history["local_edges"]:
+        le, ml = history["local_edges"][-1], history["max_norm_load"][-1]
+    else:
+        fetch["le"] = local_edges(state.labels, dg.dir_src, dg.dir_dst)
+        fetch["ml"] = max_normalized_load(
+            state.labels[: graph.n], dg.deg_out[: graph.n], k)
+    if keep_probs and algo == "revolver":
+        fetch["probs"] = state.probs
+    fetched = jax.device_get(fetch)
+    if "le" in fetched:
+        le, ml = float(fetched["le"]), float(fetched["ml"])
     return PartitionResult(
-        algo=algo, k=k, labels=labels, steps=steps, converged=converged,
-        local_edges=le, max_norm_load=ml, history=history, wall_s=time.time() - t0,
-        probs=np.asarray(state.probs) if (keep_probs and algo == "revolver") else None,
+        algo=algo, k=k, labels=np.asarray(fetched["labels"]), steps=steps,
+        converged=converged, local_edges=le, max_norm_load=ml, history=history,
+        wall_s=time.time() - t0,
+        probs=np.asarray(fetched["probs"]) if "probs" in fetched else None,
     )

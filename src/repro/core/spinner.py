@@ -12,9 +12,19 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.device_graph import CAPACITY_MODES, DeviceGraph, capacity_device
+from repro.core.device_graph import (
+    CAPACITY_MODES,
+    DeviceGraph,
+    ShardedDeviceGraph,
+    capacity_device,
+)
 from repro.core.lp import edge_histogram_jnp, spinner_scores
+from repro.parallel.collectives import gather_shards, psum_delta_merge
+
+_CHUNK_SCHEDULES = ("sequential", "sharded")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,12 +35,22 @@ class SpinnerConfig:
     patience: int = 5
     theta: float = 0.001
     capacity_mode: str = "spinner"
+    # "sequential": one device over the flat edge arrays; "sharded": BSP
+    # data-parallel over the blocked slabs on a ("blocks",) mesh. Spinner is
+    # synchronous already, so sharding it changes no visibility semantics —
+    # only the histogram layout (slabs instead of flat) and where the work
+    # runs.
+    chunk_schedule: str = "sequential"
 
     def __post_init__(self):
         if self.capacity_mode not in CAPACITY_MODES:
             raise ValueError(
                 f"SpinnerConfig.capacity_mode={self.capacity_mode!r} is not "
                 f"one of {CAPACITY_MODES}")
+        if self.chunk_schedule not in _CHUNK_SCHEDULES:
+            raise ValueError(
+                f"SpinnerConfig.chunk_schedule={self.chunk_schedule!r} is "
+                f"not one of {_CHUNK_SCHEDULES}")
 
 
 class SpinnerState(NamedTuple):
@@ -95,8 +115,119 @@ def _spinner_impl(edge_src, edge_dst, edge_w, deg_out, inv_wsum, vmask, cap,
     return SpinnerState(new_labels, loads, key, state.step + 1, score)
 
 
-def spinner_superstep(dg: DeviceGraph, cfg: SpinnerConfig, state: SpinnerState) -> SpinnerState:
+def _spinner_shard_body(
+    blk_dst, blk_row, blk_w, deg, inv_wsum, vmask, cap,
+    labels, loads, key,
+    *, n_pad: int, block_v: int, blocks_per_shard: int, cfg: SpinnerConfig,
+):
+    """Per-shard BSP step: identical semantics to `_spinner_impl`, with the
+    histogram taken over the shard's blocked slabs, candidate demand and
+    load deltas psum-merged, and the migration uniforms drawn from the full
+    [n_pad] stream then sliced — so the draw a vertex sees is independent of
+    how many shards the mesh has."""
+    idx = jax.lax.axis_index("blocks")
+    local_n = blocks_per_shard * block_v
+    k = cfg.k
+    key, k_mig = jax.random.split(key)
+    labels_g = gather_shards(labels, "blocks")
+
+    # eq. (3) histogram over the local slabs (same edges as the flat arrays)
+    rows_local = (
+        jnp.arange(blocks_per_shard, dtype=jnp.int32)[:, None] * block_v
+        + blk_row
+    ).reshape(-1)
+    slots = labels_g[blk_dst.reshape(-1)]
+    hist = edge_histogram_jnp(rows_local, slots, blk_w.reshape(-1), local_n, k)
+    scores = spinner_scores(hist, inv_wsum, loads, cap)
+    bump = jax.nn.one_hot(labels, k, dtype=scores.dtype) * 1e-6
+    cand = jnp.argmax(scores + bump, axis=-1).astype(jnp.int32)
+    best = jnp.max(scores, axis=-1)
+
+    wants = (cand != labels) & vmask
+    demand = psum_delta_merge(
+        jnp.zeros((k,), jnp.float32),
+        jnp.zeros((k,), jnp.float32).at[cand].add(deg * wants),
+        "blocks")
+    remaining = cap - loads
+    p_mig = jnp.where(demand > 0,
+                      jnp.clip(remaining / jnp.maximum(demand, 1e-9), 0.0, 1.0),
+                      1.0)
+    u_full = jax.random.uniform(k_mig, (n_pad,))
+    u = jax.lax.dynamic_slice(u_full, (idx * local_n,), (local_n,))
+    migrate = wants & (u < p_mig[cand])
+    new_labels = jnp.where(migrate, cand, labels)
+
+    dmig = deg * migrate
+    delta = jnp.zeros((k,), jnp.float32).at[labels].add(-dmig).at[cand].add(dmig)
+    loads_new = psum_delta_merge(loads, delta, "blocks")
+    score_sum = jax.lax.psum(jnp.sum(jnp.where(vmask, best, 0.0)), "blocks")
+    return new_labels, loads_new, key, score_sum
+
+
+@partial(jax.jit,
+         static_argnames=("mesh", "n", "n_pad", "block_v",
+                          "blocks_per_shard", "cfg"),
+         donate_argnames=("labels", "loads"))
+def _spinner_sharded_impl(
+    blk_dst, blk_row, blk_w, deg_out, inv_wsum, vmask, cap,
+    labels, loads, key, step,
+    *, mesh, n: int, n_pad: int, block_v: int, blocks_per_shard: int,
+    cfg: SpinnerConfig,
+):
+    body = partial(
+        _spinner_shard_body,
+        n_pad=n_pad, block_v=block_v, blocks_per_shard=blocks_per_shard,
+        cfg=cfg,
+    )
+    sharded = shard_map(
+        body, mesh=mesh,
+        in_specs=(
+            P("blocks", None), P("blocks", None), P("blocks", None),
+            P("blocks"), P("blocks"), P("blocks"),
+            P(),
+            P("blocks"), P(), P(),
+        ),
+        out_specs=(P("blocks"), P(), P(), P()),
+        check_rep=False,
+    )
+    labels, loads, key, score_sum = sharded(
+        blk_dst, blk_row, blk_w, deg_out, inv_wsum, vmask, cap,
+        labels, loads, key)
+    return SpinnerState(labels, loads, key, step + 1, score_sum / n)
+
+
+def place_spinner_state(state: SpinnerState, sdg: ShardedDeviceGraph) -> SpinnerState:
+    """Commit an initialized state to the sharded layout (labels sliced onto
+    their owning device, the rest replicated)."""
+    mesh = sdg.mesh
+
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return SpinnerState(
+        labels=put(state.labels, P("blocks")),
+        loads=put(state.loads, P()),
+        key=put(state.key, P()),
+        step=put(state.step, P()),
+        score=put(state.score, P()),
+    )
+
+
+def spinner_superstep(dg, cfg: SpinnerConfig, state: SpinnerState) -> SpinnerState:
     cap = capacity_device(dg.m, cfg.k, cfg.epsilon, cfg.capacity_mode)
+    if cfg.chunk_schedule == "sharded":
+        if not isinstance(dg, ShardedDeviceGraph):
+            raise TypeError(
+                "chunk_schedule='sharded' needs a ShardedDeviceGraph "
+                "(see prepare_sharded_device_graph); got a plain DeviceGraph")
+        return _spinner_sharded_impl(
+            dg.blk_dst, dg.blk_row, dg.blk_w, dg.deg_out, dg.inv_wsum,
+            dg.vmask, cap, state.labels, state.loads, state.key, state.step,
+            mesh=dg.mesh, n=dg.n, n_pad=dg.n_pad, block_v=dg.block_v,
+            blocks_per_shard=dg.blocks_per_shard, cfg=cfg,
+        )
+    if isinstance(dg, ShardedDeviceGraph):
+        dg = dg.dg
     return _spinner_impl(
         dg.edge_src, dg.edge_dst, dg.edge_w, dg.deg_out, dg.inv_wsum, dg.vmask,
         cap, state, n=dg.n, n_pad=dg.n_pad, cfg=cfg,

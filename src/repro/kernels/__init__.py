@@ -4,9 +4,11 @@ Layout per kernel: <name>.py (pl.pallas_call + BlockSpec tiling),
 wrappers in ops.py (jit'd public API), oracles in ref.py (pure jnp /
 numpy). Validated under interpret=True on CPU; TPU is the target.
 
-  edge_histogram    LP-score / eq.-13 accumulation (partitioner O(E) loop)
   edge_phase        fused dual-histogram edge phase (both superstep
                     histograms in one slab pass; the hist_impl="pallas" path)
+  edge_histogram    single-histogram kernel, kept ONLY as a test/bench
+                    oracle for edge_phase (its two-launch superstep dispatch
+                    path is retired; no ops.py wrapper)
   la_update         weighted-LA probability update, eqs. (8)/(9)
   flash_attention   causal/SWA GQA flash attention (LM training)
   decode_attention  flash-decode over a KV cache (LM serving)

@@ -12,19 +12,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.edge_histogram import edge_histogram_pallas
 from repro.kernels.edge_phase import fused_edge_phase_pallas
 from repro.kernels.la_update import la_update_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.decode_attention import decode_attention_pallas
 
-
-def edge_histogram(edge_slots, edge_rows, edge_vals, *, block_v: int, k: int,
-                   edge_chunk: int = 256, interpret: bool | None = None):
-    """hist [nb, block_v, k] — see kernels/edge_histogram.py."""
-    return edge_histogram_pallas(
-        edge_slots, edge_rows, edge_vals,
-        block_v=block_v, k=k, edge_chunk=edge_chunk, interpret=interpret)
+# NOTE: the single-histogram `edge_histogram` kernel no longer has a public
+# op wrapper — the fused dual-histogram edge phase below superseded its
+# two-launch dispatch path in the superstep. The kernel itself stays
+# importable (`repro.kernels.edge_histogram.edge_histogram_pallas`) purely
+# as a test/bench oracle for the fused kernel's score histogram.
 
 
 def fused_edge_phase(edge_dst, edge_rows, edge_vals, labels, lam, actions,

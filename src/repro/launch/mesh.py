@@ -33,3 +33,22 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """1-chip mesh with the production axis names (tests/smoke runs)."""
     return make_mesh_compat((1, 1), ("data", "model"))
+
+
+def make_blocks_mesh(n_shards: int | None = None):
+    """1-D ``("blocks",)`` mesh for the sharded partitioner superstep.
+
+    The graph workload shards its vertex-block axis, not model/data, so it
+    gets its own mesh builder. ``n_shards=None`` takes every visible device;
+    an explicit count takes the first ``n_shards`` (scaling benchmarks sweep
+    1/2/4/8 on a fixed device pool).
+    """
+    import numpy as np
+
+    devices = jax.devices()
+    if n_shards is None:
+        n_shards = len(devices)
+    if not 1 <= n_shards <= len(devices):
+        raise ValueError(
+            f"n_shards={n_shards} not in [1, {len(devices)}] visible devices")
+    return jax.sharding.Mesh(np.asarray(devices[:n_shards]), ("blocks",))

@@ -6,6 +6,9 @@
       device traffic is O(B·H·D) instead of an all-gather of the cache.
   ef_int8_psum — error-feedback int8 gradient all-reduce (the DP
       gradient-compression feature; 4x wire-format reduction).
+  gather_shards / psum_delta_merge / shard_chain_key / replicated_chain_key
+      — the graph-partitioner's sharded-superstep primitives (Jacobi merge
+      across a 1-D "blocks" mesh; see core/revolver.py).
 """
 from __future__ import annotations
 
@@ -61,3 +64,44 @@ def ef_int8_psum(g, err, axis: str):
     n = jax.lax.psum(1, axis)
     g_hat = jax.lax.psum(deq, axis) / n
     return g_hat, new_err
+
+
+# --------------------------------------------------------------------------
+# sharded partitioner superstep (Jacobi merge across a "blocks" mesh)
+# --------------------------------------------------------------------------
+def gather_shards(x, axis: str):
+    """All-gather a sharded per-vertex vector back to its global shape.
+
+    The sharded superstep's edge phase gathers neighbor labels by global
+    vertex id, so each shard needs the full label vector once per superstep
+    (the Jacobi sync point); everything after the gather is shard-local.
+    """
+    return jax.lax.all_gather(x, axis, tiled=True)
+
+
+def psum_delta_merge(base, delta, axis: str):
+    """``base + psum(delta)`` — merge shard-local counter deltas.
+
+    The per-partition load vector b(l) stays exact under this merge: each
+    shard accumulates only the degree deltas of its own migrations, and the
+    deltas are integer-valued f32 (vertex outdegrees), so the psum neither
+    loses precision (below 2^24 edges) nor double-counts. On one shard this
+    degenerates to ``base + delta`` bit-exactly.
+    """
+    return base + jax.lax.psum(delta, axis)
+
+
+def shard_chain_key(key, axis: str):
+    """Per-shard PRNG chain root: shard 0 keeps ``key``, shard s folds in s.
+
+    Keeping shard 0's chain untouched makes the 1-shard sharded schedule
+    bit-identical to the sequential scan (same key chain, same draws).
+    """
+    idx = jax.lax.axis_index(axis)
+    return jnp.where(idx == 0, key, jax.random.fold_in(key, idx))
+
+
+def replicated_chain_key(key, axis: str):
+    """Carry shard 0's final chained key forward as the replicated state key
+    (the next superstep re-derives per-shard chains from it)."""
+    return jax.lax.all_gather(key, axis)[0]

@@ -27,8 +27,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.device_graph import DeviceGraph
 from repro.graphs.blocking import block_slab_sizes, fill_block_slab
@@ -160,6 +162,7 @@ class IncrementalDeviceGraph:
         block_multiple: int = 8,
         edge_chunk: int = 256,
         e_headroom: float = 1.5,
+        mesh=None,
     ):
         self.inc = IncrementalGraph(n)
         n_blocks = max(1, min(n_blocks, n))
@@ -167,6 +170,17 @@ class IncrementalDeviceGraph:
         block_v = -(-block_v // block_multiple) * block_multiple
         self.block_v = block_v
         self.n_blocks = -(-n // block_v)
+        # blocks that can ever hold a real vertex (slab rewrites stop here;
+        # alignment blocks beyond stay all-zero for the whole stream)
+        self._real_blocks = self.n_blocks
+        # mesh-aligned streaming (sharded chunk_schedule): pad to a multiple
+        # of the mesh size with empty blocks up front, so every delta's
+        # device layout is already device-aligned and each rewritten dirty
+        # slab transfers straight to its owning device
+        self.mesh = mesh
+        if mesh is not None:
+            n_shards = int(mesh.shape["blocks"])
+            self.n_blocks += (-self.n_blocks) % n_shards
         self.n_pad = self.n_blocks * block_v
         self.edge_chunk = edge_chunk
         self.e_headroom = float(e_headroom)
@@ -189,7 +203,7 @@ class IncrementalDeviceGraph:
         g = self.inc.to_graph()
         self.graph = g
 
-        sizes = block_slab_sizes(g.adj_ptr, g.n, self.block_v, self.n_blocks)
+        sizes = block_slab_sizes(g.adj_ptr, g.n, self.block_v, self._real_blocks)
         need = int(sizes.max()) if sizes.size else 0
         if need > self.e_max or self.e_max == 0:
             # overflow: re-pad every slab with headroom (one jit recompile)
@@ -197,7 +211,7 @@ class IncrementalDeviceGraph:
             self._blk_dst = np.zeros((self.n_blocks, self.e_max), dtype=np.int32)
             self._blk_row = np.zeros((self.n_blocks, self.e_max), dtype=np.int32)
             self._blk_w = np.zeros((self.n_blocks, self.e_max), dtype=np.float32)
-            dirty = np.arange(self.n_blocks)
+            dirty = np.arange(self._real_blocks)
             info.repadded = True
         else:
             touched = info.touched_vertices
@@ -224,6 +238,20 @@ class IncrementalDeviceGraph:
         vmask[: g.n] = True
         src_flat = np.repeat(np.arange(g.n, dtype=np.int32), np.diff(g.adj_ptr).astype(np.int64))
         dir_src = np.repeat(np.arange(g.n, dtype=np.int32), np.diff(g.row_ptr).astype(np.int64))
+        if self.mesh is not None:
+            # device-aligned placement: each slab row / per-vertex slice goes
+            # straight from host to its owning device; flat metric arrays
+            # are replicated so eager metrics stay SPMD-legal
+            def put_blocked(a):
+                return jax.device_put(a, NamedSharding(self.mesh, P("blocks", None)))
+
+            def put_vertex(a):
+                return jax.device_put(a, NamedSharding(self.mesh, P("blocks")))
+
+            def put_flat(a):
+                return jax.device_put(np.asarray(a), NamedSharding(self.mesh, P()))
+        else:
+            put_blocked = put_vertex = put_flat = jnp.asarray
         return DeviceGraph(
             n=g.n,
             n_pad=n_pad,
@@ -231,15 +259,15 @@ class IncrementalDeviceGraph:
             n_blocks=self.n_blocks,
             block_v=self.block_v,
             e_max=self.e_max,
-            edge_src=jnp.asarray(src_flat),
-            edge_dst=jnp.asarray(g.adj_idx),
-            edge_w=jnp.asarray(g.adj_w),
-            dir_src=jnp.asarray(dir_src),
-            dir_dst=jnp.asarray(g.col_idx),
-            blk_dst=jnp.asarray(self._blk_dst),
-            blk_row=jnp.asarray(self._blk_row),
-            blk_w=jnp.asarray(self._blk_w),
-            deg_out=jnp.asarray(deg_out),
-            inv_wsum=jnp.asarray(inv_wsum),
-            vmask=jnp.asarray(vmask),
+            edge_src=put_flat(src_flat),
+            edge_dst=put_flat(g.adj_idx),
+            edge_w=put_flat(g.adj_w),
+            dir_src=put_flat(dir_src),
+            dir_dst=put_flat(g.col_idx),
+            blk_dst=put_blocked(self._blk_dst),
+            blk_row=put_blocked(self._blk_row),
+            blk_w=put_blocked(self._blk_w),
+            deg_out=put_vertex(deg_out),
+            inv_wsum=put_vertex(inv_wsum),
+            vmask=put_vertex(vmask),
         )

@@ -34,11 +34,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.device_graph import shard_device_graph
 from repro.core.metrics import local_edges, max_normalized_load
 from repro.core.runner import run_convergence_loop
 from repro.core.revolver import (
     RevolverConfig,
     RevolverState,
+    place_revolver_state,
     revolver_init,
     revolver_init_from_labels,
     revolver_superstep,
@@ -96,13 +98,17 @@ class StreamRunner:
     refines every delta through the fused dual-histogram edge-phase kernel
     and the Pallas LA update (typos raise at construction, see
     `RevolverConfig.__post_init__`).
+
+    `chunk_schedule="sharded"` runs every refine superstep data-parallel on
+    a ``("blocks",)`` mesh (pass `mesh=`, default all visible devices). The
+    incremental layout is mesh-aligned up front, so a delta's rewritten
+    dirty slabs transfer straight to their owning device and the jitted
+    sharded superstep stays shape-stable across the stream.
     """
 
-    def __init__(self, n: int, cfg: StreamConfig, *, seed: int = 0, **revolver_kwargs):
+    def __init__(self, n: int, cfg: StreamConfig, *, seed: int = 0, mesh=None,
+                 **revolver_kwargs):
         self.cfg = cfg
-        self.idg = IncrementalDeviceGraph(
-            n, n_blocks=cfg.n_blocks, e_headroom=cfg.e_headroom
-        )
         # one config for every refine call -> one jit cache entry per layout
         self.rcfg = RevolverConfig(
             k=cfg.k,
@@ -110,6 +116,17 @@ class StreamRunner:
             patience=cfg.refine_patience,
             theta=cfg.theta,
             **revolver_kwargs,
+        )
+        if self.rcfg.chunk_schedule == "sharded" and mesh is None:
+            from repro.launch.mesh import make_blocks_mesh
+
+            mesh = make_blocks_mesh()
+        if mesh is not None and self.rcfg.chunk_schedule != "sharded":
+            raise ValueError(
+                "mesh is only meaningful with chunk_schedule='sharded'")
+        self.mesh = mesh
+        self.idg = IncrementalDeviceGraph(
+            n, n_blocks=cfg.n_blocks, e_headroom=cfg.e_headroom, mesh=mesh
         )
         self._key = jax.random.PRNGKey(seed)
         self.labels: Optional[np.ndarray] = None   # [n_active] carried labels
@@ -136,6 +153,10 @@ class StreamRunner:
         max_steps = cfg.refine_max_steps if max_steps is None else max_steps
         patience = cfg.refine_patience if patience is None else patience
         dg, info = self.idg.apply(delta)
+        if self.mesh is not None:
+            # arrays are already aligned + placed (IncrementalDeviceGraph
+            # owns the mesh); this only wraps them for the sharded superstep
+            dg = shard_device_graph(dg, self.mesh)
 
         self._key, k_init = jax.random.split(self._key)
         if self.labels is None:
@@ -145,6 +166,8 @@ class StreamRunner:
                 dg, self.rcfg, k_init, self.labels, probs=self.probs,
                 prob_sharpen=cfg.warm_sharpen,
             )
+        if self.mesh is not None:
+            state = place_revolver_state(state, dg)
 
         steps = 0
         if cfg.restream and self.labels is not None:

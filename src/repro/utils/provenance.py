@@ -1,0 +1,53 @@
+"""Provenance stamp shared by every ``BENCH_*.json`` artifact.
+
+The perf trajectory only means something if two artifacts are known to come
+from comparable environments: the PR-2 baseline recorded neither the commit
+nor the device count, so a regression could not be told apart from a
+hardware change. Every bench writer now embeds ``bench_provenance()`` under
+``meta["provenance"]``; ``schema_version`` bumps whenever an artifact's
+layout changes incompatibly, so downstream tooling can refuse to compare
+apples to oranges.
+"""
+from __future__ import annotations
+
+import os
+import platform
+import subprocess
+import time
+
+# 1 = PR-2 era (no provenance); 2 = this stamp
+BENCH_SCHEMA_VERSION = 2
+
+
+def git_commit(cwd: str | None = None) -> str:
+    """Current commit hash, or "unknown" outside a git checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=cwd or os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        )
+        return out.stdout.strip() if out.returncode == 0 else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def bench_provenance() -> dict:
+    """Environment fingerprint for a benchmark artifact (JSON-serializable).
+
+    Imports jax lazily so merely importing this module never initializes the
+    backend (device_count does).
+    """
+    import jax
+
+    return {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "git_commit": git_commit(),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "cpu_count": os.cpu_count(),
+        "unix_time": time.time(),
+    }

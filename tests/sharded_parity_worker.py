@@ -1,0 +1,158 @@
+"""Subprocess worker for tests/test_sharded.py (NOT a pytest module).
+
+Runs under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the
+parent test sets it; device count must be pinned before the backend
+initializes, which is why this is a subprocess) and prints one JSON document
+with:
+
+  * ``jacobi_parity`` — the 8-shard shard_map superstep vs a single-device
+    pure-jnp emulation of the same Jacobi schedule (per-shard scans from the
+    start-of-superstep state, fold_in(key, shard) chains, delta-summed
+    loads). With one block per shard this is the fully-synchronous corner of
+    the schedule; labels/probs must match bit-exactly over several
+    supersteps, scores to float tolerance (psum association).
+  * ``quality`` — sharded-vs-sequential local-edges ratio on WIKI and LJ at
+    k=8 after a fixed step budget (the Jacobi merge's quality cost).
+"""
+import json
+import sys
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.device_graph import (
+    capacity_device,
+    prepare_device_graph,
+    prepare_sharded_device_graph,
+)
+from repro.core.revolver import (
+    RevolverConfig,
+    RevolverState,
+    _chunk_step,
+    place_revolver_state,
+    revolver_init,
+    revolver_superstep,
+)
+from repro.core.runner import run_partitioner
+from repro.graphs import load_dataset
+from repro.launch.mesh import make_blocks_mesh
+
+
+def jacobi_reference_superstep(dg, cfg, state, n_shards):
+    """Single-device emulation of `_sharded_shard_body`'s schedule: every
+    shard scans its blocks against the start-of-superstep labels/lam/loads,
+    then label slices are concatenated, load deltas summed, and shard 0's
+    key chain carried forward."""
+    nb, bv = dg.n_blocks, dg.block_v
+    bps = nb // n_shards
+    local_n = bps * bv
+    cap = capacity_device(dg.m, cfg.k, cfg.epsilon, cfg.capacity_mode)
+    deg_b = dg.deg_out.reshape(nb, bv)
+    inv_b = dg.inv_wsum.reshape(nb, bv)
+    msk_b = dg.vmask.reshape(nb, bv)
+    step_fn = partial(_chunk_step, cfg, bv)
+
+    labels_out, lam_out, probs_out = [], [], []
+    delta_sum = jnp.zeros_like(state.loads)
+    score_sum = jnp.zeros((), jnp.float32)
+    key_new = None
+    for s in range(n_shards):
+        key_s = state.key if s == 0 else jax.random.fold_in(state.key, s)
+        sl = slice(s * bps, (s + 1) * bps)
+        xs = (
+            jnp.arange(s * bps, (s + 1) * bps, dtype=jnp.int32),
+            dg.blk_dst[sl], dg.blk_row[sl], dg.blk_w[sl],
+            state.probs[sl], deg_b[sl], inv_b[sl], msk_b[sl],
+        )
+        carry = (state.labels, state.lam, state.loads,
+                 jnp.zeros_like(state.loads), cap, key_s,
+                 jnp.zeros((), jnp.float32))
+        (lab_g, lam_g, _, delta, _, key_f, ssum), probs_s = \
+            jax.lax.scan(step_fn, carry, xs)
+        v = slice(s * local_n, (s + 1) * local_n)
+        labels_out.append(lab_g[v])
+        lam_out.append(lam_g[v])
+        probs_out.append(probs_s)
+        delta_sum = delta_sum + delta
+        score_sum = score_sum + ssum
+        if s == 0:
+            key_new = key_f
+    return RevolverState(
+        labels=jnp.concatenate(labels_out),
+        lam=jnp.concatenate(lam_out),
+        probs=jnp.concatenate(probs_out, axis=0),
+        loads=state.loads + delta_sum,
+        key=key_new,
+        step=state.step + 1,
+        score=score_sum / dg.n,
+    )
+
+
+def jacobi_parity(n_shards: int, n_blocks: int, steps: int = 5) -> dict:
+    from repro.graphs.generators import dc_sbm
+
+    g = dc_sbm(1024, 8192, n_comm=16, mixing=0.25, degree_exponent=0.5, seed=3)
+    mesh = make_blocks_mesh(n_shards)
+    sdg = prepare_sharded_device_graph(g, mesh, n_blocks=n_blocks)
+    dg = prepare_device_graph(g, n_blocks=n_blocks)
+    assert sdg.n_blocks == dg.n_blocks == n_blocks
+    cfg = RevolverConfig(k=8, chunk_schedule="sharded")
+    cfg_ref = RevolverConfig(k=8)   # reference runs the emulation by hand
+
+    key = jax.random.PRNGKey(0)
+    st_sh = place_revolver_state(revolver_init(sdg, cfg, key), sdg)
+    st_ref = revolver_init(dg, cfg_ref, key)
+    for _ in range(steps):
+        st_sh = revolver_superstep(sdg, cfg, st_sh)
+        st_ref = jacobi_reference_superstep(dg, cfg_ref, st_ref, n_shards)
+    lab_sh, lab_ref = np.asarray(st_sh.labels), np.asarray(st_ref.labels)
+    probs_sh, probs_ref = np.asarray(st_sh.probs), np.asarray(st_ref.probs)
+    return {
+        "n_shards": n_shards,
+        "blocks_per_shard": n_blocks // n_shards,
+        "steps": steps,
+        "labels_equal": bool((lab_sh == lab_ref).all()),
+        "max_probs_diff": float(np.abs(probs_sh - probs_ref).max()),
+        "score_diff": abs(float(st_sh.score) - float(st_ref.score)),
+        "loads_equal": bool(
+            (np.asarray(st_sh.loads) == np.asarray(st_ref.loads)).all()),
+    }
+
+
+def quality(dataset: str, *, scale: float, steps: int, k: int = 8) -> dict:
+    g = load_dataset(dataset, scale=scale, seed=0)
+    mesh = make_blocks_mesh(8)
+    common = dict(seed=0, max_steps=steps, patience=10_000, track_history=False)
+    seq = run_partitioner("revolver", g, k, **common)
+    sh = run_partitioner("revolver", g, k, mesh=mesh,
+                         chunk_schedule="sharded", **common)
+    return {
+        "dataset": dataset, "n": g.n, "m": g.m, "steps": steps,
+        "sequential_local_edges": seq.local_edges,
+        "sharded_local_edges": sh.local_edges,
+        "quality_ratio": sh.local_edges / max(seq.local_edges, 1e-9),
+    }
+
+
+def main() -> int:
+    assert jax.device_count() >= 8, (
+        f"worker needs 8 host devices, has {jax.device_count()}")
+    result = {
+        "device_count": jax.device_count(),
+        "jacobi_parity": [
+            jacobi_parity(8, 8),    # one block per shard: pure Jacobi corner
+            jacobi_parity(4, 8),    # two blocks per shard: async-within mix
+        ],
+        "quality": [
+            quality("WIKI", scale=5e-4, steps=40),
+            quality("LJ", scale=3e-4, steps=40),
+        ],
+    }
+    print("SHARDED_PARITY_JSON:" + json.dumps(result))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
