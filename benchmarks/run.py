@@ -53,6 +53,8 @@ def main(argv=None):
     bench = superstep_bench.run(quick=args.quick)
     if not bench["meta"]["parity_ok"]:
         raise SystemExit("superstep kernel-parity regression (see above)")
+    if not bench["meta"]["quality_ok"]:
+        raise SystemExit("restream-vs-revolver quality regression (see above)")
 
     print("=" * 72)
     print("== Sharded superstep scaling (1/2/4/8 devices + quality gate) ==")

@@ -7,11 +7,15 @@ independent ``edge_histogram`` launches, and writes everything to
 ``BENCH_superstep.json`` so later PRs have a measured baseline to hold
 against.
 
-Two hard gates (process exits nonzero on failure — the CI regression check):
+Three hard gates (process exits nonzero on failure — the CI regression check):
   * superstep parity — ``hist_impl="pallas"`` must reproduce the
     ``"jnp"`` partition at fixed seed within the score tolerance;
   * kernel parity — the fused kernel's histograms must match the two-call
-    path within float tolerance.
+    path within float tolerance;
+  * algorithm quality — every engine algorithm in the registry is run at a
+    fixed step budget against the hash baseline, and the restream rule's
+    edge locality must stay within ``RESTREAM_GATE`` (0.90) of revolver's
+    (the third-partitioner acceptance bar; see core/README.md).
 
 On this CPU container the Pallas paths execute in interpret mode, so their
 wall-clock is a harness/correctness sanity check, not TPU perf (see
@@ -39,6 +43,36 @@ from repro.utils.provenance import bench_provenance
 
 IMPLS = ("jnp", "pallas")
 PARITY_TOL = 1e-5
+RESTREAM_GATE = 0.90   # restream edge locality vs revolver, fixed budget
+
+
+def _algo_quality(g, dg, k: int, *, steps: int, seed: int) -> list[dict]:
+    """Fixed-budget quality sweep across the algorithm registry.
+
+    Every engine-driven algorithm runs `steps` supersteps (halting
+    disabled) on the shared device graph; the static hash baseline anchors
+    the no-learning floor. Rows feed BENCH_superstep.json so the
+    cross-algorithm trajectory is versioned alongside the kernel numbers.
+    """
+    from repro.core.registry import superstep_algorithms
+    from repro.core.runner import run_partitioner
+
+    rh = run_partitioner("hash", g, k)
+    rows = [{"algo": "hash", "steps": 0, "local_edges": rh.local_edges,
+             "max_norm_load": rh.max_norm_load}]
+    for name in superstep_algorithms():
+        r = run_partitioner(name, g, k, seed=seed, max_steps=steps,
+                            patience=10_000, track_history=False, dg=dg)
+        rows.append({"algo": name, "steps": r.steps,
+                     "local_edges": r.local_edges,
+                     "max_norm_load": r.max_norm_load})
+    by_algo = {row["algo"]: row for row in rows}
+    ratio = (by_algo["restream"]["local_edges"]
+             / max(by_algo["revolver"]["local_edges"], 1e-9))
+    for row in rows:
+        row["restream_vs_revolver"] = ratio
+        row["pass"] = bool(ratio >= RESTREAM_GATE)
+    return rows
 
 
 def _time_supersteps(dg, cfg, *, steps: int, seed: int = 0) -> float:
@@ -154,6 +188,7 @@ def run(*, quick: bool = False, out: str = "BENCH_superstep.json",
         scale = 3e-4 if quick else 1e-3
     if steps is None:
         steps = 3 if quick else 8
+    quality_steps = 20 if quick else 60
 
     results = {
         "meta": {
@@ -163,10 +198,13 @@ def run(*, quick: bool = False, out: str = "BENCH_superstep.json",
             "n_blocks": n_blocks,
             "scale": scale,
             "steps_timed": steps,
+            "quality_steps": quality_steps,
+            "restream_gate": RESTREAM_GATE,
         },
         "superstep": [],
         "kernel": None,
         "parity": [],
+        "algos": [],
     }
 
     print(f"{'dataset':8s} {'hist':7s} {'la':7s} {'supersteps/s':>12s} "
@@ -201,6 +239,17 @@ def run(*, quick: bool = False, out: str = "BENCH_superstep.json",
                   f"{par['score_diff']:.2e} labels_eq="
                   f"{par['labels_equal_frac']:.4f} "
                   f"{'PASS' if par['pass'] else 'FAIL'}")
+        for row in _algo_quality(g, dg, k, steps=quality_steps, seed=seed):
+            row["dataset"] = name
+            results["algos"].append(row)
+            print(f"quality {name}/{row['algo']:9s}: "
+                  f"local_edges={row['local_edges']:.4f} "
+                  f"max_norm_load={row['max_norm_load']:.4f} "
+                  f"steps={row['steps']}")
+        ratio = results["algos"][-1]["restream_vs_revolver"]
+        print(f"quality {name}: restream/revolver = {ratio:.3f} "
+              f"(gate {RESTREAM_GATE}) "
+              f"{'PASS' if ratio >= RESTREAM_GATE else 'FAIL'}")
 
     results["kernel"] = _kernel_compare(dg, k, iters=3 if quick else 5,
                                         seed=seed)
@@ -210,14 +259,22 @@ def run(*, quick: bool = False, out: str = "BENCH_superstep.json",
           f"err={kc['max_abs_err']:.1e} "
           f"{'PASS' if kc['pass'] else 'FAIL'}")
 
-    ok = all(p["pass"] for p in results["parity"]) and results["kernel"]["pass"]
-    results["meta"]["parity_ok"] = ok
+    parity_ok = (all(p["pass"] for p in results["parity"])
+                 and results["kernel"]["pass"])
+    quality_ok = bool(results["algos"]) and all(
+        row["pass"] for row in results["algos"])
+    results["meta"]["parity_ok"] = parity_ok
+    results["meta"]["quality_ok"] = quality_ok
+    ok = parity_ok and quality_ok
     if out:
         with open(out, "w") as f:
             json.dump(results, f, indent=2)
         print(f"wrote {out}")
-    if not ok:
+    if not parity_ok:
         print("KERNEL PARITY REGRESSION", file=sys.stderr)
+    if not quality_ok:
+        print(f"RESTREAM QUALITY REGRESSION (gate {RESTREAM_GATE})",
+              file=sys.stderr)
     return results
 
 
@@ -235,7 +292,8 @@ def main(argv=None) -> int:
     results = run(quick=args.quick, out=args.out, datasets=args.datasets,
                   scale=args.scale, k=args.k, n_blocks=args.n_blocks,
                   steps=args.steps, seed=args.seed)
-    return 0 if results["meta"]["parity_ok"] else 1
+    return 0 if (results["meta"]["parity_ok"]
+                 and results["meta"]["quality_ok"]) else 1
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
-"""Quickstart: partition a synthetic social graph with Revolver and the
-three baselines, print the paper's two quality metrics.
+"""Quickstart: partition a synthetic social graph with every algorithm in
+the registry (Revolver, the Spinner and restream rules, and the static
+baselines), print the paper's two quality metrics.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,7 +17,7 @@ def main():
     print(f"graph: |V|={g.n:,} |E|={g.m:,} density={stats['density']:.2e} "
           f"skew={stats['skewness']:+.2f}")
     print(f"{'algo':10s} {'local_edges':>12s} {'max_norm_load':>14s} {'steps':>6s}")
-    for algo in ("revolver", "spinner", "hash", "range"):
+    for algo in ("revolver", "spinner", "restream", "hash", "range"):
         r = run_partitioner(algo, g, K, seed=0, max_steps=120)
         print(f"{algo:10s} {r.local_edges:12.4f} {r.max_norm_load:14.4f} "
               f"{r.steps:6d}")

@@ -1,4 +1,10 @@
-"""Revolver core: weighted learning automata, normalized LP, partitioners."""
+"""Revolver core: one superstep engine, pluggable partitioning algorithms.
+
+Layering (see core/README.md): `engine` owns the execution schedules
+(sequential async scan, sharded shard_map superstep), `registry` maps
+algorithm names to rule modules (`revolver`, `spinner`, `restream`,
+`static_partitioners`), and `runner` drives the shared convergence loop.
+"""
 from repro.core.la import classic_la_update, weighted_la_update
 from repro.core.lp import edge_histogram_jnp, normalized_penalty, spinner_penalty
 from repro.core.metrics import local_edges, max_normalized_load, partition_loads
@@ -8,6 +14,14 @@ from repro.core.device_graph import (
     prepare_device_graph,
     prepare_sharded_device_graph,
     shard_device_graph,
+)
+from repro.core.engine import Algorithm, place_state, superstep
+from repro.core.registry import (
+    StaticAlgorithm,
+    available_algorithms,
+    get_algorithm,
+    register,
+    superstep_algorithms,
 )
 from repro.core.revolver import (
     RevolverConfig,
@@ -22,6 +36,13 @@ from repro.core.spinner import (
     spinner_init,
     spinner_init_from_labels,
     spinner_superstep,
+)
+from repro.core.restream import (
+    RestreamConfig,
+    RestreamState,
+    restream_init,
+    restream_init_from_labels,
+    restream_superstep,
 )
 from repro.core.static_partitioners import hash_partition, range_partition
 from repro.core.runner import PartitionResult, run_convergence_loop, run_partitioner
@@ -40,6 +61,14 @@ __all__ = [
     "prepare_device_graph",
     "prepare_sharded_device_graph",
     "shard_device_graph",
+    "Algorithm",
+    "StaticAlgorithm",
+    "place_state",
+    "superstep",
+    "available_algorithms",
+    "get_algorithm",
+    "register",
+    "superstep_algorithms",
     "RevolverConfig",
     "RevolverState",
     "revolver_init",
@@ -50,6 +79,11 @@ __all__ = [
     "spinner_init",
     "spinner_init_from_labels",
     "spinner_superstep",
+    "RestreamConfig",
+    "RestreamState",
+    "restream_init",
+    "restream_init_from_labels",
+    "restream_superstep",
     "hash_partition",
     "range_partition",
     "PartitionResult",

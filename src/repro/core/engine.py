@@ -1,0 +1,487 @@
+"""Schedule-agnostic partitioner engine: one superstep core, pluggable rules.
+
+Revolver's LA+LP superstep, the Spinner baseline, and prioritized
+restreaming are all instances of one family: a **local rule** (how a vertex
+scores partitions and decides to migrate) driven by a **global schedule**
+(in what order vertices see each other's decisions, and where the work
+runs). This module owns everything schedule-shaped, so an algorithm module
+contributes only its rule:
+
+  rule      (algorithm module, e.g. core/revolver.py)
+      a config dataclass, a state NamedTuple, ``init`` /
+      ``init_from_labels``, and either a per-block ``chunk_rule`` or a
+      per-shard ``shard_rule``;
+  schedule  (this module)
+      the sequential asynchronous ``lax.scan`` over vertex blocks, the
+      ``shard_map`` Jacobi superstep on a 1-D ``("blocks",)`` mesh (label
+      all-gather, psum load-delta merge, per-shard PRNG chains), buffer
+      donation, and sharded state placement;
+  kernel    (repro/kernels, routed via ``ops.superstep_kernels``)
+      the fused Pallas edge phase and LA update behind the ``hist_impl`` /
+      ``la_impl`` config knobs; the jnp scatter-add reference lives in
+      core/lp.py.
+
+See ``src/repro/core/README.md`` for the full contract an algorithm
+implements and what it inherits.
+
+Rule kinds
+----------
+``kind="chunk"`` (Revolver, restream): the rule processes one vertex block
+at a time inside a scan; migrations and per-vertex updates from block i are
+visible to block i+1 within the same superstep (the paper's asynchrony,
+DESIGN.md §3). Under the sharded schedule each device scans only its own
+blocks (async within the shard, Jacobi across shards) and the engine
+all-gathers the declared ``vertex_fields`` once per superstep, psum-merges
+the ``[k]`` load delta, and re-replicates shard 0's PRNG chain.
+
+``kind="shard"`` (Spinner): the rule processes its whole shard in one BSP
+step against the previous superstep's configuration, calling the context's
+collectives (``gather`` / ``psum``) where cross-shard reductions are
+needed. The sequential schedule runs the same rule with identity
+collectives on a single shard spanning the whole graph — one rule, both
+schedules.
+
+Load-delta accounting lives here too: rules mutate their drifting ``loads``
+view freely; the engine recovers the shard's superstep delta as
+``loads_end - loads_start`` (exact — loads are sums of integer-valued
+degrees in f32) and psum-merges it at the superstep boundary. The
+sequential path simply keeps ``loads_end``, so sequential rules no longer
+carry sharded-only accumulator slots (the dead ``delta`` chain the PR-3
+scan threaded through every chunk is gone).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.device_graph import (
+    DeviceGraph,
+    ShardedDeviceGraph,
+    capacity_device,
+)
+from repro.parallel.collectives import (
+    gather_shards,
+    psum_delta_merge,
+    replicated_chain_key,
+    shard_chain_key,
+)
+
+AXIS = "blocks"   # the 1-D mesh axis every sharded superstep runs over
+
+
+# ---------------------------------------------------------------------------
+# algorithm protocol
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True, eq=False)
+class Algorithm:
+    """A partitioning algorithm as the engine sees it.
+
+    Frozen with identity hashing (``eq=False``): instances are module-level
+    singletons and serve as jit static arguments.
+
+    Attributes:
+      name: registry key ("revolver", "spinner", ...).
+      config_cls: frozen config dataclass. The engine reads ``k``,
+        ``epsilon``, ``capacity_mode``, ``chunk_schedule``, ``max_steps``,
+        ``patience``, ``theta``; everything else is rule-private.
+      state_cls: state NamedTuple. Must carry ``labels`` ([n_pad] int32),
+        ``loads`` ([k] f32), ``key``, ``step``, ``score``; may add more.
+      kind: "chunk" or "shard" (see module docstring).
+      vertex_fields: state fields holding per-vertex [n_pad] arrays that the
+        schedule synchronizes (all-gathered each sharded superstep, updated
+        by the rule per block/shard). Must include "labels".
+      block_fields: state fields holding per-block [n_blocks, ...] tensors
+        (e.g. Revolver's LA probabilities) scanned alongside the edge slabs;
+        chunk-kind only.
+      replicated_fields: state fields the schedule passes through replicated
+        and untouched (per-superstep constants, e.g. restream's degree
+        ranks). Available to rules via the context.
+      donate: state fields whose buffers the jitted superstep donates
+        (updated in place; callers must rebind ``state = superstep(...)``).
+      init: ``(dg, cfg, key) -> state`` cold start.
+      init_from_labels: ``(dg, cfg, key, labels, probs=None,
+        prob_sharpen=0.0) -> state`` warm start, or None if unsupported.
+      supports_probs: whether the algorithm carries an LA probability tensor
+        (enables ``keep_probs`` / ``init_probs`` / ``init_sharpen`` in the
+        runner and probability carrying in the streaming path).
+      chunk_rule / shard_rule: the local rule (exactly one, per ``kind``).
+    """
+
+    name: str
+    config_cls: type
+    state_cls: type
+    kind: str
+    init: Callable
+    vertex_fields: Tuple[str, ...] = ("labels",)
+    block_fields: Tuple[str, ...] = ()
+    replicated_fields: Tuple[str, ...] = ()
+    donate: Tuple[str, ...] = ("labels", "loads")
+    init_from_labels: Optional[Callable] = None
+    supports_probs: bool = False
+    chunk_rule: Optional[Callable] = None
+    shard_rule: Optional[Callable] = None
+
+    def __post_init__(self):
+        if self.kind not in ("chunk", "shard"):
+            raise ValueError(f"Algorithm.kind={self.kind!r}")
+        if "labels" not in self.vertex_fields:
+            raise ValueError(f"{self.name}: vertex_fields must include 'labels'")
+        if (self.chunk_rule is None) == (self.kind == "chunk"):
+            raise ValueError(f"{self.name}: kind={self.kind!r} needs exactly "
+                             "the matching rule callable")
+        if (self.shard_rule is None) == (self.kind == "shard"):
+            raise ValueError(f"{self.name}: kind={self.kind!r} needs exactly "
+                             "the matching rule callable")
+        required = {"labels", "loads", "key", "step", "score"}
+        missing = required - set(self.state_cls._fields)
+        if missing:
+            raise ValueError(f"{self.name}: state_cls lacks {sorted(missing)}")
+
+
+class ChunkContext(NamedTuple):
+    """What a chunk rule sees for one vertex block.
+
+    ``repl`` carries the full replicated_fields arrays; per-vertex slices of
+    the block are taken with ``v0``. ``step`` is the 0-based superstep index
+    (rules may schedule on it, e.g. restream's priority ramp).
+
+    ``n_shards`` tells the rule how many shards are drifting this superstep
+    concurrently (1 under the sequential schedule). A rule that rations
+    shared capacity against its drifting ``loads`` view must divide the
+    remaining headroom by it: under the Jacobi schedule every shard sees
+    the same start-of-superstep loads, so an un-rationed greedy rule lets
+    each shard independently spend the *whole* remaining capacity of a
+    popular partition — n_shards-fold overshoot and oscillation (restream
+    collapsed to max_norm_load ~6 at 8 shards before this).
+    """
+
+    blk_idx: jnp.ndarray    # scalar int32 global block index
+    v0: jnp.ndarray         # scalar int32 global vertex offset of the block
+    e_dst: jnp.ndarray      # [e_max] int32 neighbor ids (0 pad)
+    e_row: jnp.ndarray      # [e_max] int32 local row in the block (0 pad)
+    e_w: jnp.ndarray        # [e_max] f32 eq.(4) weights (0.0 pad)
+    deg: jnp.ndarray        # [block_v] f32 outdegrees
+    inv_wsum: jnp.ndarray   # [block_v] f32 1/sum w_hat
+    vmask: jnp.ndarray      # [block_v] bool real-vertex mask
+    step: jnp.ndarray       # scalar int32 superstep index
+    n_shards: int           # static: concurrent Jacobi shards (1 sequential)
+    loads0: jnp.ndarray     # [k] start-of-superstep loads (the Jacobi base
+                            # every shard drifts from; == the drifting loads
+                            # arg at the first chunk of a sequential scan)
+    repl: Dict[str, jnp.ndarray]
+
+    def shared_headroom(self, cap, loads) -> jnp.ndarray:
+        """Per-partition capacity this block may spend without cross-shard
+        overshoot: the shard's 1/n_shards share of the start-of-superstep
+        global headroom, plus whatever capacity the shard itself freed
+        since (its outflows are in its drifting ``loads`` view; remote
+        shards' are not until the Jacobi merge). Degenerates to the plain
+        ``cap - loads`` under the sequential schedule."""
+        if self.n_shards == 1:
+            return cap - loads
+        return (cap - self.loads0) / self.n_shards + (self.loads0 - loads)
+
+
+class ChunkUpdate(NamedTuple):
+    """A chunk rule's output: the engine applies ``vert`` slices to the
+    drifting per-vertex arrays (visible to later blocks in the superstep),
+    stacks ``block`` as the scan output, and threads loads/key/score."""
+
+    vert: Dict[str, jnp.ndarray]    # vertex_field -> [block_v] new values
+    block: Dict[str, jnp.ndarray]   # block_field -> updated block tensor
+    loads: jnp.ndarray              # [k] updated drifting load view
+    key: jnp.ndarray                # chained PRNG key
+    score: jnp.ndarray              # scalar score sum over the block
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardContext:
+    """What a shard rule sees: its slice of the blocked layout plus
+    collectives that degenerate to identities on the sequential schedule."""
+
+    axis: Optional[str]     # mesh axis name, or None (sequential)
+    idx: jnp.ndarray        # scalar int32 shard index (0 when sequential)
+    n: int                  # real vertex count
+    n_pad: int              # global padded vertex count
+    local_n: int            # vertices owned by this shard
+    block_v: int
+    blocks: int             # blocks owned by this shard
+    v0: jnp.ndarray         # scalar int32 global offset of the local range
+    blk_dst: jnp.ndarray    # [blocks, e_max] local edge slabs
+    blk_row: jnp.ndarray
+    blk_w: jnp.ndarray
+    deg: jnp.ndarray        # [local_n]
+    inv_wsum: jnp.ndarray   # [local_n]
+    vmask: jnp.ndarray      # [local_n]
+    step: jnp.ndarray
+    repl: Dict[str, jnp.ndarray]
+
+    def gather(self, x):
+        """All-gather a per-vertex shard slice to its global [n_pad] shape."""
+        return gather_shards(x, self.axis) if self.axis else x
+
+    def psum(self, x):
+        """Sum a shard-local reduction across shards."""
+        return jax.lax.psum(x, self.axis) if self.axis else x
+
+    def local_rows(self) -> jnp.ndarray:
+        """[blocks * e_max] local row ids for a flat slab histogram."""
+        base = jnp.arange(self.blocks, dtype=jnp.int32)[:, None] * self.block_v
+        return (base + self.blk_row).reshape(-1)
+
+
+class ShardUpdate(NamedTuple):
+    vert: Dict[str, jnp.ndarray]    # vertex_field -> [local_n] new values
+    loads_delta: jnp.ndarray        # [k] this shard's load delta
+    key: jnp.ndarray                # chained PRNG key (replicated semantics)
+    score: jnp.ndarray              # scalar score sum over the shard
+
+
+class _Layout(NamedTuple):
+    """Static shape info (hashable jit key)."""
+
+    n: int
+    n_pad: int
+    n_blocks: int
+    block_v: int
+    blocks_per_shard: int
+
+
+def _graph_arrays(dg: DeviceGraph) -> Dict[str, jnp.ndarray]:
+    return {
+        "blk_dst": dg.blk_dst, "blk_row": dg.blk_row, "blk_w": dg.blk_w,
+        "deg": dg.deg_out, "inv_wsum": dg.inv_wsum, "vmask": dg.vmask,
+    }
+
+
+_GRAPH_SPECS = {
+    "blk_dst": P(AXIS, None), "blk_row": P(AXIS, None), "blk_w": P(AXIS, None),
+    "deg": P(AXIS), "inv_wsum": P(AXIS), "vmask": P(AXIS),
+}
+
+
+def _state_spec(algo: Algorithm, name: str, value) -> P:
+    """Sharding spec for one state field (block axis leads block tensors)."""
+    if name in algo.vertex_fields:
+        return P(AXIS)
+    if name in algo.block_fields:
+        return P(AXIS, *([None] * (value.ndim - 1)))
+    return P()
+
+
+# ---------------------------------------------------------------------------
+# the superstep body (shared by both schedules; axis=None == sequential)
+# ---------------------------------------------------------------------------
+def _chunk_superstep(algo, cfg, layout, axis, graph, cap, state, step):
+    """Scan the (local) blocks with the algorithm's chunk rule.
+
+    Sequential: one shard spanning every block, identity collectives, the
+    state key used directly — the PR-2 semantics. Sharded: Jacobi across
+    shards (gather once, scan local blocks, slice back, merge the exact
+    load delta, re-replicate shard 0's chained key).
+    """
+    idx = jax.lax.axis_index(axis) if axis else jnp.zeros((), jnp.int32)
+    bps = layout.blocks_per_shard if axis else layout.n_blocks
+    n_shards = layout.n_blocks // layout.blocks_per_shard if axis else 1
+    block_v = layout.block_v
+    vert = {f: gather_shards(state[f], axis) if axis else state[f]
+            for f in algo.vertex_fields}
+    key = shard_chain_key(state["key"], axis) if axis else state["key"]
+    repl = {f: state[f] for f in algo.replicated_fields}
+    loads0 = state["loads"]
+
+    xs = (
+        idx * bps + jnp.arange(bps, dtype=jnp.int32),
+        graph["blk_dst"], graph["blk_row"], graph["blk_w"],
+        {f: state[f] for f in algo.block_fields},
+        graph["deg"].reshape(bps, block_v),
+        graph["inv_wsum"].reshape(bps, block_v),
+        graph["vmask"].reshape(bps, block_v),
+    )
+
+    def scan_step(carry, x):
+        vert, loads, key, score_sum = carry
+        blk_idx, e_dst, e_row, e_w, block, deg, inv_wsum, vmask = x
+        ctx = ChunkContext(
+            blk_idx=blk_idx, v0=blk_idx * block_v, e_dst=e_dst, e_row=e_row,
+            e_w=e_w, deg=deg, inv_wsum=inv_wsum, vmask=vmask, step=step,
+            n_shards=n_shards, loads0=loads0, repl=repl)
+        upd = algo.chunk_rule(cfg, ctx, vert, block, loads, cap, key)
+        vert = {f: jax.lax.dynamic_update_slice(vert[f], upd.vert[f], (ctx.v0,))
+                for f in vert}
+        return (vert, upd.loads, upd.key, score_sum + upd.score), upd.block
+
+    carry = (vert, loads0, key, jnp.zeros((), jnp.float32))
+    (vert, loads_end, key_end, score_sum), block_out = \
+        jax.lax.scan(scan_step, carry, xs)
+
+    if axis:
+        local_n = bps * block_v
+        v0 = idx * local_n
+        vert = {f: jax.lax.dynamic_slice(v, (v0,), (local_n,))
+                for f, v in vert.items()}
+        # the shard's migrations, recovered exactly (integer-valued f32)
+        loads_end = psum_delta_merge(loads0, loads_end - loads0, axis)
+        score_sum = jax.lax.psum(score_sum, axis)
+        key_end = replicated_chain_key(key_end, axis)
+    return {**vert, **block_out, "loads": loads_end, "key": key_end,
+            "score": score_sum}
+
+
+def _shard_superstep(algo, cfg, layout, axis, graph, cap, state, step):
+    """Run the algorithm's BSP shard rule once over the (local) slabs."""
+    idx = jax.lax.axis_index(axis) if axis else jnp.zeros((), jnp.int32)
+    bps = layout.blocks_per_shard if axis else layout.n_blocks
+    local_n = bps * layout.block_v
+    ctx = ShardContext(
+        axis=axis, idx=idx, n=layout.n, n_pad=layout.n_pad, local_n=local_n,
+        block_v=layout.block_v, blocks=bps, v0=idx * local_n,
+        blk_dst=graph["blk_dst"], blk_row=graph["blk_row"],
+        blk_w=graph["blk_w"], deg=graph["deg"], inv_wsum=graph["inv_wsum"],
+        vmask=graph["vmask"], step=step,
+        repl={f: state[f] for f in algo.replicated_fields})
+    local = {f: state[f] for f in algo.vertex_fields}
+    upd = algo.shard_rule(cfg, ctx, local, state["loads"], cap, state["key"])
+    loads = psum_delta_merge(state["loads"], upd.loads_delta, axis) if axis \
+        else state["loads"] + upd.loads_delta
+    score = jax.lax.psum(upd.score, axis) if axis else upd.score
+    return {**upd.vert, "loads": loads, "key": upd.key, "score": score}
+
+
+_BODIES = {"chunk": _chunk_superstep, "shard": _shard_superstep}
+
+
+def _finish(algo, layout, state_in, out, step):
+    out = dict(out)
+    score_sum = out.pop("score")
+    return algo.state_cls(
+        **out,
+        **{f: state_in[f] for f in algo.replicated_fields},
+        step=step + 1,
+        score=score_sum / layout.n,
+    )
+
+
+@partial(jax.jit, static_argnames=("algo", "cfg", "layout"),
+         donate_argnames=("donated",))
+def _sequential_superstep(algo, cfg, layout, graph, cap, donated, kept):
+    state = {**donated, **kept}
+    step = state.pop("step")
+    state.pop("score")
+    out = _BODIES[algo.kind](algo, cfg, layout, None, graph, cap, state, step)
+    return _finish(algo, layout, state, out, step)
+
+
+@partial(jax.jit, static_argnames=("algo", "cfg", "mesh", "layout"),
+         donate_argnames=("donated",))
+def _sharded_superstep(algo, cfg, mesh, layout, graph, cap, donated, kept):
+    state = {**donated, **kept}
+    step = state.pop("step")
+    state.pop("score")
+    state_specs = {f: _state_spec(algo, f, v) for f, v in state.items()}
+    out_specs = {f: state_specs[f] for f in state
+                 if f not in algo.replicated_fields}
+    out_specs["score"] = P()
+    body = partial(_BODIES[algo.kind], algo, cfg, layout, AXIS)
+    sharded = shard_map(
+        body, mesh=mesh,
+        in_specs=(_GRAPH_SPECS, P(), state_specs, P()),
+        out_specs=out_specs,
+        check_rep=False,
+    )
+    out = sharded(graph, cap, state, step)
+    return _finish(algo, layout, state, out, step)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+def superstep(algo: Algorithm, dg, cfg, state):
+    """One full superstep of ``algo`` under ``cfg.chunk_schedule``.
+
+    "sequential" runs on one device (``dg`` is a plain DeviceGraph, or a
+    ShardedDeviceGraph whose arrays are consumed directly); "sharded" runs
+    under shard_map on the graph's ``("blocks",)`` mesh (``dg`` must be a
+    ShardedDeviceGraph, see ``prepare_sharded_device_graph``).
+
+    The state fields named in ``algo.donate`` are **donated** under either
+    schedule (buffers updated in place); the passed-in state must not be
+    reused after this call — every caller rebinds
+    ``state = superstep(...)``. Small undonated leaves (key/step/score and
+    any replicated fields) stay valid, so the convergence loop's windowed
+    score buffering is unaffected.
+    """
+    cap = capacity_device(dg.m, cfg.k, cfg.epsilon, cfg.capacity_mode)
+    sd = state._asdict()
+    donated = {f: sd.pop(f) for f in algo.donate}
+    if cfg.chunk_schedule == "sharded":
+        if not isinstance(dg, ShardedDeviceGraph):
+            raise TypeError(
+                "chunk_schedule='sharded' needs a ShardedDeviceGraph "
+                "(see prepare_sharded_device_graph); got a plain DeviceGraph")
+        layout = _Layout(dg.n, dg.n_pad, dg.n_blocks, dg.block_v,
+                         dg.blocks_per_shard)
+        return _sharded_superstep(algo, cfg, dg.mesh, layout,
+                                  _graph_arrays(dg.dg), cap, donated, sd)
+    if isinstance(dg, ShardedDeviceGraph):
+        dg = dg.dg
+    layout = _Layout(dg.n, dg.n_pad, dg.n_blocks, dg.block_v, dg.n_blocks)
+    return _sequential_superstep(algo, cfg, layout, _graph_arrays(dg), cap,
+                                 donated, sd)
+
+
+def place_state(algo: Algorithm, state, sdg: ShardedDeviceGraph):
+    """Commit a freshly-initialized state to the sharded layout per the
+    algorithm's declared specs: vertex fields sliced onto their owning
+    device, block tensors likewise, everything else replicated — so the
+    donated superstep buffers are reused in place from step one."""
+    mesh = sdg.mesh
+    placed = {
+        name: jax.device_put(
+            value, NamedSharding(mesh, _state_spec(algo, name, value)))
+        for name, value in state._asdict().items()
+    }
+    return algo.state_cls(**placed)
+
+
+# ---------------------------------------------------------------------------
+# shared warm-start helpers (every rule's init_from_labels uses these)
+# ---------------------------------------------------------------------------
+def warm_labels(dg, k: int, key: jax.Array, labels) -> jnp.ndarray:
+    """Carried labels for surviving vertices, random draws for new ones.
+
+    ``labels`` covers up to ``len(labels)`` surviving vertices (clipped to
+    [0, k)); vertices beyond it — newly arrived in a stream — draw a random
+    label exactly like a cold init would.
+    """
+    lab = jax.random.randint(key, (dg.n_pad,), 0, k, dtype=jnp.int32)
+    carried = jnp.clip(jnp.asarray(labels, jnp.int32), 0, k - 1)
+    m_keep = min(int(carried.shape[0]), dg.n_pad)
+    lab = jax.lax.dynamic_update_slice(lab, carried[:m_keep], (0,))
+    return jnp.where(dg.vmask, lab, 0)
+
+
+def loads_from_labels(dg, k: int, labels) -> jnp.ndarray:
+    """Recompute b(l) from the degree vector so the invariant
+    b(l) == sum deg over labels==l holds from step 0."""
+    return jnp.zeros((k,), jnp.float32).at[labels].add(dg.deg_out)
+
+
+__all__ = [
+    "AXIS",
+    "Algorithm",
+    "ChunkContext",
+    "ChunkUpdate",
+    "ShardContext",
+    "ShardUpdate",
+    "superstep",
+    "place_state",
+    "warm_labels",
+    "loads_from_labels",
+]

@@ -1,12 +1,19 @@
 """Revolver: the paper's partitioning superstep (Section IV-D, steps 1-9).
 
+This module is a **rule module**: it contributes Revolver's per-block local
+rule (the nine steps below), its config/state, and its warm-start path; the
+execution schedules — the sequential asynchronous scan, the ``shard_map``
+Jacobi superstep, buffer donation, state placement — live in
+``repro.core.engine`` and are shared with every other registered algorithm
+(see ``core/README.md``).
+
 Execution model — TPU adaptation of the paper's asynchrony (DESIGN.md §3):
-vertices are processed in `n_blocks` chunks via `lax.scan`. Label migrations,
-load updates and freshly-computed argmax labels (lambda) from chunk i are
-visible to chunk i+1 *within the same superstep* — exactly the incremental
-visibility the paper credits for its balanced partitions. `n_blocks=1`
-degenerates to a synchronous (Spinner-like BSP) schedule; the async-vs-sync
-ablation in benchmarks/fig4_convergence.py sweeps this knob.
+vertices are processed in `n_blocks` chunks via the engine's `lax.scan`.
+Label migrations, load updates and freshly-computed argmax labels (lambda)
+from chunk i are visible to chunk i+1 *within the same superstep* — exactly
+the incremental visibility the paper credits for its balanced partitions.
+`n_blocks=1` degenerates to a synchronous (Spinner-like BSP) schedule; the
+async-vs-sync ablation in benchmarks/fig4_convergence.py sweeps this knob.
 
 Per chunk, the nine steps of Section IV-D:
   1. LA action selection (roulette wheel == Gumbel-max categorical sampling)
@@ -22,28 +29,16 @@ Per chunk, the nine steps of Section IV-D:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.device_graph import (
-    CAPACITY_MODES,
-    DeviceGraph,
-    ShardedDeviceGraph,
-    capacity_device,
-)
+from repro.core import engine
+from repro.core.device_graph import CAPACITY_MODES, DeviceGraph, ShardedDeviceGraph  # noqa: F401  (re-exported API)
 from repro.core.la import split_weights_and_signals, weighted_la_update
 from repro.core.lp import edge_histogram_jnp, revolver_scores
-from repro.parallel.collectives import (
-    gather_shards,
-    psum_delta_merge,
-    replicated_chain_key,
-    shard_chain_key,
-)
+from repro.core.registry import register
 
 # valid values per config knob; typos used to silently fall back to the jnp
 # path (e.g. la_impl="palas"), now they raise at construction
@@ -78,7 +73,7 @@ class RevolverConfig:
     #   "neighbor_lambda": slot lambda(u) — v accumulates a histogram of its
     #                      neighbors' argmax labels.
     weight_mode: str = "self_lambda"
-    # superstep execution schedule:
+    # superstep execution schedule (owned by the engine):
     #   "sequential": one device, lax.scan over all vertex blocks — the PR-2
     #                 async semantics, bit-identical at fixed seed.
     #   "sharded":    shard_map over a 1-D ("blocks",) mesh — each device
@@ -110,7 +105,7 @@ def revolver_init(dg: DeviceGraph, cfg: RevolverConfig, key: jax.Array) -> Revol
     k_lab, key = jax.random.split(key)
     labels = jax.random.randint(k_lab, (dg.n_pad,), 0, cfg.k, dtype=jnp.int32)
     labels = jnp.where(dg.vmask, labels, 0)
-    loads = jnp.zeros((cfg.k,), jnp.float32).at[labels].add(dg.deg_out)
+    loads = engine.loads_from_labels(dg, cfg.k, labels)
     probs = jnp.full((dg.n_blocks, dg.block_v, cfg.k), 1.0 / cfg.k, jnp.float32)
     # lam is a *copy*: labels and lam are separately donated superstep
     # buffers, so the initial state must not alias them to one buffer
@@ -154,12 +149,8 @@ def revolver_init_from_labels(
     if not 0.0 <= prob_sharpen < 1.0:
         raise ValueError(f"prob_sharpen must be in [0, 1), got {prob_sharpen}")
     k_lab, key = jax.random.split(key)
-    lab = jax.random.randint(k_lab, (dg.n_pad,), 0, cfg.k, dtype=jnp.int32)
-    carried = jnp.clip(jnp.asarray(labels, jnp.int32), 0, cfg.k - 1)
-    m_keep = min(int(carried.shape[0]), dg.n_pad)
-    lab = jax.lax.dynamic_update_slice(lab, carried[:m_keep], (0,))
-    lab = jnp.where(dg.vmask, lab, 0)
-    loads = jnp.zeros((cfg.k,), jnp.float32).at[lab].add(dg.deg_out)
+    lab = engine.warm_labels(dg, cfg.k, k_lab, labels)
+    loads = engine.loads_from_labels(dg, cfg.k, lab)
 
     flat = jnp.full((dg.n_pad, cfg.k), 1.0 / cfg.k, jnp.float32)
     if probs is not None:
@@ -184,31 +175,38 @@ def revolver_init_from_labels(
     )
 
 
-def _chunk_step(cfg: RevolverConfig, block_v: int, carry: Tuple, xs: Tuple):
-    """Process one asynchronous chunk (see module docstring).
+def _revolver_chunk_rule(cfg: RevolverConfig, ctx: engine.ChunkContext,
+                         vert, block, loads, cap, key) -> engine.ChunkUpdate:
+    """The nine steps of Section IV-D for one asynchronous chunk.
 
-    Besides the drifting load view, the carry tracks `delta` — the same
-    migration updates accumulated from zero. The sequential schedule drops
-    it (XLA dead-code-eliminates the chain); the sharded schedule psum-merges
-    the per-shard deltas into the global loads at the superstep boundary.
+    `vert` is the engine's drifting per-vertex view (labels + lambda, fresh
+    with every earlier chunk's updates); `block` carries this chunk's LA
+    probability tile. The rule returns the chunk's new label/lambda slices —
+    the engine splices them into the drifting view — plus the updated loads,
+    PRNG chain, and score contribution.
     """
-    labels, lam, loads, delta, cap, key, score_sum = carry
-    (blk_idx, e_dst, e_row, e_w, probs, deg, inv_wsum, vmask) = xs
+    labels, lam = vert["labels"], vert["lam"]
+    probs = block["probs"]
     bv, k = probs.shape
+    if (cfg.hist_impl, cfg.la_impl) != ("jnp", "jnp"):
+        from repro.kernels.ops import superstep_kernels
+
+        fused_op, la_op = superstep_kernels(cfg.hist_impl, cfg.la_impl)
+    else:  # pure-XLA lowering stays importable without the kernel package
+        fused_op, la_op = None, None
 
     key, k_act, k_mig = jax.random.split(key, 3)
-    v0 = blk_idx * block_v
-    cur = jax.lax.dynamic_slice(labels, (v0,), (bv,))
+    cur = jax.lax.dynamic_slice(labels, (ctx.v0,), (bv,))
 
     # -- 1. LA action selection (roulette wheel) -----------------------------
     logits = jnp.log(jnp.clip(probs, 1e-30, 1.0))
     action = jax.random.categorical(k_act, logits, axis=-1).astype(jnp.int32)
-    action = jnp.where(vmask, action, cur)
+    action = jnp.where(ctx.vmask, action, cur)
 
     # -- 2. migration probability per partition ------------------------------
-    wants = (action != cur) & vmask
-    demand = jnp.zeros((k,), jnp.float32).at[action].add(deg * wants)  # m(l)
-    remaining = cap - loads                                            # r(l)
+    wants = (action != cur) & ctx.vmask
+    demand = jnp.zeros((k,), jnp.float32).at[action].add(ctx.deg * wants)  # m(l)
+    remaining = cap - loads                                                # r(l)
     p_mig = jnp.where(
         demand > 0,
         jnp.clip(remaining / jnp.maximum(demand, 1e-9), 0.0, 1.0),
@@ -223,24 +221,22 @@ def _chunk_step(cfg: RevolverConfig, block_v: int, carry: Tuple, xs: Tuple):
     # returns the per-row (A, N) factorization and the lambda(v) one-hot
     # scatter is finished below once scores exist). The jnp path is the
     # two-scatter-add reference with identical semantics.
-    if cfg.hist_impl == "pallas":
-        from repro.kernels.ops import fused_edge_phase
-
+    if fused_op is not None:
         feasible_f = (p_mig > 0).astype(jnp.float32)
-        hist, w_acc = fused_edge_phase(
-            e_dst[None], e_row[None], e_w[None], labels, lam,
+        hist, w_acc = fused_op(
+            ctx.e_dst[None], ctx.e_row[None], ctx.e_w[None], labels, lam,
             action[None], feasible_f[None],
             block_v=bv, k=k, weight_mode=cfg.weight_mode)
         hist, w_acc = hist[0], w_acc[0]
     else:
-        nbr_labels = labels[e_dst]                   # async: freshest labels
-        hist = edge_histogram_jnp(e_row, nbr_labels, e_w, bv, k)
+        nbr_labels = labels[ctx.e_dst]               # async: freshest labels
+        hist = edge_histogram_jnp(ctx.e_row, nbr_labels, ctx.e_w, bv, k)
         w_acc = None
 
-    scores = revolver_scores(hist, inv_wsum, loads, cap)
+    scores = revolver_scores(hist, ctx.inv_wsum, loads, cap)
     lam_chunk = jnp.argmax(scores, axis=-1).astype(jnp.int32)
     best = jnp.max(scores, axis=-1)
-    score_sum = score_sum + jnp.sum(jnp.where(vmask, best, 0.0))
+    score = jnp.sum(jnp.where(ctx.vmask, best, 0.0))
 
     # -- 4. gated migration ---------------------------------------------------
     u = jax.random.uniform(k_mig, (bv,))
@@ -248,10 +244,8 @@ def _chunk_step(cfg: RevolverConfig, block_v: int, carry: Tuple, xs: Tuple):
     new_lbl = jnp.where(migrate, action, cur)
 
     # -- 8. exact load update (visible to the next chunk) --------------------
-    dmig = deg * migrate
+    dmig = ctx.deg * migrate
     loads = loads.at[cur].add(-dmig).at[action].add(dmig)
-    delta = delta.at[cur].add(-dmig).at[action].add(dmig)
-    labels = jax.lax.dynamic_update_slice(labels, new_lbl, (v0,))
 
     # -- 5. eq. (13) weight accumulation --------------------------------------
     # Each neighbor u of v contributes
@@ -274,177 +268,56 @@ def _chunk_step(cfg: RevolverConfig, block_v: int, carry: Tuple, xs: Tuple):
         else:
             w_raw = w_acc                            # finished in-kernel
     else:
-        lam_nbr = lam[e_dst]
-        agree = (action[e_row] == lam_nbr)
+        lam_nbr = lam[ctx.e_dst]
+        agree = (action[ctx.e_row] == lam_nbr)
         if cfg.weight_mode == "self_lambda":
-            slot = lam_chunk[e_row]
+            slot = lam_chunk[ctx.e_row]
         else:
             slot = lam_nbr
         feasible = p_mig[slot] > 0
-        val = jnp.where(agree, e_w, jnp.where(feasible, 1.0, 0.0))
-        val = jnp.where(e_w > 0, val, 0.0)  # kill padding slots
-        w_raw = edge_histogram_jnp(e_row, slot, val, bv, k)
-
-    # async lambda visibility for later chunks
-    lam = jax.lax.dynamic_update_slice(lam, lam_chunk, (v0,))
+        val = jnp.where(agree, ctx.e_w, jnp.where(feasible, 1.0, 0.0))
+        val = jnp.where(ctx.e_w > 0, val, 0.0)  # kill padding slots
+        w_raw = edge_histogram_jnp(ctx.e_row, slot, val, bv, k)
 
     # -- 6./7. reinforcement signals + weighted LA update ---------------------
     w_norm, r = split_weights_and_signals(w_raw)
-    if cfg.la_impl == "pallas":
-        from repro.kernels.ops import la_update as la_update_op
-
-        new_probs = la_update_op(probs, w_norm, r, cfg.alpha, cfg.beta, renorm=cfg.renorm)
+    if la_op is not None:
+        new_probs = la_op(probs, w_norm, r, cfg.alpha, cfg.beta, renorm=cfg.renorm)
     else:
         new_probs = weighted_la_update(probs, w_norm, r, cfg.alpha, cfg.beta, renorm=cfg.renorm)
 
-    return (labels, lam, loads, delta, cap, key, score_sum), new_probs
-
-
-@partial(jax.jit, static_argnames=("n", "n_blocks", "block_v", "cfg"),
-         donate_argnames=("labels", "lam", "probs", "loads"))
-def _superstep_impl(
-    blk_dst, blk_row, blk_w, deg_out, inv_wsum, vmask, cap,
-    labels, lam, probs, loads, key, step,
-    *, n: int, n_blocks: int, block_v: int, cfg: RevolverConfig,
-):
-    deg_b = deg_out.reshape(n_blocks, block_v)
-    inv_b = inv_wsum.reshape(n_blocks, block_v)
-    msk_b = vmask.reshape(n_blocks, block_v)
-    xs = (
-        jnp.arange(n_blocks, dtype=jnp.int32),
-        blk_dst,
-        blk_row,
-        blk_w,
-        probs,
-        deg_b,
-        inv_b,
-        msk_b,
-    )
-    carry = (labels, lam, loads, jnp.zeros_like(loads), cap, key,
-             jnp.zeros((), jnp.float32))
-    step_fn = partial(_chunk_step, cfg, block_v)
-    (labels, lam, loads, _, _, key, score_sum), probs = jax.lax.scan(step_fn, carry, xs)
-    return RevolverState(
-        labels=labels,
-        lam=lam,
-        probs=probs,
+    return engine.ChunkUpdate(
+        vert={"labels": new_lbl, "lam": lam_chunk},
+        block={"probs": new_probs},
         loads=loads,
         key=key,
-        step=step + 1,
-        score=score_sum / n,
+        score=score,
     )
 
 
-def _sharded_shard_body(
-    blk_dst, blk_row, blk_w, deg, inv_wsum, vmask, cap,
-    labels, lam, probs, loads, key,
-    *, block_v: int, blocks_per_shard: int, cfg: RevolverConfig,
-):
-    """Per-shard superstep body (runs under shard_map on the "blocks" mesh).
-
-    Jacobi across shards, async within: every shard all-gathers the
-    start-of-superstep labels/lam once, then scans its own blocks exactly
-    like the sequential schedule — its local migrations and argmax labels
-    are visible to its later blocks, remote shards' are not until the next
-    superstep. The drifting load view each shard scores against is the
-    global start-of-superstep loads plus its own migrations; the exact
-    global loads are restored at the boundary by psum-merging the per-shard
-    deltas (integer-valued degree sums, so the merge is exact and, on one
-    shard, bit-identical to the sequential update chain).
-    """
-    idx = jax.lax.axis_index("blocks")
-    local_n = blocks_per_shard * block_v
-    labels_g = gather_shards(labels, "blocks")        # [n_pad] Jacobi view
-    lam_g = gather_shards(lam, "blocks")
-    key_shard = shard_chain_key(key, "blocks")        # shard 0 keeps `key`
-
-    xs = (
-        idx * blocks_per_shard + jnp.arange(blocks_per_shard, dtype=jnp.int32),
-        blk_dst,
-        blk_row,
-        blk_w,
-        probs,
-        deg.reshape(blocks_per_shard, block_v),
-        inv_wsum.reshape(blocks_per_shard, block_v),
-        vmask.reshape(blocks_per_shard, block_v),
-    )
-    carry = (labels_g, lam_g, loads, jnp.zeros_like(loads), cap, key_shard,
-             jnp.zeros((), jnp.float32))
-    step_fn = partial(_chunk_step, cfg, block_v)
-    (labels_g, lam_g, _, delta, _, key_fin, score_sum), probs = \
-        jax.lax.scan(step_fn, carry, xs)
-
-    v0 = idx * local_n
-    labels_local = jax.lax.dynamic_slice(labels_g, (v0,), (local_n,))
-    lam_local = jax.lax.dynamic_slice(lam_g, (v0,), (local_n,))
-    loads_new = psum_delta_merge(loads, delta, "blocks")
-    score_sum = jax.lax.psum(score_sum, "blocks")
-    key_new = replicated_chain_key(key_fin, "blocks")
-    return labels_local, lam_local, probs, loads_new, key_new, score_sum
-
-
-@partial(jax.jit,
-         static_argnames=("mesh", "n", "block_v", "blocks_per_shard", "cfg"),
-         donate_argnames=("labels", "lam", "probs", "loads"))
-def _sharded_superstep_impl(
-    blk_dst, blk_row, blk_w, deg_out, inv_wsum, vmask, cap,
-    labels, lam, probs, loads, key, step,
-    *, mesh, n: int, block_v: int, blocks_per_shard: int, cfg: RevolverConfig,
-):
-    body = partial(
-        _sharded_shard_body,
-        block_v=block_v, blocks_per_shard=blocks_per_shard, cfg=cfg,
-    )
-    sharded = shard_map(
-        body, mesh=mesh,
-        in_specs=(
-            P("blocks", None), P("blocks", None), P("blocks", None),  # slabs
-            P("blocks"), P("blocks"), P("blocks"),                    # vertex
-            P(),                                                      # cap
-            P("blocks"), P("blocks"),                                 # labels/lam
-            P("blocks", None, None),                                  # probs
-            P(), P(),                                                 # loads/key
-        ),
-        out_specs=(P("blocks"), P("blocks"), P("blocks", None, None),
-                   P(), P(), P()),
-        check_rep=False,
-    )
-    labels, lam, probs, loads, key, score_sum = sharded(
-        blk_dst, blk_row, blk_w, deg_out, inv_wsum, vmask, cap,
-        labels, lam, probs, loads, key)
-    return RevolverState(
-        labels=labels,
-        lam=lam,
-        probs=probs,
-        loads=loads,
-        key=key,
-        step=step + 1,
-        score=score_sum / n,
-    )
+REVOLVER = register(engine.Algorithm(
+    name="revolver",
+    config_cls=RevolverConfig,
+    state_cls=RevolverState,
+    kind="chunk",
+    vertex_fields=("labels", "lam"),
+    block_fields=("probs",),
+    donate=("labels", "lam", "probs", "loads"),
+    init=revolver_init,
+    init_from_labels=revolver_init_from_labels,
+    supports_probs=True,
+    chunk_rule=_revolver_chunk_rule,
+))
 
 
 def place_revolver_state(state: RevolverState, sdg: ShardedDeviceGraph) -> RevolverState:
-    """Commit a freshly-initialized state to the sharded layout: per-vertex
-    buffers sliced onto their owning device, loads/key/scalars replicated —
-    so the donated superstep buffers are reused in place from step one."""
-    mesh = sdg.mesh
-
-    def put(x, spec):
-        return jax.device_put(x, NamedSharding(mesh, spec))
-
-    return RevolverState(
-        labels=put(state.labels, P("blocks")),
-        lam=put(state.lam, P("blocks")),
-        probs=put(state.probs, P("blocks", None, None)),
-        loads=put(state.loads, P()),
-        key=put(state.key, P()),
-        step=put(state.step, P()),
-        score=put(state.score, P()),
-    )
+    """Commit a freshly-initialized state to the sharded layout (see
+    ``engine.place_state``)."""
+    return engine.place_state(REVOLVER, state, sdg)
 
 
 def revolver_superstep(dg, cfg: RevolverConfig, state: RevolverState) -> RevolverState:
-    """One full superstep over all chunks. Jitted; static on (dg shape, cfg).
+    """One full superstep over all chunks (see ``engine.superstep``).
 
     `cfg.chunk_schedule` selects the execution plan: "sequential" scans all
     blocks on one device (`dg` is a plain DeviceGraph); "sharded" runs the
@@ -452,32 +325,8 @@ def revolver_superstep(dg, cfg: RevolverConfig, state: RevolverState) -> Revolve
     ShardedDeviceGraph, see `prepare_sharded_device_graph`).
 
     The state's labels / lam / probs / loads buffers are **donated** under
-    either schedule: the [n_blocks, block_v, k] probability tensor and the
-    label vectors are updated in place instead of copied every superstep
-    (per-shard slices in the sharded schedule). The passed-in `state` must
-    therefore not be reused after this call (every caller in the repo
-    rebinds, `state = revolver_superstep(...)`); the small `key` / `step` /
-    `score` leaves stay valid, so the convergence loop's windowed score
-    buffering is unaffected.
+    either schedule; the passed-in `state` must not be reused after this
+    call (every caller in the repo rebinds,
+    ``state = revolver_superstep(...)``).
     """
-    cap = capacity_device(dg.m, cfg.k, cfg.epsilon, cfg.capacity_mode)
-    if cfg.chunk_schedule == "sharded":
-        if not isinstance(dg, ShardedDeviceGraph):
-            raise TypeError(
-                "chunk_schedule='sharded' needs a ShardedDeviceGraph "
-                "(see prepare_sharded_device_graph); got a plain DeviceGraph")
-        return _sharded_superstep_impl(
-            dg.blk_dst, dg.blk_row, dg.blk_w, dg.deg_out, dg.inv_wsum,
-            dg.vmask, cap, state.labels, state.lam, state.probs, state.loads,
-            state.key, state.step,
-            mesh=dg.mesh, n=dg.n, block_v=dg.block_v,
-            blocks_per_shard=dg.blocks_per_shard, cfg=cfg,
-        )
-    if isinstance(dg, ShardedDeviceGraph):
-        dg = dg.dg   # sequential schedule over a sharded layout's arrays
-    return _superstep_impl(
-        dg.blk_dst, dg.blk_row, dg.blk_w, dg.deg_out, dg.inv_wsum, dg.vmask,
-        cap, state.labels, state.lam, state.probs, state.loads, state.key,
-        state.step,
-        n=dg.n, n_blocks=dg.n_blocks, block_v=dg.block_v, cfg=cfg,
-    )
+    return engine.superstep(REVOLVER, dg, cfg, state)

@@ -4,6 +4,13 @@ Runs jitted supersteps, tracks the paper's quality metrics each step, and
 halts when the LP score fails to improve by `theta` for `patience`
 consecutive steps (paper settings: theta=0.001, patience=5, max 290 steps).
 
+Algorithm dispatch goes through the string-keyed registry
+(`repro.core.registry`): any registered `engine.Algorithm` — revolver,
+spinner, restream, or an out-of-tree rule — runs through the same
+convergence loop, warm-start plumbing, schedule selection, and metric
+fetching; `StaticAlgorithm` entries (hash, range) take the closed-form fast
+path.
+
 Host/device synchronization: materializing `state.score` as a python float
 blocks on the device every superstep, serializing dispatch. The loop instead
 buffers the per-step score arrays and fetches them with a single
@@ -25,6 +32,7 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
+from repro.core import engine
 from repro.core.device_graph import (
     DeviceGraph,
     ShardedDeviceGraph,
@@ -33,21 +41,7 @@ from repro.core.device_graph import (
     shard_device_graph,
 )
 from repro.core.metrics import local_edges, max_normalized_load
-from repro.core.revolver import (
-    RevolverConfig,
-    place_revolver_state,
-    revolver_init,
-    revolver_init_from_labels,
-    revolver_superstep,
-)
-from repro.core.spinner import (
-    SpinnerConfig,
-    place_spinner_state,
-    spinner_init,
-    spinner_init_from_labels,
-    spinner_superstep,
-)
-from repro.core.static_partitioners import hash_partition, range_partition
+from repro.core.registry import StaticAlgorithm, get_algorithm
 from repro.graphs.csr import Graph
 
 
@@ -63,8 +57,9 @@ class PartitionResult:
     history: Dict[str, List[float]]
     wall_s: float
     probs: Optional[np.ndarray] = None  # [n_blocks, block_v, k] final LA state
-                                        # (revolver with keep_probs=True only;
-                                        # feeds warm restarts)
+                                        # (probs-carrying algorithms with
+                                        # keep_probs=True only; feeds warm
+                                        # restarts)
 
 
 def run_convergence_loop(
@@ -132,8 +127,9 @@ def _make_cfg(cls, k: int, max_steps: Optional[int], cfg_kwargs: dict):
     """Build an algorithm config, rejecting unknown keys loudly.
 
     The spinner branch used to silently drop revolver-only kwargs, which
-    turned typos (e.g. `capacty_mode=`) into no-ops; both algorithms now
-    raise TypeError on anything their config dataclass doesn't define.
+    turned typos (e.g. `capacty_mode=`) into no-ops; every registered
+    algorithm now raises TypeError on anything its config dataclass doesn't
+    define.
     """
     valid = {f.name for f in dataclasses.fields(cls)}
     unknown = sorted(set(cfg_kwargs) - valid)
@@ -168,10 +164,12 @@ def run_partitioner(
 ) -> PartitionResult:
     """Partition `graph` into `k` parts with the named algorithm.
 
-    algo: "revolver" | "spinner" | "hash" | "range".
-    Extra kwargs flow into the algorithm config dataclass (unknown keys raise
-    TypeError). `sync_every` batches device->host score fetches (see module
-    docstring). `init_labels` (and, for revolver, `init_probs` /
+    algo: any key in the algorithm registry — "revolver" | "spinner" |
+    "restream" | "hash" | "range" out of the box (see
+    `repro.core.registry.available_algorithms`). Extra kwargs flow into the
+    algorithm's config dataclass (unknown keys raise TypeError).
+    `sync_every` batches device->host score fetches (see module docstring).
+    `init_labels` (and, for probs-carrying algorithms, `init_probs` /
     `init_sharpen`) warm-start the state from a previous assignment — the
     streaming subsystem's incremental repartitioning path. Carrying labels
     without LA state leaves the automata uniform, whose first exploration
@@ -182,20 +180,22 @@ def run_partitioner(
     restarts); it is off by default because fetching [n_pad, k] floats to
     host is a real cost at production scale.
 
-    `chunk_schedule="sharded"` (a revolver/spinner config knob) runs the
-    superstep data-parallel over a 1-D ``("blocks",)`` mesh — `mesh` selects
-    it (default: all visible devices, see `make_blocks_mesh`); a passed `dg`
-    is aligned and placed onto the mesh if it is not already a
+    `chunk_schedule="sharded"` (a config knob on every superstep algorithm)
+    runs the superstep data-parallel over a 1-D ``("blocks",)`` mesh —
+    `mesh` selects it (default: all visible devices, see `make_blocks_mesh`);
+    a passed `dg` is aligned and placed onto the mesh if it is not already a
     `ShardedDeviceGraph`.
     """
     t0 = time.time()
     if sync_every < 1:
         raise ValueError(f"sync_every must be >= 1, got {sync_every}")
+    algorithm = get_algorithm(algo)
+    static = isinstance(algorithm, StaticAlgorithm)
     sharded = cfg_kwargs.get("chunk_schedule") == "sharded"
     if mesh is not None and not sharded:
         raise ValueError("mesh is only meaningful with chunk_schedule='sharded'")
-    if algo in ("hash", "range") and sharded:
-        raise TypeError(f"{algo!r} runs no supersteps; chunk_schedule is meaningless")
+    if static and cfg_kwargs:
+        raise TypeError(f"{algo!r} runs no supersteps; it takes no config kwargs")
     if sharded:
         if mesh is None and isinstance(dg, ShardedDeviceGraph):
             mesh = dg.mesh
@@ -211,11 +211,11 @@ def run_partitioner(
         dg = prepare_device_graph(graph, n_blocks=n_blocks)
     key = jax.random.PRNGKey(seed)
 
-    if algo in ("hash", "range"):
+    if static:
         if init_labels is not None or init_probs is not None or init_sharpen:
             raise TypeError(f"{algo!r} is stateless; warm-start args are meaningless")
-        lab_fn = hash_partition if algo == "hash" else range_partition
-        labels = jax.numpy.pad(lab_fn(graph.n, k), (0, dg.n_pad - graph.n))
+        labels = jax.numpy.pad(algorithm.partition(graph.n, k),
+                               (0, dg.n_pad - graph.n))
         le = float(local_edges(labels, dg.dir_src, dg.dir_dst))
         ml = float(max_normalized_load(labels[: graph.n], dg.deg_out[: graph.n], k))
         return PartitionResult(
@@ -225,34 +225,32 @@ def run_partitioner(
             wall_s=time.time() - t0,
         )
 
-    if algo == "revolver":
-        cfg = _make_cfg(RevolverConfig, k, max_steps, cfg_kwargs)
-        if init_labels is not None:
-            state = revolver_init_from_labels(dg, cfg, key, init_labels,
-                                              probs=init_probs,
-                                              prob_sharpen=init_sharpen)
+    cfg = _make_cfg(algorithm.config_cls, k, max_steps, cfg_kwargs)
+    if not algorithm.supports_probs:
+        if init_probs is not None:
+            raise TypeError(
+                f"{algo!r} has no LA state; init_probs/init_sharpen are meaningless")
+        if init_sharpen:
+            raise TypeError(
+                f"{algo!r} has no LA state; init_probs/init_sharpen are meaningless")
+    if init_labels is not None:
+        if algorithm.init_from_labels is None:
+            raise TypeError(f"{algo!r} does not support warm starts")
+        if algorithm.supports_probs:
+            state = algorithm.init_from_labels(dg, cfg, key, init_labels,
+                                               probs=init_probs,
+                                               prob_sharpen=init_sharpen)
         else:
-            if init_probs is not None:
-                raise TypeError("init_probs requires init_labels")
-            if init_sharpen:
-                raise TypeError("init_sharpen requires init_labels")
-            state = revolver_init(dg, cfg, key)
-        if sharded:
-            state = place_revolver_state(state, dg)
-        step_fn = lambda s: revolver_superstep(dg, cfg, s)
-    elif algo == "spinner":
-        if init_probs is not None or init_sharpen:
-            raise TypeError("spinner has no LA state; init_probs/init_sharpen are meaningless")
-        cfg = _make_cfg(SpinnerConfig, k, max_steps, cfg_kwargs)
-        if init_labels is not None:
-            state = spinner_init_from_labels(dg, cfg, key, init_labels)
-        else:
-            state = spinner_init(dg, cfg, key)
-        if sharded:
-            state = place_spinner_state(state, dg)
-        step_fn = lambda s: spinner_superstep(dg, cfg, s)
+            state = algorithm.init_from_labels(dg, cfg, key, init_labels)
     else:
-        raise ValueError(f"unknown algorithm {algo!r}")
+        if init_probs is not None:
+            raise TypeError("init_probs requires init_labels")
+        if init_sharpen:
+            raise TypeError("init_sharpen requires init_labels")
+        state = algorithm.init(dg, cfg, key)
+    if sharded:
+        state = engine.place_state(algorithm, state, dg)
+    step_fn = lambda s: engine.superstep(algorithm, dg, cfg, s)
 
     history: Dict[str, List[float]] = {"local_edges": [], "max_norm_load": [], "score": []}
     # per-step metric arrays stay on device and are drained on the same
@@ -292,7 +290,7 @@ def run_partitioner(
         fetch["le"] = local_edges(state.labels, dg.dir_src, dg.dir_dst)
         fetch["ml"] = max_normalized_load(
             state.labels[: graph.n], dg.deg_out[: graph.n], k)
-    if keep_probs and algo == "revolver":
+    if keep_probs and algorithm.supports_probs:
         fetch["probs"] = state.probs
     fetched = jax.device_get(fetch)
     if "le" in fetched:

@@ -3,26 +3,30 @@
 Synchronous BSP label propagation: all vertices score all partitions against
 the *previous* step's labels/loads, pick the argmax candidate, and migrate
 gated by remaining capacity — the paper's main comparison point.
+
+This module is a **rule module** (see ``core/README.md``): it contributes
+one ``shard_rule`` that processes a whole shard in a single BSP step; the
+engine runs it over the blocked edge slabs either on one shard spanning the
+graph (``chunk_schedule="sequential"``) or data-parallel under ``shard_map``
+(``"sharded"``). Spinner is synchronous already, so sharding it changes no
+visibility semantics — only where the histogram work runs. Cross-shard
+reductions (candidate demand, score) go through the context's collectives,
+which degenerate to identities on the sequential schedule; the eq.-(4)
+weights are integer-valued, so the slab-ordered histogram accumulation is
+exact and both schedules are bit-stable against the flat-array reference.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.device_graph import (
-    CAPACITY_MODES,
-    DeviceGraph,
-    ShardedDeviceGraph,
-    capacity_device,
-)
+from repro.core import engine
+from repro.core.device_graph import CAPACITY_MODES, DeviceGraph, ShardedDeviceGraph  # noqa: F401  (re-exported API)
 from repro.core.lp import edge_histogram_jnp, spinner_scores
-from repro.parallel.collectives import gather_shards, psum_delta_merge
+from repro.core.registry import register
 
 _CHUNK_SCHEDULES = ("sequential", "sharded")
 
@@ -35,11 +39,8 @@ class SpinnerConfig:
     patience: int = 5
     theta: float = 0.001
     capacity_mode: str = "spinner"
-    # "sequential": one device over the flat edge arrays; "sharded": BSP
-    # data-parallel over the blocked slabs on a ("blocks",) mesh. Spinner is
-    # synchronous already, so sharding it changes no visibility semantics —
-    # only the histogram layout (slabs instead of flat) and where the work
-    # runs.
+    # "sequential": one shard spanning the whole graph; "sharded": BSP
+    # data-parallel over the blocked slabs on a ("blocks",) mesh.
     chunk_schedule: str = "sequential"
 
     def __post_init__(self):
@@ -65,7 +66,7 @@ def spinner_init(dg: DeviceGraph, cfg: SpinnerConfig, key: jax.Array) -> Spinner
     k_lab, key = jax.random.split(key)
     labels = jax.random.randint(k_lab, (dg.n_pad,), 0, cfg.k, dtype=jnp.int32)
     labels = jnp.where(dg.vmask, labels, 0)
-    loads = jnp.zeros((cfg.k,), jnp.float32).at[labels].add(dg.deg_out)
+    loads = engine.loads_from_labels(dg, cfg.k, labels)
     return SpinnerState(labels, loads, key, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
 
 
@@ -75,160 +76,78 @@ def spinner_init_from_labels(
     """Warm-start from a previous assignment; new vertices draw random labels
     (mirrors `revolver_init_from_labels`, minus the LA state Spinner lacks)."""
     k_lab, key = jax.random.split(key)
-    lab = jax.random.randint(k_lab, (dg.n_pad,), 0, cfg.k, dtype=jnp.int32)
-    carried = jnp.clip(jnp.asarray(labels, jnp.int32), 0, cfg.k - 1)
-    m_keep = min(int(carried.shape[0]), dg.n_pad)
-    lab = jax.lax.dynamic_update_slice(lab, carried[:m_keep], (0,))
-    lab = jnp.where(dg.vmask, lab, 0)
-    loads = jnp.zeros((cfg.k,), jnp.float32).at[lab].add(dg.deg_out)
+    lab = engine.warm_labels(dg, cfg.k, k_lab, labels)
+    loads = engine.loads_from_labels(dg, cfg.k, lab)
     return SpinnerState(lab, loads, key, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
 
 
-@partial(jax.jit, static_argnames=("n", "n_pad", "cfg"))
-def _spinner_impl(edge_src, edge_dst, edge_w, deg_out, inv_wsum, vmask, cap,
-                  state: SpinnerState, *, n: int, n_pad: int, cfg: SpinnerConfig):
-    labels, loads, key = state.labels, state.loads, state.key
-    key, k_mig = jax.random.split(key)
+def _spinner_shard_rule(cfg: SpinnerConfig, ctx: engine.ShardContext,
+                        local, loads, cap, key) -> engine.ShardUpdate:
+    """One BSP step over this shard's slabs — eq. (3) scores against the
+    previous step's configuration, capacity-gated migration.
 
-    # eq. (3) scores against the previous step's configuration (synchronous)
-    hist = edge_histogram_jnp(edge_src, labels[edge_dst], edge_w, n_pad, cfg.k)
-    scores = spinner_scores(hist, inv_wsum, loads, cap)
-    # prefer the current label on ties (Spinner keeps vertices in place)
-    bump = jax.nn.one_hot(labels, cfg.k, dtype=scores.dtype) * 1e-6
-    cand = jnp.argmax(scores + bump, axis=-1).astype(jnp.int32)
-    best = jnp.max(scores, axis=-1)
-
-    wants = (cand != labels) & vmask
-    demand = jnp.zeros((cfg.k,), jnp.float32).at[cand].add(deg_out * wants)   # m(l)
-    remaining = cap - loads                                                   # r(l)
-    p_mig = jnp.where(demand > 0,
-                      jnp.clip(remaining / jnp.maximum(demand, 1e-9), 0.0, 1.0),
-                      1.0)
-    u = jax.random.uniform(k_mig, (n_pad,))
-    migrate = wants & (u < p_mig[cand])
-    new_labels = jnp.where(migrate, cand, labels)
-
-    dmig = deg_out * migrate
-    loads = loads.at[labels].add(-dmig).at[cand].add(dmig)
-
-    score = jnp.sum(jnp.where(vmask, best, 0.0)) / n
-    return SpinnerState(new_labels, loads, key, state.step + 1, score)
-
-
-def _spinner_shard_body(
-    blk_dst, blk_row, blk_w, deg, inv_wsum, vmask, cap,
-    labels, loads, key,
-    *, n_pad: int, block_v: int, blocks_per_shard: int, cfg: SpinnerConfig,
-):
-    """Per-shard BSP step: identical semantics to `_spinner_impl`, with the
-    histogram taken over the shard's blocked slabs, candidate demand and
-    load deltas psum-merged, and the migration uniforms drawn from the full
-    [n_pad] stream then sliced — so the draw a vertex sees is independent of
-    how many shards the mesh has."""
-    idx = jax.lax.axis_index("blocks")
-    local_n = blocks_per_shard * block_v
+    Candidate demand is psum-merged so p_mig gates against the *global*
+    contention, and the migration uniforms are drawn from the full [n_pad]
+    stream then sliced — so the draw a vertex sees is independent of how
+    many shards the mesh has (1-shard sharded == sequential bit-exactly).
+    """
+    labels = local["labels"]
     k = cfg.k
     key, k_mig = jax.random.split(key)
-    labels_g = gather_shards(labels, "blocks")
+    labels_g = ctx.gather(labels)
 
     # eq. (3) histogram over the local slabs (same edges as the flat arrays)
-    rows_local = (
-        jnp.arange(blocks_per_shard, dtype=jnp.int32)[:, None] * block_v
-        + blk_row
-    ).reshape(-1)
-    slots = labels_g[blk_dst.reshape(-1)]
-    hist = edge_histogram_jnp(rows_local, slots, blk_w.reshape(-1), local_n, k)
-    scores = spinner_scores(hist, inv_wsum, loads, cap)
+    slots = labels_g[ctx.blk_dst.reshape(-1)]
+    hist = edge_histogram_jnp(ctx.local_rows(), slots, ctx.blk_w.reshape(-1),
+                              ctx.local_n, k)
+    scores = spinner_scores(hist, ctx.inv_wsum, loads, cap)
+    # prefer the current label on ties (Spinner keeps vertices in place)
     bump = jax.nn.one_hot(labels, k, dtype=scores.dtype) * 1e-6
     cand = jnp.argmax(scores + bump, axis=-1).astype(jnp.int32)
     best = jnp.max(scores, axis=-1)
 
-    wants = (cand != labels) & vmask
-    demand = psum_delta_merge(
-        jnp.zeros((k,), jnp.float32),
-        jnp.zeros((k,), jnp.float32).at[cand].add(deg * wants),
-        "blocks")
-    remaining = cap - loads
+    wants = (cand != labels) & ctx.vmask
+    demand = ctx.psum(
+        jnp.zeros((k,), jnp.float32).at[cand].add(ctx.deg * wants))      # m(l)
+    remaining = cap - loads                                              # r(l)
     p_mig = jnp.where(demand > 0,
                       jnp.clip(remaining / jnp.maximum(demand, 1e-9), 0.0, 1.0),
                       1.0)
-    u_full = jax.random.uniform(k_mig, (n_pad,))
-    u = jax.lax.dynamic_slice(u_full, (idx * local_n,), (local_n,))
+    u_full = jax.random.uniform(k_mig, (ctx.n_pad,))
+    u = jax.lax.dynamic_slice(u_full, (ctx.v0,), (ctx.local_n,))
     migrate = wants & (u < p_mig[cand])
     new_labels = jnp.where(migrate, cand, labels)
 
-    dmig = deg * migrate
+    dmig = ctx.deg * migrate
     delta = jnp.zeros((k,), jnp.float32).at[labels].add(-dmig).at[cand].add(dmig)
-    loads_new = psum_delta_merge(loads, delta, "blocks")
-    score_sum = jax.lax.psum(jnp.sum(jnp.where(vmask, best, 0.0)), "blocks")
-    return new_labels, loads_new, key, score_sum
+    score = jnp.sum(jnp.where(ctx.vmask, best, 0.0))
+    return engine.ShardUpdate(
+        vert={"labels": new_labels},
+        loads_delta=delta,
+        key=key,
+        score=score,
+    )
 
 
-@partial(jax.jit,
-         static_argnames=("mesh", "n", "n_pad", "block_v",
-                          "blocks_per_shard", "cfg"),
-         donate_argnames=("labels", "loads"))
-def _spinner_sharded_impl(
-    blk_dst, blk_row, blk_w, deg_out, inv_wsum, vmask, cap,
-    labels, loads, key, step,
-    *, mesh, n: int, n_pad: int, block_v: int, blocks_per_shard: int,
-    cfg: SpinnerConfig,
-):
-    body = partial(
-        _spinner_shard_body,
-        n_pad=n_pad, block_v=block_v, blocks_per_shard=blocks_per_shard,
-        cfg=cfg,
-    )
-    sharded = shard_map(
-        body, mesh=mesh,
-        in_specs=(
-            P("blocks", None), P("blocks", None), P("blocks", None),
-            P("blocks"), P("blocks"), P("blocks"),
-            P(),
-            P("blocks"), P(), P(),
-        ),
-        out_specs=(P("blocks"), P(), P(), P()),
-        check_rep=False,
-    )
-    labels, loads, key, score_sum = sharded(
-        blk_dst, blk_row, blk_w, deg_out, inv_wsum, vmask, cap,
-        labels, loads, key)
-    return SpinnerState(labels, loads, key, step + 1, score_sum / n)
+SPINNER = register(engine.Algorithm(
+    name="spinner",
+    config_cls=SpinnerConfig,
+    state_cls=SpinnerState,
+    kind="shard",
+    vertex_fields=("labels",),
+    donate=("labels", "loads"),
+    init=spinner_init,
+    init_from_labels=spinner_init_from_labels,
+    shard_rule=_spinner_shard_rule,
+))
 
 
 def place_spinner_state(state: SpinnerState, sdg: ShardedDeviceGraph) -> SpinnerState:
-    """Commit an initialized state to the sharded layout (labels sliced onto
-    their owning device, the rest replicated)."""
-    mesh = sdg.mesh
-
-    def put(x, spec):
-        return jax.device_put(x, NamedSharding(mesh, spec))
-
-    return SpinnerState(
-        labels=put(state.labels, P("blocks")),
-        loads=put(state.loads, P()),
-        key=put(state.key, P()),
-        step=put(state.step, P()),
-        score=put(state.score, P()),
-    )
+    """Commit an initialized state to the sharded layout (see
+    ``engine.place_state``)."""
+    return engine.place_state(SPINNER, state, sdg)
 
 
 def spinner_superstep(dg, cfg: SpinnerConfig, state: SpinnerState) -> SpinnerState:
-    cap = capacity_device(dg.m, cfg.k, cfg.epsilon, cfg.capacity_mode)
-    if cfg.chunk_schedule == "sharded":
-        if not isinstance(dg, ShardedDeviceGraph):
-            raise TypeError(
-                "chunk_schedule='sharded' needs a ShardedDeviceGraph "
-                "(see prepare_sharded_device_graph); got a plain DeviceGraph")
-        return _spinner_sharded_impl(
-            dg.blk_dst, dg.blk_row, dg.blk_w, dg.deg_out, dg.inv_wsum,
-            dg.vmask, cap, state.labels, state.loads, state.key, state.step,
-            mesh=dg.mesh, n=dg.n, n_pad=dg.n_pad, block_v=dg.block_v,
-            blocks_per_shard=dg.blocks_per_shard, cfg=cfg,
-        )
-    if isinstance(dg, ShardedDeviceGraph):
-        dg = dg.dg
-    return _spinner_impl(
-        dg.edge_src, dg.edge_dst, dg.edge_w, dg.deg_out, dg.inv_wsum, dg.vmask,
-        cap, state, n=dg.n, n_pad=dg.n_pad, cfg=cfg,
-    )
+    """One BSP superstep (see ``engine.superstep``; labels/loads donated)."""
+    return engine.superstep(SPINNER, dg, cfg, state)

@@ -1,8 +1,16 @@
-"""The paper's static baselines (Section V-D): Hash and Range partitioning."""
+"""The paper's static baselines (Section V-D): Hash and Range partitioning.
+
+Registered as ``StaticAlgorithm`` entries, so ``run_partitioner("hash")`` /
+``("range")`` resolve through the same registry as the superstep
+algorithms and every benchmark sweep gets the no-learning quality baseline
+for free.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.registry import StaticAlgorithm, register
 
 
 def hash_partition(n: int, k: int) -> jax.Array:
@@ -14,3 +22,7 @@ def range_partition(n: int, k: int) -> jax.Array:
     """floor(v * k / |V|)."""
     v = jnp.arange(n, dtype=jnp.int64)
     return jnp.minimum((v * k) // n, k - 1).astype(jnp.int32)
+
+
+HASH = register(StaticAlgorithm(name="hash", partition=hash_partition))
+RANGE = register(StaticAlgorithm(name="range", partition=range_partition))

@@ -24,6 +24,26 @@ from repro.kernels.decode_attention import decode_attention_pallas
 # as a test/bench oracle for the fused kernel's score histogram.
 
 
+def superstep_kernels(hist_impl: str, la_impl: str):
+    """Resolve the partitioner engine's kernel routing.
+
+    The ``hist_impl`` / ``la_impl`` config knobs pick between the jnp
+    reference paths (scatter-add histogram in core/lp.py, fori-loop LA
+    update in core/la.py) and the Pallas kernels below; this is the single
+    dispatch point the superstep rules route through. Returns
+    ``(edge_phase_op, la_update_op)`` with ``None`` marking "use the jnp
+    reference" — rules keep their reference math inline so the pure-XLA
+    lowering stays dependency-free.
+    """
+    for name, impl in (("hist_impl", hist_impl), ("la_impl", la_impl)):
+        if impl not in ("jnp", "pallas"):
+            raise ValueError(f"{name}={impl!r} is not one of ('jnp', 'pallas')")
+    return (
+        fused_edge_phase if hist_impl == "pallas" else None,
+        la_update if la_impl == "pallas" else None,
+    )
+
+
 def fused_edge_phase(edge_dst, edge_rows, edge_vals, labels, lam, actions,
                      feasible, *, block_v: int, k: int,
                      weight_mode: str = "self_lambda",

@@ -1,7 +1,13 @@
 """Graph-partitioning launcher — the paper's workload as a CLI.
 
   PYTHONPATH=src python -m repro.launch.partition --dataset LJ --scale 0.002 \
-      --k 8 --algo revolver --algo spinner --algo hash --algo range
+      --k 8 --algo revolver --algo spinner --algo restream --algo hash
+
+`--algo` accepts any key in the algorithm registry (`repro.core.registry`),
+so out-of-tree rules registered before `main()` are launchable without
+touching this file. Superstep-only knobs (--epsilon, --max-steps,
+--chunk-schedule) are passed only to engine-driven algorithms; the static
+baselines (hash/range) take none.
 """
 from __future__ import annotations
 
@@ -9,6 +15,11 @@ import argparse
 import json
 
 from repro.core import run_partitioner
+from repro.core.registry import (
+    StaticAlgorithm,
+    available_algorithms,
+    get_algorithm,
+)
 from repro.graphs import load_dataset
 
 
@@ -19,22 +30,27 @@ def main(argv=None):
     ap.add_argument("--scale", type=float, default=0.002)
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--algo", action="append", default=None,
-                    choices=["revolver", "spinner", "hash", "range"])
+                    choices=list(available_algorithms()))
     ap.add_argument("--max-steps", type=int, default=290)
     ap.add_argument("--epsilon", type=float, default=0.05)
     ap.add_argument("--n-blocks", type=int, default=8)
+    ap.add_argument("--chunk-schedule", default="sequential",
+                    choices=["sequential", "sharded"])
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
 
     g = load_dataset(args.dataset, scale=args.scale, seed=args.seed)
-    algos = args.algo or ["revolver", "spinner", "hash", "range"]
+    algos = args.algo or list(available_algorithms())
     rows = []
     for algo in algos:
+        kwargs = {}
+        if not isinstance(get_algorithm(algo), StaticAlgorithm):
+            kwargs = dict(epsilon=args.epsilon,
+                          chunk_schedule=args.chunk_schedule)
         res = run_partitioner(algo, g, args.k, seed=args.seed,
-                              epsilon=args.epsilon,
                               max_steps=args.max_steps,
-                              n_blocks=args.n_blocks)
+                              n_blocks=args.n_blocks, **kwargs)
         row = {"dataset": args.dataset, "algo": algo, "k": args.k,
                "local_edges": round(res.local_edges, 4),
                "max_norm_load": round(res.max_norm_load, 4),

@@ -7,10 +7,11 @@ Lifecycle: **delta -> merge -> warm-start -> refine**.
   * `delta_graph` — `IncrementalGraph` (sorted-key CSR maintenance, O(m + d
     log m) per delta) and `IncrementalDeviceGraph` (shape-stable padded
     device layout, dirty-block slab rewrites, headroom re-pads);
-  * `runner` — `StreamRunner`, which warm-starts Revolver from the carried
-    labels + LA probabilities after each merge and refines for a handful of
-    supersteps, with an optional prioritized (high-degree-first) restream
-    pass.
+  * `runner` — `StreamRunner`, which warm-starts any registered engine
+    algorithm (`algo="revolver"` default) from the carried labels — plus LA
+    probabilities where the rule has them — after each merge and refines
+    for a handful of supersteps, with an optional prioritized
+    (high-degree-first) restream pass.
 
 See README.md in this directory for the design rationale.
 """

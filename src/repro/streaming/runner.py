@@ -5,16 +5,20 @@ The streaming lifecycle (see the package README):
   1. an `EdgeDelta` arrives (from a `StreamBuffer` or `stream_from_graph`);
   2. `IncrementalDeviceGraph.apply` merges it — sorted-key splice on the
      host, dirty-block slab rewrite on the device layout;
-  3. Revolver is warm-started from the previous assignment
-     (`revolver_init_from_labels`: surviving vertices keep their labels and
-     learned LA probabilities, new vertices start uniform) and refined for a
-     handful of supersteps with the paper's score-stall halting;
+  3. the refine algorithm is warm-started from the previous assignment
+     (surviving vertices keep their labels — and, for probs-carrying
+     algorithms like Revolver, their learned LA probabilities — new
+     vertices start cold) and refined for a handful of supersteps with the
+     paper's score-stall halting;
   4. quality metrics are reported per delta (`DeltaReport`).
 
-Because the block layout is shape-stable across deltas, the jitted superstep
-compiles once for the whole stream (plus once more per e_max re-pad), and a
-warm start typically converges in ~patience supersteps instead of the
-hundreds a cold batch run needs.
+The refine algorithm is any engine-driven entry in the algorithm registry
+(`algo="revolver"` by default; "spinner" and "restream" work unchanged
+because warm starts, schedules, and donation all come from the shared
+engine). Because the block layout is shape-stable across deltas, the jitted
+superstep compiles once for the whole stream (plus once more per e_max
+re-pad), and a warm start typically converges in ~patience supersteps
+instead of the hundreds a cold batch run needs.
 
 Restream mode (`StreamConfig.restream=True`) follows the prioritized
 restreaming idea (Awadelkarim & Ugander): after each merge the highest-degree
@@ -22,7 +26,9 @@ vertices — the ones whose placement matters most for edge locality — are
 replayed in priority-ordered chunks. Replaying a chunk resets its vertices'
 LA probabilities to uniform (they re-decide from scratch against the current
 configuration) and runs a couple of supersteps before the next chunk, then
-the normal refine loop finishes the pass.
+the normal refine loop finishes the pass. (It requires a probs-carrying
+algorithm; with `algo="restream"` the degree-priority ramp is built into
+the rule itself, so the replay pass would be redundant.)
 """
 from __future__ import annotations
 
@@ -34,18 +40,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import engine
 from repro.core.device_graph import shard_device_graph
 from repro.core.metrics import local_edges, max_normalized_load
+from repro.core.registry import Algorithm, get_algorithm
 from repro.core.runner import run_convergence_loop
-from repro.core.revolver import (
-    RevolverConfig,
-    RevolverState,
-    place_revolver_state,
-    revolver_init,
-    revolver_init_from_labels,
-    revolver_superstep,
-)
-from repro.streaming.delta_graph import IncrementalDeviceGraph, MergeInfo
+from repro.streaming.delta_graph import IncrementalDeviceGraph
 from repro.streaming.stream import EdgeDelta
 
 
@@ -86,18 +86,20 @@ class DeltaReport:
 
 
 class StreamRunner:
-    """Keeps a Revolver partition fresh over an edge stream.
+    """Keeps a partition fresh over an edge stream.
 
     The runner owns the incremental graph state plus the carried assignment
-    (labels + LA probabilities). Each `ingest(delta)` returns a
-    `DeltaReport`; `run(stream)` drains an iterator of deltas.
+    (labels, and LA probabilities when the algorithm has them). Each
+    `ingest(delta)` returns a `DeltaReport`; `run(stream)` drains an
+    iterator of deltas.
 
-    `**revolver_kwargs` flow into the shared `RevolverConfig`, so the kernel
-    dispatch knobs plumb through the streaming path exactly as in the batch
-    runner: `StreamRunner(n, cfg, hist_impl="pallas", la_impl="pallas")`
-    refines every delta through the fused dual-histogram edge-phase kernel
-    and the Pallas LA update (typos raise at construction, see
-    `RevolverConfig.__post_init__`).
+    `algo` names any engine-driven algorithm in the registry; `**algo_kwargs`
+    flow into its config dataclass, so the kernel dispatch knobs plumb
+    through the streaming path exactly as in the batch runner:
+    `StreamRunner(n, cfg, hist_impl="pallas", la_impl="pallas")` refines
+    every delta through the fused dual-histogram edge-phase kernel and the
+    Pallas LA update (typos raise at construction, see the config
+    `__post_init__` validation).
 
     `chunk_schedule="sharded"` runs every refine superstep data-parallel on
     a ``("blocks",)`` mesh (pass `mesh=`, default all visible devices). The
@@ -106,16 +108,31 @@ class StreamRunner:
     sharded superstep stays shape-stable across the stream.
     """
 
-    def __init__(self, n: int, cfg: StreamConfig, *, seed: int = 0, mesh=None,
-                 **revolver_kwargs):
+    def __init__(self, n: int, cfg: StreamConfig, *, algo: str = "revolver",
+                 seed: int = 0, mesh=None, **algo_kwargs):
         self.cfg = cfg
+        self.algo = get_algorithm(algo)
+        if not isinstance(self.algo, Algorithm):
+            raise ValueError(
+                f"{algo!r} runs no supersteps; streaming refinement needs an "
+                "engine-driven algorithm")
+        if self.algo.init_from_labels is None:
+            raise ValueError(f"{algo!r} does not support warm starts")
+        if cfg.restream and not self.algo.supports_probs:
+            raise ValueError(
+                "StreamConfig.restream replays vertices by resetting their LA "
+                f"probabilities, which {algo!r} does not carry (use "
+                "algo='restream' for a rule with a built-in priority ramp)")
+        if cfg.warm_sharpen and not self.algo.supports_probs:
+            raise ValueError(
+                f"StreamConfig.warm_sharpen needs LA state; {algo!r} has none")
         # one config for every refine call -> one jit cache entry per layout
-        self.rcfg = RevolverConfig(
+        self.rcfg = self.algo.config_cls(
             k=cfg.k,
             max_steps=cfg.refine_max_steps,
             patience=cfg.refine_patience,
             theta=cfg.theta,
-            **revolver_kwargs,
+            **algo_kwargs,
         )
         if self.rcfg.chunk_schedule == "sharded" and mesh is None:
             from repro.launch.mesh import make_blocks_mesh
@@ -160,14 +177,16 @@ class StreamRunner:
 
         self._key, k_init = jax.random.split(self._key)
         if self.labels is None:
-            state = revolver_init(dg, self.rcfg, k_init)
-        else:
-            state = revolver_init_from_labels(
+            state = self.algo.init(dg, self.rcfg, k_init)
+        elif self.algo.supports_probs:
+            state = self.algo.init_from_labels(
                 dg, self.rcfg, k_init, self.labels, probs=self.probs,
                 prob_sharpen=cfg.warm_sharpen,
             )
+        else:
+            state = self.algo.init_from_labels(dg, self.rcfg, k_init, self.labels)
         if self.mesh is not None:
-            state = place_revolver_state(state, dg)
+            state = engine.place_state(self.algo, state, dg)
 
         steps = 0
         if cfg.restream and self.labels is not None:
@@ -177,7 +196,8 @@ class StreamRunner:
         steps += refine_steps
 
         self.labels = np.asarray(state.labels[: dg.n])
-        self.probs = np.asarray(state.probs)
+        if self.algo.supports_probs:
+            self.probs = np.asarray(state.probs)
 
         le = float(local_edges(state.labels, dg.dir_src, dg.dir_dst))
         ml = float(max_normalized_load(state.labels[: dg.n], dg.deg_out[: dg.n], cfg.k))
@@ -202,18 +222,19 @@ class StreamRunner:
 
     # ------------------------------------------------------------------ #
 
-    def _refine(
-        self, dg, state: RevolverState, max_steps: int, patience: int
-    ) -> Tuple[RevolverState, int, bool]:
+    def _superstep(self, dg, state):
+        return engine.superstep(self.algo, dg, self.rcfg, state)
+
+    def _refine(self, dg, state, max_steps: int, patience: int):
         """Warm refinement via the shared score-stall convergence loop
         (same halting semantics as `run_partitioner`, windowed host sync)."""
         return run_convergence_loop(
-            lambda s: revolver_superstep(dg, self.rcfg, s), state,
+            lambda s: self._superstep(dg, s), state,
             max_steps=max_steps, patience=patience, theta=self.rcfg.theta,
             sync_every=self.cfg.sync_every,
         )
 
-    def _replay_prioritized(self, dg, state: RevolverState) -> Tuple[RevolverState, int]:
+    def _replay_prioritized(self, dg, state) -> Tuple[object, int]:
         """Restream pass: reset the LA state of high-degree vertices in
         priority-ordered chunks, letting each chunk re-decide before the
         next is released (high-degree-first, per the restreaming paper)."""
@@ -230,6 +251,6 @@ class StreamRunner:
             flat = flat.at[jnp.asarray(chunk)].set(1.0 / cfg.k)
             state = state._replace(probs=flat.reshape(dg.n_blocks, dg.block_v, cfg.k))
             for _ in range(cfg.restream_steps_per_chunk):
-                state = revolver_superstep(dg, self.rcfg, state)
+                state = self._superstep(dg, state)
                 steps += 1
         return state, steps

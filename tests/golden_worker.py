@@ -1,0 +1,139 @@
+"""Golden-fixture worker: pin revolver/spinner partitions at a fixed seed.
+
+The schedule-agnostic engine refactor's non-negotiable gate is that the
+post-refactor revolver and spinner supersteps are **bit-identical** to the
+pre-refactor implementations at a fixed seed, for both
+``chunk_schedule="sequential"`` and ``"sharded"``. This worker computes the
+fixed-seed trajectories through the *public* partitioner API only (configs,
+inits, supersteps, state placement — everything the refactor must preserve)
+so the exact same script runs against any revision:
+
+  # write fixtures (run once, at the pre-refactor HEAD)
+  PYTHONPATH=src python tests/golden_worker.py --schedule sequential \
+      --write tests/golden/sequential.npz
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python tests/golden_worker.py --schedule sharded \
+      --write tests/golden/sharded4.npz
+
+  # check fixtures (tests/test_golden.py spawns this; exit 1 on drift)
+  ... --schedule sequential --check tests/golden/sequential.npz
+
+Sharded fixtures are generated/checked at 4 forced host devices with 8
+blocks (2 blocks per shard) so the Jacobi machinery — label all-gather,
+psum load-delta merge, per-shard PRNG chains — is genuinely multi-shard,
+not the 1-shard degenerate case that equals the sequential scan.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+GRAPH = dict(n=1024, m=8192, n_comm=16, mixing=0.25, degree_exponent=0.5,
+             seed=3)
+K = 4
+N_BLOCKS = 8
+STEPS = 6
+SEED = 7
+SHARDED_DEVICES = 4
+
+
+def compute(schedule: str) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.core.device_graph import (
+        prepare_device_graph,
+        prepare_sharded_device_graph,
+    )
+    from repro.core.revolver import (
+        RevolverConfig,
+        place_revolver_state,
+        revolver_init,
+        revolver_superstep,
+    )
+    from repro.core.spinner import (
+        SpinnerConfig,
+        place_spinner_state,
+        spinner_init,
+        spinner_superstep,
+    )
+    from repro.graphs.generators import dc_sbm
+    from repro.launch.mesh import make_blocks_mesh
+
+    g = dc_sbm(GRAPH["n"], GRAPH["m"], n_comm=GRAPH["n_comm"],
+               mixing=GRAPH["mixing"],
+               degree_exponent=GRAPH["degree_exponent"], seed=GRAPH["seed"])
+    algos = {
+        "revolver": (RevolverConfig, revolver_init, revolver_superstep,
+                     place_revolver_state),
+        "spinner": (SpinnerConfig, spinner_init, spinner_superstep,
+                    place_spinner_state),
+    }
+    if schedule == "sharded":
+        assert jax.device_count() >= SHARDED_DEVICES, (
+            f"sharded fixtures need {SHARDED_DEVICES} devices, have "
+            f"{jax.device_count()} (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={SHARDED_DEVICES})")
+        mesh = make_blocks_mesh(SHARDED_DEVICES)
+        dg = prepare_sharded_device_graph(g, mesh, n_blocks=N_BLOCKS)
+    else:
+        dg = prepare_device_graph(g, n_blocks=N_BLOCKS)
+
+    out = {}
+    for name, (cfg_cls, init, superstep, place) in algos.items():
+        cfg = cfg_cls(k=K, chunk_schedule=schedule)
+        st = init(dg, cfg, jax.random.PRNGKey(SEED))
+        if schedule == "sharded":
+            st = place(st, dg)
+        for _ in range(STEPS):
+            st = superstep(dg, cfg, st)
+        out[f"{name}_labels"] = np.asarray(st.labels)
+        out[f"{name}_loads"] = np.asarray(st.loads)
+        out[f"{name}_score"] = np.asarray(st.score)
+    return out
+
+
+def main(argv=None) -> int:
+    import numpy as np
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--schedule", choices=["sequential", "sharded"],
+                    required=True)
+    ap.add_argument("--write", default=None, help="write fixtures to this npz")
+    ap.add_argument("--check", default=None, help="compare against this npz")
+    args = ap.parse_args(argv)
+    if (args.write is None) == (args.check is None):
+        raise SystemExit("exactly one of --write / --check is required")
+
+    got = compute(args.schedule)
+    if args.write:
+        np.savez(args.write, **got)
+        print(f"wrote {args.write}: {sorted(got)}")
+        return 0
+
+    want = np.load(args.check)
+    failures = []
+    for key in sorted(got):
+        if key not in want.files:
+            failures.append(f"{key}: missing from fixture")
+            continue
+        g, w = got[key], want[key]
+        if key.endswith("_score"):
+            # score is a float reduction; everything integer-exact
+            # (labels, loads) must match bit-for-bit, the score to ~ulp
+            if abs(float(g) - float(w)) > 1e-6:
+                failures.append(f"{key}: got {float(g)!r}, want {float(w)!r}")
+        elif not np.array_equal(g, w):
+            n_bad = int((np.asarray(g) != np.asarray(w)).sum())
+            failures.append(f"{key}: {n_bad}/{np.asarray(w).size} entries differ")
+    if failures:
+        print(f"GOLDEN MISMATCH ({args.schedule}):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"golden fixtures match ({args.schedule}: {sorted(got)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

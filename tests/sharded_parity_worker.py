@@ -16,7 +16,6 @@ with:
 """
 import json
 import sys
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -27,10 +26,11 @@ from repro.core.device_graph import (
     prepare_device_graph,
     prepare_sharded_device_graph,
 )
+from repro.core.engine import ChunkContext
 from repro.core.revolver import (
+    REVOLVER,
     RevolverConfig,
     RevolverState,
-    _chunk_step,
     place_revolver_state,
     revolver_init,
     revolver_superstep,
@@ -41,10 +41,12 @@ from repro.launch.mesh import make_blocks_mesh
 
 
 def jacobi_reference_superstep(dg, cfg, state, n_shards):
-    """Single-device emulation of `_sharded_shard_body`'s schedule: every
-    shard scans its blocks against the start-of-superstep labels/lam/loads,
-    then label slices are concatenated, load deltas summed, and shard 0's
-    key chain carried forward."""
+    """Single-device emulation of the engine's sharded chunk schedule: every
+    shard drives the revolver chunk rule over its blocks against the
+    start-of-superstep labels/lam/loads, then label slices are concatenated,
+    the per-shard load deltas (loads_end - loads_start) summed, and shard
+    0's key chain carried forward — exactly what `engine._chunk_superstep`
+    does under shard_map, written out by hand."""
     nb, bv = dg.n_blocks, dg.block_v
     bps = nb // n_shards
     local_n = bps * bv
@@ -52,7 +54,6 @@ def jacobi_reference_superstep(dg, cfg, state, n_shards):
     deg_b = dg.deg_out.reshape(nb, bv)
     inv_b = dg.inv_wsum.reshape(nb, bv)
     msk_b = dg.vmask.reshape(nb, bv)
-    step_fn = partial(_chunk_step, cfg, bv)
 
     labels_out, lam_out, probs_out = [], [], []
     delta_sum = jnp.zeros_like(state.loads)
@@ -60,25 +61,31 @@ def jacobi_reference_superstep(dg, cfg, state, n_shards):
     key_new = None
     for s in range(n_shards):
         key_s = state.key if s == 0 else jax.random.fold_in(state.key, s)
-        sl = slice(s * bps, (s + 1) * bps)
-        xs = (
-            jnp.arange(s * bps, (s + 1) * bps, dtype=jnp.int32),
-            dg.blk_dst[sl], dg.blk_row[sl], dg.blk_w[sl],
-            state.probs[sl], deg_b[sl], inv_b[sl], msk_b[sl],
-        )
-        carry = (state.labels, state.lam, state.loads,
-                 jnp.zeros_like(state.loads), cap, key_s,
-                 jnp.zeros((), jnp.float32))
-        (lab_g, lam_g, _, delta, _, key_f, ssum), probs_s = \
-            jax.lax.scan(step_fn, carry, xs)
+        vert = {"labels": state.labels, "lam": state.lam}
+        loads = state.loads
+        probs_s = []
+        for b in range(s * bps, (s + 1) * bps):
+            ctx = ChunkContext(
+                blk_idx=jnp.int32(b), v0=jnp.int32(b * bv),
+                e_dst=dg.blk_dst[b], e_row=dg.blk_row[b], e_w=dg.blk_w[b],
+                deg=deg_b[b], inv_wsum=inv_b[b], vmask=msk_b[b],
+                step=state.step, n_shards=n_shards, loads0=state.loads,
+                repl={})
+            upd = REVOLVER.chunk_rule(cfg, ctx, vert, {"probs": state.probs[b]},
+                                      loads, cap, key_s)
+            vert = {f: jax.lax.dynamic_update_slice(vert[f], upd.vert[f],
+                                                    (ctx.v0,))
+                    for f in vert}
+            loads, key_s = upd.loads, upd.key
+            score_sum = score_sum + upd.score
+            probs_s.append(upd.block["probs"])
         v = slice(s * local_n, (s + 1) * local_n)
-        labels_out.append(lab_g[v])
-        lam_out.append(lam_g[v])
-        probs_out.append(probs_s)
-        delta_sum = delta_sum + delta
-        score_sum = score_sum + ssum
+        labels_out.append(vert["labels"][v])
+        lam_out.append(vert["lam"][v])
+        probs_out.append(jnp.stack(probs_s))
+        delta_sum = delta_sum + (loads - state.loads)
         if s == 0:
-            key_new = key_f
+            key_new = key_s
     return RevolverState(
         labels=jnp.concatenate(labels_out),
         lam=jnp.concatenate(lam_out),

@@ -1,0 +1,62 @@
+"""Bit-identity regression against pre-refactor golden fixtures.
+
+`tests/golden/*.npz` pin the fixed-seed revolver and spinner trajectories
+(labels / loads / score after 6 supersteps) as computed by the pre-engine
+implementations (PR 3 HEAD), for both execution schedules. The
+schedule-agnostic engine must reproduce them bit-for-bit — this is the
+refactor's non-negotiable gate, and it keeps holding for every future
+change to `core/engine.py` or the rule modules.
+
+The sequential check runs in-process (any device count); the sharded check
+runs `golden_worker.py` in a subprocess pinned to 4 forced host devices
+(2 blocks per shard) so the Jacobi machinery — all-gather, psum load-delta
+merge, per-shard PRNG chains — is genuinely multi-shard.
+
+Regenerating fixtures is a deliberate act (see golden_worker.py's docstring
+for the commands); a mismatch here means the superstep semantics changed.
+"""
+import importlib.util
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_WORKER = os.path.join(_HERE, "golden_worker.py")
+_FIXTURES = os.path.join(_HERE, "golden")
+
+
+def _load_worker():
+    spec = importlib.util.spec_from_file_location("golden_worker", _WORKER)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_sequential_bit_identity():
+    worker = _load_worker()
+    got = worker.compute("sequential")
+    want = np.load(os.path.join(_FIXTURES, "sequential.npz"))
+    for key in ("revolver_labels", "revolver_loads",
+                "spinner_labels", "spinner_loads"):
+        np.testing.assert_array_equal(got[key], want[key], err_msg=key)
+    for key in ("revolver_score", "spinner_score"):
+        assert abs(float(got[key]) - float(want[key])) <= 1e-6, key
+
+
+def test_sharded_bit_identity():
+    env = dict(os.environ)
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if not f.startswith("--xla_force_host_platform_device_count")]
+    flags.append(
+        f"--xla_force_host_platform_device_count={_load_worker().SHARDED_DEVICES}")
+    env["XLA_FLAGS"] = " ".join(flags)
+    src = os.path.abspath(os.path.join(_HERE, os.pardir, "src"))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, _WORKER, "--schedule", "sharded",
+         "--check", os.path.join(_FIXTURES, "sharded4.npz")],
+        env=env, capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
