@@ -61,6 +61,10 @@ def main(argv=None):
     scaling = scaling_bench.run(quick=args.quick)
     if not scaling["meta"]["quality_ok"]:
         raise SystemExit("sharded-schedule quality regression (see above)")
+    if not scaling["meta"]["halo_parity_ok"]:
+        raise SystemExit("halo-schedule parity regression (see above)")
+    if not scaling["meta"]["traffic_ok"]:
+        raise SystemExit("halo traffic-reduction regression (see above)")
 
     print("=" * 72)
     print("== Kernel microbench (CPU; interpret-mode parity) ==")

@@ -5,6 +5,20 @@ Measures supersteps/s and edges/s for ``chunk_schedule="sharded"`` at 1, 2,
 of the Jacobi merge against the sequential schedule, and writes
 ``BENCH_scaling.json``.
 
+The **halo leg** (max-device worker) prices the ``chunk_schedule="halo"``
+boundary exchange: for each traffic dataset it records, per assignment
+(contiguous / locality), the modeled gathered-bytes/superstep of the halo
+exchange vs the full all-gather — what each device receives per superstep
+across the synchronized vertex fields, the quantity the schedule actually
+changes — alongside measured halo steps/s, and **gates bit-identity**:
+halo labels must equal the full-gather schedule's at fixed seed (the
+exchange is an exact optimization of the same sync; the gate runs with the
+coverage fallback disabled so the real halo path executes even when the
+halo is wide). CI fails if parity breaks or if no traffic dataset reaches
+``--traffic-gate`` (default 2.0x) reduction — the road-network family
+(USA) is the designed-in witness: its banded block structure keeps the
+boundary at ~2 blocks per shard.
+
 ``--algo`` sweeps any engine-driven algorithms in the registry (default:
 revolver; CI passes revolver, spinner, and restream) — the engine owns both
 schedules for every registered rule, so the same harness scales and gates
@@ -63,6 +77,7 @@ QUALITY_MIN_BLOCKS_PER_SHARD = 8
 # --------------------------------------------------------------------------
 def _worker(args) -> dict:
     import jax
+    import numpy as np
 
     from repro.core import engine
     from repro.core.device_graph import prepare_sharded_device_graph
@@ -75,7 +90,7 @@ def _worker(args) -> dict:
         f"worker has {jax.device_count()} devices, need {args.devices} "
         "(launch via the parent so XLA_FLAGS is set)")
     mesh = make_blocks_mesh(args.devices)
-    out = {"devices": args.devices, "rows": [], "quality": []}
+    out = {"devices": args.devices, "rows": [], "quality": [], "traffic": []}
 
     for name in args.datasets:
         g = load_dataset(name, scale=args.scale, seed=args.seed)
@@ -132,6 +147,65 @@ def _worker(args) -> dict:
                     "sequential_steps": seq.steps,
                     "sharded_steps": sh.steps,
                 })
+
+    if args.halo:
+        # halo leg: traffic model + measured steps/s + bit-identity vs the
+        # full-gather schedule, per (dataset, assignment). The coverage
+        # fallback is disabled (threshold 2.0) so the real boundary
+        # exchange executes — wide-halo datasets then honestly record
+        # reduction ~1.0 instead of silently running the full gather.
+        from repro.core.halo import DEFAULT_HALO_THRESHOLD
+
+        algo = get_algorithm("revolver")
+        n_fields = len(algo.vertex_fields)          # labels + lam
+        for name in args.traffic_datasets:
+            g = load_dataset(name, scale=args.scale, seed=args.seed)
+            nb = max(args.traffic_blocks, args.devices)
+            for assignment in ("contiguous", "locality"):
+                sdg = prepare_sharded_device_graph(
+                    g, mesh, n_blocks=nb, assignment=assignment,
+                    halo=True, halo_threshold=2.0)
+                spec = sdg.halo
+                common = dict(seed=args.seed, max_steps=args.steps + 2,
+                              patience=10_000, track_history=False, dg=sdg,
+                              mesh=mesh)
+                sh = run_partitioner("revolver", g, args.k,
+                                     chunk_schedule="sharded", **common)
+                ha = run_partitioner("revolver", g, args.k,
+                                     chunk_schedule="halo", **common)
+
+                cfg = algo.config_cls(k=args.k, chunk_schedule="halo")
+                st = engine.place_state(
+                    algo, algo.init(sdg, cfg, jax.random.PRNGKey(args.seed)),
+                    sdg)
+                st = engine.superstep(algo, sdg, cfg, st)
+                jax.block_until_ready(st.labels)
+                t0 = time.perf_counter()
+                for _ in range(args.steps):
+                    st = engine.superstep(algo, sdg, cfg, st)
+                jax.block_until_ready(st.labels)
+                sps = args.steps / (time.perf_counter() - t0)
+
+                halo_bytes = spec.gathered_elems_per_device() * 4 * n_fields
+                full_bytes = spec.full_gather_elems_per_device() * 4 * n_fields
+                out["traffic"].append({
+                    "dataset": name, "n": g.n, "m": g.m,
+                    "n_blocks": sdg.n_blocks,
+                    "blocks_per_shard": spec.blocks_per_shard,
+                    "assignment": assignment,
+                    "permuted": sdg.block_perm is not None,
+                    "b_max": spec.b_max,
+                    "halo_coverage": spec.coverage,
+                    "fallback_at_default_threshold":
+                        spec.coverage >= DEFAULT_HALO_THRESHOLD,
+                    "synced_vertex_fields": n_fields,
+                    "halo_gathered_bytes_per_superstep": halo_bytes,
+                    "full_gathered_bytes_per_superstep": full_bytes,
+                    "traffic_reduction": full_bytes / max(halo_bytes, 1),
+                    "halo_supersteps_per_s": sps,
+                    "labels_bit_identical": bool(
+                        np.array_equal(sh.labels, ha.labels)),
+                })
     return out
 
 
@@ -156,10 +230,13 @@ def _spawn_worker(args, devices: int, quality: bool) -> dict:
         "--devices", str(devices),
         "--datasets", *args.datasets,
         "--algo-list", *args.algos,
+        "--traffic-datasets", *args.traffic_datasets,
+        "--traffic-blocks", str(args.traffic_blocks),
         "--scale", str(args.scale), "--k", str(args.k),
         "--n-blocks", str(args.n_blocks), "--steps", str(args.steps),
         "--quality-steps", str(args.quality_steps), "--seed", str(args.seed),
-    ] + (["--quality"] if quality else [])
+    ] + (["--quality"] if quality else []) \
+      + (["--halo"] if quality else [])   # halo leg rides the max-dev worker
     proc = subprocess.run(cmd, env=env, capture_output=True, text=True)
     if proc.returncode != 0:
         sys.stderr.write(proc.stdout + proc.stderr)
@@ -175,8 +252,9 @@ def run(*, quick: bool = False, out: str = "BENCH_scaling.json",
         datasets=None, algos=None, scale: float | None = None, k: int = 8,
         n_blocks: int = 8, steps: int | None = None,
         quality_steps: int | None = None, quality_gate: float = 0.97,
-        balance_gate: float = 1.30, device_counts=DEVICE_COUNTS,
-        seed: int = 0) -> dict:
+        balance_gate: float = 1.30, traffic_datasets=None,
+        traffic_blocks: int = 64, traffic_gate: float = 2.0,
+        device_counts=DEVICE_COUNTS, seed: int = 0) -> dict:
     from repro.utils.provenance import bench_provenance
 
     if datasets is None:
@@ -191,10 +269,15 @@ def run(*, quick: bool = False, out: str = "BENCH_scaling.json",
         # a step *ceiling*: quality legs halt on score stall (patience 5),
         # so fast-converging runs stop long before it
         quality_steps = 150 if quick else 290
+    if traffic_datasets is None:
+        # USA is the designed-in >= 2x witness (banded road blocks); WIKI
+        # documents the wide-halo power-law case honestly
+        traffic_datasets = ("USA",) if quick else ("USA", "WIKI")
     args = argparse.Namespace(
         datasets=list(datasets), algos=list(algos), scale=scale, k=k,
         n_blocks=n_blocks, steps=steps, quality_steps=quality_steps,
-        seed=seed)
+        traffic_datasets=list(traffic_datasets),
+        traffic_blocks=traffic_blocks, seed=seed)
 
     results = {
         "meta": {
@@ -207,9 +290,13 @@ def run(*, quick: bool = False, out: str = "BENCH_scaling.json",
             "quality_gate": quality_gate,
             "balance_gate": balance_gate,
             "quality_min_blocks_per_shard": QUALITY_MIN_BLOCKS_PER_SHARD,
+            "traffic_datasets": list(traffic_datasets),
+            "traffic_blocks": traffic_blocks,
+            "traffic_gate": traffic_gate,
         },
         "scaling": [],
         "quality": [],
+        "traffic": [],
     }
 
     base = {}   # (dataset, algo) -> 1-device sharded steps/s
@@ -242,18 +329,49 @@ def run(*, quick: bool = False, out: str = "BENCH_scaling.json",
                   f"sharded le={q['sharded_local_edges']:.4f} "
                   f"sharded ml={q['sharded_max_norm_load']:.4f}) "
                   f"{'PASS' if q['pass'] else 'FAIL'}")
+        for t in worker.get("traffic", []):
+            t["devices"] = devices
+            results["traffic"].append(t)
+            print(f"halo {t['dataset']}/{t['assignment']}@{devices}dev: "
+                  f"b_max={t['b_max']}/{t['blocks_per_shard']} "
+                  f"bytes/superstep {t['halo_gathered_bytes_per_superstep']}"
+                  f" vs {t['full_gathered_bytes_per_superstep']} full "
+                  f"({t['traffic_reduction']:.2f}x), "
+                  f"{t['halo_supersteps_per_s']:.2f} steps/s, "
+                  f"bit-identical={t['labels_bit_identical']}")
 
     # an empty quality list must fail the gate, not vacuously pass it
     ok = bool(results["quality"]) and all(
         q["pass"] for q in results["quality"])
     results["meta"]["quality_ok"] = ok
+    # halo gates: every leg bit-identical to the full-gather schedule, and
+    # at least one locality-assigned dataset clears the traffic-reduction
+    # bar (the cloud argument: communication proportional to partition
+    # quality must actually materialize somewhere in Table I)
+    traffic = results["traffic"]
+    halo_parity_ok = bool(traffic) and all(
+        t["labels_bit_identical"] for t in traffic)
+    traffic_ok = any(
+        t["assignment"] == "locality" and t["traffic_reduction"] >= traffic_gate
+        for t in traffic)
+    results["meta"]["halo_parity_ok"] = halo_parity_ok
+    results["meta"]["traffic_ok"] = traffic_ok
+    ok = ok and halo_parity_ok and traffic_ok
+    results["meta"]["ok"] = ok
     if out:
         with open(out, "w") as f:
             json.dump(results, f, indent=2)
         print(f"wrote {out}")
-    if not ok:
+    if not results["meta"]["quality_ok"]:
         print(f"SHARDED QUALITY REGRESSION (quality gate {quality_gate}, "
               f"balance gate {balance_gate})", file=sys.stderr)
+    if not halo_parity_ok:
+        print("HALO PARITY REGRESSION (halo schedule diverged from the "
+              "full-gather schedule at fixed seed)", file=sys.stderr)
+    if not traffic_ok:
+        print(f"HALO TRAFFIC REGRESSION (no locality-assigned dataset "
+              f"reached {traffic_gate}x gathered-bytes reduction)",
+              file=sys.stderr)
     return results
 
 
@@ -263,6 +381,8 @@ def main(argv=None) -> int:
                     help="internal: run one device-count measurement")
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--quality", action="store_true")
+    ap.add_argument("--halo", action="store_true",
+                    help="internal: run the halo traffic/parity leg")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default="BENCH_scaling.json")
     ap.add_argument("--datasets", nargs="*", default=None)
@@ -278,6 +398,9 @@ def main(argv=None) -> int:
     ap.add_argument("--quality-steps", type=int, default=None)
     ap.add_argument("--quality-gate", type=float, default=0.97)
     ap.add_argument("--balance-gate", type=float, default=1.30)
+    ap.add_argument("--traffic-datasets", nargs="*", default=None)
+    ap.add_argument("--traffic-blocks", type=int, default=64)
+    ap.add_argument("--traffic-gate", type=float, default=2.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -285,6 +408,7 @@ def main(argv=None) -> int:
         if args.datasets is None or args.scale is None or args.steps is None:
             raise SystemExit("--worker requires explicit dataset/scale/steps")
         args.algos = args.algo_list or list(DEFAULT_ALGOS)
+        args.traffic_datasets = args.traffic_datasets or []
         result = _worker(args)
         print(_MARK + json.dumps(result))
         return 0
@@ -294,8 +418,11 @@ def main(argv=None) -> int:
                   n_blocks=args.n_blocks, steps=args.steps,
                   quality_steps=args.quality_steps,
                   quality_gate=args.quality_gate,
-                  balance_gate=args.balance_gate, seed=args.seed)
-    return 0 if results["meta"]["quality_ok"] else 1
+                  balance_gate=args.balance_gate,
+                  traffic_datasets=args.traffic_datasets,
+                  traffic_blocks=args.traffic_blocks,
+                  traffic_gate=args.traffic_gate, seed=args.seed)
+    return 0 if results["meta"]["ok"] else 1
 
 
 if __name__ == "__main__":

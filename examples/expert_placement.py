@@ -6,6 +6,11 @@ co-activation graph across EP devices; the resulting placement is
 compared against the naive contiguous one on cross-device co-activation
 (the proxy for EP combine traffic).
 
+The partitioning goes through the algorithm registry
+(`repro.core.placement.place_experts(algo=...)` -> `run_partitioner`), so
+any registered rule — revolver, spinner, restream, or an out-of-tree one
+(docs/authoring-algorithms.md) — can drive the placement.
+
   PYTHONPATH=src python examples/expert_placement.py
 """
 import jax

@@ -1,6 +1,12 @@
 """Serve a small model with batched requests through the Engine
 (prefill + streaming decode), across three architecture families.
 
+NOTE: this is **non-partitioner scaffolding** — part of the LM-stack
+substrate (see the top-level README's "What else is in here" section), not
+a graph-partitioning example. It predates the partitioner registry and
+touches none of it; the partitioner-driven LM integration is
+examples/expert_placement.py.
+
   PYTHONPATH=src python examples/serve_lm.py
 """
 import time

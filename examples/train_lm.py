@@ -2,6 +2,12 @@
 hundred steps on the synthetic bigram corpus, with checkpointing and a
 simulated mid-run failure + auto-resume.
 
+NOTE: this is **non-partitioner scaffolding** — part of the LM-stack
+substrate (see the top-level README's "What else is in here" section), not
+a graph-partitioning example. It predates the partitioner registry and
+touches none of it; the partitioner-driven LM integration is
+examples/expert_placement.py.
+
   PYTHONPATH=src python examples/train_lm.py --steps 300
   PYTHONPATH=src python examples/train_lm.py --steps 50 --smoke   # CI-sized
 """

@@ -1,7 +1,8 @@
 """Revolver core: one superstep engine, pluggable partitioning algorithms.
 
 Layering (see core/README.md): `engine` owns the execution schedules
-(sequential async scan, sharded shard_map superstep), `registry` maps
+(sequential async scan, sharded shard_map superstep with full-gather or
+halo-exchange label sync), `registry` maps
 algorithm names to rule modules (`revolver`, `spinner`, `restream`,
 `static_partitioners`), and `runner` drives the shared convergence loop.
 """
@@ -11,10 +12,14 @@ from repro.core.metrics import local_edges, max_normalized_load, partition_loads
 from repro.core.device_graph import (
     DeviceGraph,
     ShardedDeviceGraph,
+    attach_halo,
+    permute_blocks,
     prepare_device_graph,
     prepare_sharded_device_graph,
     shard_device_graph,
+    vertices_to_original,
 )
+from repro.core.halo import HaloSpec, build_halo_spec
 from repro.core.engine import Algorithm, place_state, superstep
 from repro.core.registry import (
     StaticAlgorithm,
@@ -58,9 +63,14 @@ __all__ = [
     "partition_loads",
     "DeviceGraph",
     "ShardedDeviceGraph",
+    "attach_halo",
+    "permute_blocks",
     "prepare_device_graph",
     "prepare_sharded_device_graph",
     "shard_device_graph",
+    "vertices_to_original",
+    "HaloSpec",
+    "build_halo_spec",
     "Algorithm",
     "StaticAlgorithm",
     "place_state",

@@ -16,14 +16,15 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.graphs.blocking import block_edges
+from repro.core.halo import DEFAULT_HALO_THRESHOLD, HaloSpec, build_halo_spec
+from repro.graphs.blocking import block_adjacency, block_edges, locality_block_order
 from repro.graphs.csr import Graph
 
 
@@ -119,12 +120,30 @@ class ShardedDeviceGraph:
     `n_blocks` is always a multiple of `n_shards` (see `align_blocks`):
     alignment pads with empty blocks (zero slabs, masked vertices) rather
     than resizing `block_v`, keeping per-shard shapes static and identical.
+
+    **Locality-aware assignment** (`assignment="locality"`, or an explicit
+    permutation): the stored block order is permuted so each shard's
+    contiguous slice is a cluster of densely connected blocks
+    (`locality_block_order`), and every vertex id in the wrapped arrays is
+    rewritten into the permuted space (`permute_blocks`). `block_perm` /
+    `o2s` / `s2o` record the mapping; labels and probabilities cross the
+    public API boundary in *original* vertex order (`vertices_to_original`
+    and the warm-start helpers convert).
+
+    **Halo exchange** (`halo=True`): `halo` carries the precomputed
+    boundary-exchange plan for `chunk_schedule="halo"`
+    (see `repro.core.halo`); `None` means only the full-gather schedules
+    are runnable.
     """
 
     dg: DeviceGraph
     mesh: jax.sharding.Mesh
     n_shards: int
     blocks_per_shard: int
+    block_perm: Optional[Tuple[int, ...]] = None  # storage slot -> orig block
+    o2s: Optional[np.ndarray] = None   # [n_pad] original vertex -> storage id
+    s2o: Optional[np.ndarray] = None   # [n_pad] storage id -> original vertex
+    halo: Optional[HaloSpec] = None
 
     def __getattr__(self, name):
         return getattr(self.dg, name)
@@ -162,18 +181,142 @@ def align_blocks(dg: DeviceGraph, multiple: int) -> DeviceGraph:
     )
 
 
-def shard_device_graph(dg: DeviceGraph, mesh: jax.sharding.Mesh) -> ShardedDeviceGraph:
+def block_vertex_perms(perm: np.ndarray, block_v: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Vertex-id maps induced by a block permutation.
+
+    Returns `(o2s, s2o)` int32 `[n_blocks * block_v]` arrays: `o2s[v]` is
+    the storage position of original vertex `v` (its block moved, its row
+    within the block did not), `s2o` the inverse.
+    """
+    perm = np.asarray(perm, dtype=np.int64)
+    nb = perm.size
+    pos = np.empty(nb, dtype=np.int64)
+    pos[perm] = np.arange(nb)
+    v = np.arange(nb * block_v, dtype=np.int64)
+    o2s = pos[v // block_v] * block_v + v % block_v
+    s2o = np.empty_like(o2s)
+    s2o[o2s] = v
+    return o2s.astype(np.int32), s2o.astype(np.int32)
+
+
+def permute_blocks(dg: DeviceGraph, perm: np.ndarray) -> DeviceGraph:
+    """Reorder the blocked layout so storage slot i holds block `perm[i]`.
+
+    Every vertex id in the returned graph — slab neighbor ids and the flat
+    metric arrays included — is rewritten into the permuted space, so the
+    result is a self-consistent `DeviceGraph`: the engine, the kernels, and
+    the metrics consume it exactly like an unpermuted one. Only the *meaning*
+    of index v changes (storage slot, not original vertex id); callers that
+    cross the boundary convert with `block_vertex_perms` /
+    `vertices_to_original`.
+
+    The streaming layer maintains the same permuted layout incrementally
+    (`repro.streaming.delta_graph.IncrementalDeviceGraph._to_device`); a
+    field added to one rewrite must be added to the other —
+    `tests/test_halo.py` pins the two layouts equal.
+    """
+    perm = np.asarray(perm, dtype=np.int64)
+    if perm.shape != (dg.n_blocks,) or not np.array_equal(
+            np.sort(perm), np.arange(dg.n_blocks)):
+        raise ValueError(
+            f"perm must be a permutation of range({dg.n_blocks})")
+    if np.array_equal(perm, np.arange(dg.n_blocks)):
+        return dg
+    o2s, _ = block_vertex_perms(perm, dg.block_v)
+
+    def per_vertex(a):
+        return jnp.asarray(
+            np.asarray(a).reshape(dg.n_blocks, dg.block_v)[perm].reshape(-1))
+
+    def ids(a):
+        return jnp.asarray(o2s[np.asarray(a)])
+
+    return dg._replace(
+        edge_src=ids(dg.edge_src),
+        edge_dst=ids(dg.edge_dst),
+        dir_src=ids(dg.dir_src),
+        dir_dst=ids(dg.dir_dst),
+        blk_dst=jnp.asarray(o2s[np.asarray(dg.blk_dst)[perm]]),
+        blk_row=jnp.asarray(np.asarray(dg.blk_row)[perm]),
+        blk_w=jnp.asarray(np.asarray(dg.blk_w)[perm]),
+        deg_out=per_vertex(dg.deg_out),
+        inv_wsum=per_vertex(dg.inv_wsum),
+        vmask=per_vertex(dg.vmask),
+    )
+
+
+def vertices_to_original(sdg, x: jax.Array) -> jax.Array:
+    """Reindex a storage-order per-vertex array into original vertex order
+    (identity for unpermuted layouts and plain `DeviceGraph`s); the first
+    `n` entries then correspond to real vertices 0..n-1 again."""
+    o2s = getattr(sdg, "o2s", None)
+    if o2s is None:
+        return x
+    return jnp.take(x, jnp.asarray(o2s), axis=0)
+
+
+def resolve_assignment(
+    dg: DeviceGraph,
+    n_shards: int,
+    assignment: Union[str, np.ndarray, None],
+) -> Optional[np.ndarray]:
+    """Turn an `assignment=` argument into a block permutation (or None).
+
+    "contiguous" / None keep the natural block striping; "locality" runs
+    the greedy co-location pass over the block-level edge-cut matrix; an
+    explicit array is validated and used as-is. Identity permutations
+    collapse to None so the unpermuted fast paths stay in force.
+    """
+    if assignment is None or (isinstance(assignment, str)
+                              and assignment == "contiguous"):
+        return None
+    if isinstance(assignment, str):
+        if assignment != "locality":
+            raise ValueError(
+                f"unknown assignment {assignment!r}; expected 'contiguous', "
+                "'locality', or an explicit block permutation")
+        adj = block_adjacency(np.asarray(dg.blk_dst), np.asarray(dg.blk_w),
+                              dg.block_v)
+        perm = locality_block_order(adj, n_shards)
+    else:
+        perm = np.asarray(assignment, dtype=np.int64)
+    if np.array_equal(perm, np.arange(dg.n_blocks)):
+        return None
+    return perm
+
+
+def shard_device_graph(
+    dg: DeviceGraph,
+    mesh: jax.sharding.Mesh,
+    *,
+    assignment: Union[str, np.ndarray, None] = "contiguous",
+    halo: bool = False,
+    halo_threshold: float = DEFAULT_HALO_THRESHOLD,
+) -> ShardedDeviceGraph:
     """Align `dg` to the mesh and place every array with a `NamedSharding`.
 
     Blocked slabs and per-vertex arrays land sliced on their owning device
     (`P("blocks", ...)`), flat metric arrays replicated (`P()`), so the
     sharded superstep starts from committed, correctly-placed buffers and
     donation can reuse them in place.
+
+    `assignment` selects the block->shard mapping: "contiguous" (default)
+    keeps the natural striping, "locality" greedily co-locates densely
+    connected blocks (`locality_block_order`), an explicit `[n_blocks]`
+    permutation is used verbatim. `halo=True` additionally precomputes the
+    halo-exchange plan consumed by `chunk_schedule="halo"`; see
+    `repro.core.halo` for the traffic model and the `halo_threshold`
+    full-gather fallback.
     """
     if "blocks" not in mesh.axis_names:
         raise ValueError(f"mesh {mesh.axis_names} has no 'blocks' axis")
     n_shards = int(mesh.shape["blocks"])
     dg = align_blocks(dg, n_shards)
+    perm = resolve_assignment(dg, n_shards, assignment)
+    o2s = s2o = None
+    if perm is not None:
+        dg = permute_blocks(dg, perm)
+        o2s, s2o = block_vertex_perms(perm, dg.block_v)
     placed = {}
     for name in dg._fields:
         value = getattr(dg, name)
@@ -187,12 +330,34 @@ def shard_device_graph(dg: DeviceGraph, mesh: jax.sharding.Mesh) -> ShardedDevic
         else:
             spec = P()
         placed[name] = jax.device_put(value, NamedSharding(mesh, spec))
+    spec = None
+    if halo:
+        spec = build_halo_spec(
+            np.asarray(dg.blk_dst), np.asarray(dg.blk_w), n_shards,
+            dg.block_v, threshold=halo_threshold, mesh=mesh)
     return ShardedDeviceGraph(
         dg=DeviceGraph(**placed),
         mesh=mesh,
         n_shards=n_shards,
         blocks_per_shard=dg.n_blocks // n_shards,
+        block_perm=tuple(int(b) for b in perm) if perm is not None else None,
+        o2s=o2s,
+        s2o=s2o,
+        halo=spec,
     )
+
+
+def attach_halo(
+    sdg: ShardedDeviceGraph,
+    halo_threshold: float = DEFAULT_HALO_THRESHOLD,
+) -> ShardedDeviceGraph:
+    """Build (or rebuild) the halo-exchange plan for an already-placed
+    sharded layout — the path `run_partitioner(chunk_schedule="halo")`
+    takes when handed a pre-built `ShardedDeviceGraph` without one."""
+    spec = build_halo_spec(
+        np.asarray(sdg.blk_dst), np.asarray(sdg.blk_w), sdg.n_shards,
+        sdg.block_v, threshold=halo_threshold, mesh=sdg.mesh)
+    return dataclasses.replace(sdg, halo=spec)
 
 
 def prepare_sharded_device_graph(
@@ -200,16 +365,22 @@ def prepare_sharded_device_graph(
     mesh: jax.sharding.Mesh,
     n_blocks: int = 8,
     block_multiple: int = 8,
+    *,
+    assignment: Union[str, np.ndarray, None] = "contiguous",
+    halo: bool = False,
+    halo_threshold: float = DEFAULT_HALO_THRESHOLD,
 ) -> ShardedDeviceGraph:
     """`prepare_device_graph` + device-aligned blocking + NamedSharding placement.
 
     Requests at least one block per shard; whatever block count the blocking
-    pass settles on is then padded up to a multiple of the mesh size.
+    pass settles on is then padded up to a multiple of the mesh size. See
+    `shard_device_graph` for `assignment` / `halo`.
     """
     n_shards = int(mesh.shape["blocks"])
     dg = prepare_device_graph(
         g, n_blocks=max(n_blocks, n_shards), block_multiple=block_multiple)
-    return shard_device_graph(dg, mesh)
+    return shard_device_graph(dg, mesh, assignment=assignment, halo=halo,
+                              halo_threshold=halo_threshold)
 
 
 CAPACITY_MODES = ("spinner", "paper")

@@ -14,8 +14,11 @@ contributes only its rule:
   schedule  (this module)
       the sequential asynchronous ``lax.scan`` over vertex blocks, the
       ``shard_map`` Jacobi superstep on a 1-D ``("blocks",)`` mesh (label
-      all-gather, psum load-delta merge, per-shard PRNG chains), buffer
-      donation, and sharded state placement;
+      all-gather, psum load-delta merge, per-shard PRNG chains), the
+      ``"halo"`` variant of the Jacobi superstep that syncs only the
+      precomputed boundary blocks (``repro.core.halo``; an exact,
+      traffic-proportional-to-edge-cut optimization of the full gather),
+      buffer donation, and sharded state placement;
   kernel    (repro/kernels, routed via ``ops.superstep_kernels``)
       the fused Pallas edge phase and LA update behind the ``hist_impl`` /
       ``la_impl`` config knobs; the jnp scatter-add reference lives in
@@ -151,6 +154,14 @@ class ChunkContext(NamedTuple):
     the block are taken with ``v0``. ``step`` is the 0-based superstep index
     (rules may schedule on it, e.g. restream's priority ramp).
 
+    ``v0`` addresses the *drifting per-vertex view* the rule slices and the
+    engine splices (the full ``[n_pad]`` vector under the sequential and
+    full-gather schedules; the shard's ``local + halo`` buffer under
+    ``chunk_schedule="halo"``, where the block's edge slab ids are likewise
+    pre-rewritten into buffer space). ``gv0`` is the block's *global* vertex
+    offset, for slicing replicated ``[n_pad]`` arrays in ``repl`` (restream's
+    degree ranks); the two coincide except under the halo schedule.
+
     ``n_shards`` tells the rule how many shards are drifting this superstep
     concurrently (1 under the sequential schedule). A rule that rations
     shared capacity against its drifting ``loads`` view must divide the
@@ -162,7 +173,8 @@ class ChunkContext(NamedTuple):
     """
 
     blk_idx: jnp.ndarray    # scalar int32 global block index
-    v0: jnp.ndarray         # scalar int32 global vertex offset of the block
+    v0: jnp.ndarray         # scalar int32 block offset into the drifting view
+    gv0: jnp.ndarray        # scalar int32 global vertex offset of the block
     e_dst: jnp.ndarray      # [e_max] int32 neighbor ids (0 pad)
     e_row: jnp.ndarray      # [e_max] int32 local row in the block (0 pad)
     e_w: jnp.ndarray        # [e_max] f32 eq.(4) weights (0.0 pad)
@@ -203,7 +215,15 @@ class ChunkUpdate(NamedTuple):
 @dataclasses.dataclass(frozen=True)
 class ShardContext:
     """What a shard rule sees: its slice of the blocked layout plus
-    collectives that degenerate to identities on the sequential schedule."""
+    collectives that degenerate to identities on the sequential schedule.
+
+    Under ``chunk_schedule="halo"`` the slab neighbor ids in ``blk_dst`` are
+    pre-rewritten into the shard's ``local + halo`` buffer space and
+    ``gather`` returns that buffer (own slice first, then the exchanged
+    boundary slabs) instead of the full ``[n_pad]`` vector — rules that only
+    index the gather result through ``blk_dst`` (the contract) run unchanged
+    under all three schedules.
+    """
 
     axis: Optional[str]     # mesh axis name, or None (sequential)
     idx: jnp.ndarray        # scalar int32 shard index (0 when sequential)
@@ -221,10 +241,18 @@ class ShardContext:
     vmask: jnp.ndarray      # [local_n]
     step: jnp.ndarray
     repl: Dict[str, jnp.ndarray]
+    halo_rows: Optional[jnp.ndarray] = None   # [S, b_max] boundary plan
 
     def gather(self, x):
-        """All-gather a per-vertex shard slice to its global [n_pad] shape."""
-        return gather_shards(x, self.axis) if self.axis else x
+        """Make every vertex id in ``blk_dst`` resolvable: the full
+        all-gather, or the boundary-only halo exchange when the layout
+        carries a halo plan (identity on the sequential schedule)."""
+        if not self.axis:
+            return x
+        if self.halo_rows is None:
+            return gather_shards(x, self.axis)
+        return halo_exchange(x, self.halo_rows, self.idx, self.blocks,
+                             self.block_v, self.axis)
 
     def psum(self, x):
         """Sum a shard-local reduction across shards."""
@@ -263,6 +291,7 @@ def _graph_arrays(dg: DeviceGraph) -> Dict[str, jnp.ndarray]:
 _GRAPH_SPECS = {
     "blk_dst": P(AXIS, None), "blk_row": P(AXIS, None), "blk_w": P(AXIS, None),
     "deg": P(AXIS), "inv_wsum": P(AXIS), "vmask": P(AXIS),
+    "halo_rows": P(),   # replicated boundary plan (halo schedule only)
 }
 
 
@@ -276,22 +305,50 @@ def _state_spec(algo: Algorithm, name: str, value) -> P:
 
 
 # ---------------------------------------------------------------------------
-# the superstep body (shared by both schedules; axis=None == sequential)
+# the superstep body (shared by the schedules; axis=None == sequential)
 # ---------------------------------------------------------------------------
+def halo_exchange(x, halo_rows, idx, bps, block_v, axis):
+    """Boundary-only label sync: each shard contributes the `[b_max]`
+    blocks of its slice that remote slabs reference (`halo_rows[idx]`,
+    precomputed — see `repro.core.halo`), one all-gather moves them, and
+    the result is appended to the shard's own slice. Cross-device traffic
+    is O(b_max * block_v) per field instead of O(n_pad); the remote slabs
+    received are the same start-of-superstep snapshots the full gather
+    would deliver, so the halo schedule is an *exact* optimization of the
+    full-gather Jacobi sync."""
+    if halo_rows.shape[1] == 0:        # no cross-shard references at all
+        return x
+    rows = jnp.take(halo_rows, idx, axis=0)                   # [b_max]
+    contrib = jnp.take(x.reshape(bps, block_v), rows, axis=0)
+    gathered = jax.lax.all_gather(contrib, axis)              # [S, b_max, bv]
+    return jnp.concatenate([x, gathered.reshape(-1)])
+
+
 def _chunk_superstep(algo, cfg, layout, axis, graph, cap, state, step):
     """Scan the (local) blocks with the algorithm's chunk rule.
 
     Sequential: one shard spanning every block, identity collectives, the
     state key used directly — the PR-2 semantics. Sharded: Jacobi across
     shards (gather once, scan local blocks, slice back, merge the exact
-    load delta, re-replicate shard 0's chained key).
+    load delta, re-replicate shard 0's chained key). Halo: the Jacobi
+    schedule with the full label gather replaced by the boundary-only
+    exchange — the drifting view is the shard's `local + halo` buffer (own
+    slice first, so intra-shard asynchrony is untouched) and the slab ids
+    in `graph["blk_dst"]` are pre-rewritten into buffer space.
     """
     idx = jax.lax.axis_index(axis) if axis else jnp.zeros((), jnp.int32)
     bps = layout.blocks_per_shard if axis else layout.n_blocks
     n_shards = layout.n_blocks // layout.blocks_per_shard if axis else 1
     block_v = layout.block_v
-    vert = {f: gather_shards(state[f], axis) if axis else state[f]
-            for f in algo.vertex_fields}
+    halo = "halo_rows" in graph
+    if halo:
+        vert = {f: halo_exchange(state[f], graph["halo_rows"], idx, bps,
+                                 block_v, axis)
+                for f in algo.vertex_fields}
+    elif axis:
+        vert = {f: gather_shards(state[f], axis) for f in algo.vertex_fields}
+    else:
+        vert = {f: state[f] for f in algo.vertex_fields}
     key = shard_chain_key(state["key"], axis) if axis else state["key"]
     repl = {f: state[f] for f in algo.replicated_fields}
     loads0 = state["loads"]
@@ -308,8 +365,10 @@ def _chunk_superstep(algo, cfg, layout, axis, graph, cap, state, step):
     def scan_step(carry, x):
         vert, loads, key, score_sum = carry
         blk_idx, e_dst, e_row, e_w, block, deg, inv_wsum, vmask = x
+        gv0 = blk_idx * block_v
+        v0 = (blk_idx - idx * bps) * block_v if halo else gv0
         ctx = ChunkContext(
-            blk_idx=blk_idx, v0=blk_idx * block_v, e_dst=e_dst, e_row=e_row,
+            blk_idx=blk_idx, v0=v0, gv0=gv0, e_dst=e_dst, e_row=e_row,
             e_w=e_w, deg=deg, inv_wsum=inv_wsum, vmask=vmask, step=step,
             n_shards=n_shards, loads0=loads0, repl=repl)
         upd = algo.chunk_rule(cfg, ctx, vert, block, loads, cap, key)
@@ -323,9 +382,13 @@ def _chunk_superstep(algo, cfg, layout, axis, graph, cap, state, step):
 
     if axis:
         local_n = bps * block_v
-        v0 = idx * local_n
-        vert = {f: jax.lax.dynamic_slice(v, (v0,), (local_n,))
-                for f, v in vert.items()}
+        if halo:
+            # the shard's slice leads its buffer; the halo tail is read-only
+            vert = {f: v[:local_n] for f, v in vert.items()}
+        else:
+            v0 = idx * local_n
+            vert = {f: jax.lax.dynamic_slice(v, (v0,), (local_n,))
+                    for f, v in vert.items()}
         # the shard's migrations, recovered exactly (integer-valued f32)
         loads_end = psum_delta_merge(loads0, loads_end - loads0, axis)
         score_sum = jax.lax.psum(score_sum, axis)
@@ -345,7 +408,8 @@ def _shard_superstep(algo, cfg, layout, axis, graph, cap, state, step):
         blk_dst=graph["blk_dst"], blk_row=graph["blk_row"],
         blk_w=graph["blk_w"], deg=graph["deg"], inv_wsum=graph["inv_wsum"],
         vmask=graph["vmask"], step=step,
-        repl={f: state[f] for f in algo.replicated_fields})
+        repl={f: state[f] for f in algo.replicated_fields},
+        halo_rows=graph.get("halo_rows"))
     local = {f: state[f] for f in algo.vertex_fields}
     upd = algo.shard_rule(cfg, ctx, local, state["loads"], cap, state["key"])
     loads = psum_delta_merge(state["loads"], upd.loads_delta, axis) if axis \
@@ -391,7 +455,7 @@ def _sharded_superstep(algo, cfg, mesh, layout, graph, cap, donated, kept):
     body = partial(_BODIES[algo.kind], algo, cfg, layout, AXIS)
     sharded = shard_map(
         body, mesh=mesh,
-        in_specs=(_GRAPH_SPECS, P(), state_specs, P()),
+        in_specs=({k: _GRAPH_SPECS[k] for k in graph}, P(), state_specs, P()),
         out_specs=out_specs,
         check_rep=False,
     )
@@ -408,9 +472,13 @@ def superstep(algo: Algorithm, dg, cfg, state):
     "sequential" runs on one device (``dg`` is a plain DeviceGraph, or a
     ShardedDeviceGraph whose arrays are consumed directly); "sharded" runs
     under shard_map on the graph's ``("blocks",)`` mesh (``dg`` must be a
-    ShardedDeviceGraph, see ``prepare_sharded_device_graph``).
+    ShardedDeviceGraph, see ``prepare_sharded_device_graph``); "halo" is the
+    sharded schedule with the full label all-gather replaced by the
+    precomputed boundary-only exchange (``dg.halo`` must carry a plan —
+    ``shard_device_graph(..., halo=True)``; a plan whose coverage exceeded
+    its threshold runs the full gather, bit-identically).
 
-    The state fields named in ``algo.donate`` are **donated** under either
+    The state fields named in ``algo.donate`` are **donated** under every
     schedule (buffers updated in place); the passed-in state must not be
     reused after this call — every caller rebinds
     ``state = superstep(...)``. Small undonated leaves (key/step/score and
@@ -420,15 +488,29 @@ def superstep(algo: Algorithm, dg, cfg, state):
     cap = capacity_device(dg.m, cfg.k, cfg.epsilon, cfg.capacity_mode)
     sd = state._asdict()
     donated = {f: sd.pop(f) for f in algo.donate}
-    if cfg.chunk_schedule == "sharded":
+    if cfg.chunk_schedule in ("sharded", "halo"):
         if not isinstance(dg, ShardedDeviceGraph):
             raise TypeError(
-                "chunk_schedule='sharded' needs a ShardedDeviceGraph "
-                "(see prepare_sharded_device_graph); got a plain DeviceGraph")
+                f"chunk_schedule={cfg.chunk_schedule!r} needs a "
+                "ShardedDeviceGraph (see prepare_sharded_device_graph); got "
+                "a plain DeviceGraph")
         layout = _Layout(dg.n, dg.n_pad, dg.n_blocks, dg.block_v,
                          dg.blocks_per_shard)
-        return _sharded_superstep(algo, cfg, dg.mesh, layout,
-                                  _graph_arrays(dg.dg), cap, donated, sd)
+        graph = _graph_arrays(dg.dg)
+        if cfg.chunk_schedule == "halo":
+            spec = dg.halo
+            if spec is None:
+                raise ValueError(
+                    "chunk_schedule='halo' needs a halo-enabled layout: "
+                    "build it with shard_device_graph(..., halo=True) / "
+                    "attach_halo, or let run_partitioner build it")
+            if not spec.fallback:
+                graph["blk_dst"] = spec.blk_dst_halo
+                graph["halo_rows"] = spec.boundary_rows
+            # fallback: coverage too high for the exchange to win — run the
+            # full-gather Jacobi schedule (same trajectory, bit-for-bit)
+        return _sharded_superstep(algo, cfg, dg.mesh, layout, graph, cap,
+                                  donated, sd)
     if isinstance(dg, ShardedDeviceGraph):
         dg = dg.dg
     layout = _Layout(dg.n, dg.n_pad, dg.n_blocks, dg.block_v, dg.n_blocks)
@@ -456,14 +538,21 @@ def place_state(algo: Algorithm, state, sdg: ShardedDeviceGraph):
 def warm_labels(dg, k: int, key: jax.Array, labels) -> jnp.ndarray:
     """Carried labels for surviving vertices, random draws for new ones.
 
-    ``labels`` covers up to ``len(labels)`` surviving vertices (clipped to
-    [0, k)); vertices beyond it — newly arrived in a stream — draw a random
-    label exactly like a cold init would.
+    ``labels`` covers up to ``len(labels)`` surviving vertices **in original
+    vertex order** (clipped to [0, k)); vertices beyond it — newly arrived
+    in a stream — draw a random label exactly like a cold init would. On a
+    locality-permuted layout the carried slice is scattered to each
+    vertex's storage position (``dg.o2s``); the unpermuted path is the
+    original contiguous splice, bit-for-bit.
     """
     lab = jax.random.randint(key, (dg.n_pad,), 0, k, dtype=jnp.int32)
     carried = jnp.clip(jnp.asarray(labels, jnp.int32), 0, k - 1)
     m_keep = min(int(carried.shape[0]), dg.n_pad)
-    lab = jax.lax.dynamic_update_slice(lab, carried[:m_keep], (0,))
+    o2s = getattr(dg, "o2s", None)
+    if o2s is None:
+        lab = jax.lax.dynamic_update_slice(lab, carried[:m_keep], (0,))
+    else:
+        lab = lab.at[jnp.asarray(o2s[:m_keep])].set(carried[:m_keep])
     return jnp.where(dg.vmask, lab, 0)
 
 
@@ -480,6 +569,7 @@ __all__ = [
     "ChunkUpdate",
     "ShardContext",
     "ShardUpdate",
+    "halo_exchange",
     "superstep",
     "place_state",
     "warm_labels",

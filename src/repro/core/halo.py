@@ -1,0 +1,197 @@
+"""Static halo-exchange plan for the sharded superstep.
+
+The full-gather Jacobi schedule (``chunk_schedule="sharded"``) all-gathers
+every per-vertex state field once per superstep — O(n_pad) cross-device
+traffic regardless of how local the partition's block->shard assignment is.
+But the set of *remote* vertices a shard's edge slabs actually reference is
+static (it depends only on the graph layout, not on labels), so the sync can
+be precomputed: each shard contributes only its **boundary blocks** (blocks
+some other shard references) to one all-gather of shape ``[b_max, block_v]``
+per field, and every slab's neighbor ids are rewritten host-side to index
+the shard's assembled ``local + halo`` buffer directly. Traffic per
+superstep per field drops from ``(S-1) * blocks_per_shard * block_v`` to
+``(S-1) * b_max * block_v`` elements per device — proportional to the
+block-level edge cut, i.e. to partition quality, which is the paper's cloud
+argument closed end-to-end (locality-aware assignment -> smaller halo ->
+less traffic).
+
+Exactness: the halo buffer carries the same start-of-superstep snapshots of
+remote labels that the full gather would, and the shard's own (drifting)
+slice sits at the front of the buffer, so a chunk rule sees bit-identical
+values through the rewritten indices — ``"halo"`` is an exact optimization
+of ``"sharded"``'s sync, gated bit-for-bit by tests and the scaling bench.
+
+When the boundary set approaches the full shard (``coverage = b_max /
+blocks_per_shard`` above ``threshold``), the exchange would move as much
+data as the plain all-gather while paying an extra gather/concat — the spec
+records ``fallback=True`` and the engine runs the full-gather schedule
+instead.
+
+The exchange granularity is the *union* of boundary blocks: one
+``all_gather`` delivers every shard's boundary set to everyone, so a shard
+may receive slabs it never reads. True point-to-point (per-pair ppermute
+rounds) would shave that further at the cost of S-1 sequenced collectives;
+on the target topologies (ring/torus all-gather is bandwidth-optimal) the
+union exchange is the right first cut, and the recorded
+``gathered-bytes/superstep`` in BENCH_scaling.json models exactly what this
+implementation moves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+DEFAULT_HALO_THRESHOLD = 0.75
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloSpec:
+    """Precomputed halo-exchange plan for one (layout, n_shards) pair.
+
+    Built host-side by `build_halo_spec`; consumed by the engine's halo
+    superstep. All ids are in the layout's storage space (i.e. *after* any
+    locality permutation — see `device_graph.permute_blocks`).
+    """
+
+    n_shards: int
+    blocks_per_shard: int
+    block_v: int
+    b_max: int              # padded boundary-block count per shard
+    coverage: float         # b_max / blocks_per_shard (1.0 = no win)
+    threshold: float        # fallback trigger the spec was built with
+    fallback: bool          # True -> engine runs the full-gather schedule
+    halo_blocks: Tuple[int, ...]      # per shard: #remote blocks it references
+    boundary_blocks: Tuple[int, ...]  # per shard: #own blocks others reference
+    boundary_rows: jax.Array          # [S, b_max] int32 local block index
+                                      # within the owner (0-padded)
+    blk_dst_halo: Optional[jax.Array]  # [n_blocks, e_max] int32 neighbor ids
+                                       # rewritten into local+halo buffer space
+                                       # (None when fallback)
+
+    @property
+    def local_n(self) -> int:
+        return self.blocks_per_shard * self.block_v
+
+    @property
+    def buf_len(self) -> int:
+        """Length of the per-shard drifting buffer: the shard's own slice
+        followed by the gathered boundary slabs of every shard."""
+        return self.local_n + self.n_shards * self.b_max * self.block_v
+
+    def gathered_elems_per_device(self) -> int:
+        """Per-vertex-field elements a device receives per superstep (the
+        halo exchange if active, the full gather under fallback)."""
+        per_shard = self.b_max if not self.fallback else self.blocks_per_shard
+        return (self.n_shards - 1) * per_shard * self.block_v
+
+    def full_gather_elems_per_device(self) -> int:
+        return (self.n_shards - 1) * self.blocks_per_shard * self.block_v
+
+
+def build_halo_spec(
+    blk_dst: np.ndarray,
+    blk_w: np.ndarray,
+    n_shards: int,
+    block_v: int,
+    *,
+    threshold: float = DEFAULT_HALO_THRESHOLD,
+    b_max_floor: int = 0,
+    mesh: Optional[jax.sharding.Mesh] = None,
+) -> HaloSpec:
+    """Compute the static halo sets and the buffer-space slab rewrite.
+
+    `blk_dst` / `blk_w` are the (host) padded edge slabs in storage order;
+    shard s owns the contiguous block range [s*bps, (s+1)*bps). Padding
+    slots (w == 0) are ignored for set membership and their rewritten index
+    is clamped to 0 — they are only ever read under a zero weight.
+
+    `b_max_floor` lets streaming callers keep the exchange shape stable
+    while halo sets evolve (growth past the floor recompiles, like a slab
+    re-pad). `mesh` commits the plan's device arrays (`boundary_rows`
+    replicated, `blk_dst_halo` block-sharded) so the jitted superstep reuses
+    them without per-call transfers.
+    """
+    blk_dst = np.asarray(blk_dst)
+    blk_w = np.asarray(blk_w)
+    nb, e_max = blk_dst.shape
+    if nb % n_shards != 0:
+        raise ValueError(f"n_blocks={nb} not divisible by n_shards={n_shards}")
+    bps = nb // n_shards
+    local_n = bps * block_v
+    owner = np.arange(nb, dtype=np.int64) // bps
+    dst_blk = blk_dst.astype(np.int64) // block_v
+    real = blk_w > 0
+
+    # per-shard remote-reference sets (the halo each shard must receive)
+    need = [set() for _ in range(n_shards)]
+    for b in range(nb):
+        refs = np.unique(dst_blk[b][real[b]])
+        need[int(owner[b])].update(int(r) for r in refs)
+    halo_blocks = []
+    for s in range(n_shards):
+        need[s] = sorted(d for d in need[s] if owner[d] != s)
+        halo_blocks.append(len(need[s]))
+
+    # per-shard boundary sets (the blocks each shard must send)
+    send = [set() for _ in range(n_shards)]
+    for s in range(n_shards):
+        for d in need[s]:
+            send[int(owner[d])].add(d)
+    send = [sorted(t) for t in send]
+    boundary_blocks = tuple(len(t) for t in send)
+    b_max = max(max(boundary_blocks, default=0), b_max_floor)
+    coverage = b_max / bps if bps else 1.0
+    fallback = coverage >= threshold
+
+    boundary_rows = np.zeros((n_shards, max(b_max, 0)), dtype=np.int32)
+    for t, blocks in enumerate(send):
+        boundary_rows[t, : len(blocks)] = [b - t * bps for b in blocks]
+
+    blk_dst_halo = None
+    if not fallback:
+        # position of each boundary block inside the gathered [S, b_max, bv]
+        rslot = np.full(nb, -1, dtype=np.int64)
+        for t, blocks in enumerate(send):
+            for p, b in enumerate(blocks):
+                rslot[b] = t * b_max + p
+        off = blk_dst.astype(np.int64) - dst_blk * block_v
+        own = owner[:, None]                       # shard owning the slab row
+        is_local = owner[dst_blk] == own
+        halo_pos = rslot[dst_blk]
+        unresolved = real & ~is_local & (halo_pos < 0)
+        if unresolved.any():
+            raise AssertionError("halo sets do not cover a real slab reference")
+        mapped = np.where(
+            is_local,
+            (dst_blk - own * bps) * block_v + off,
+            np.where(halo_pos >= 0, local_n + halo_pos * block_v + off, 0),
+        )
+        blk_dst_halo = mapped.astype(np.int32)
+
+    if mesh is not None:
+        boundary_rows = jax.device_put(
+            boundary_rows, NamedSharding(mesh, P()))
+        if blk_dst_halo is not None:
+            blk_dst_halo = jax.device_put(
+                blk_dst_halo, NamedSharding(mesh, P("blocks", None)))
+
+    return HaloSpec(
+        n_shards=n_shards,
+        blocks_per_shard=bps,
+        block_v=block_v,
+        b_max=b_max,
+        coverage=coverage,
+        threshold=threshold,
+        fallback=fallback,
+        halo_blocks=tuple(halo_blocks),
+        boundary_blocks=boundary_blocks,
+        boundary_rows=boundary_rows,
+        blk_dst_halo=blk_dst_halo,
+    )
+
+
+__all__ = ["HaloSpec", "build_halo_spec", "DEFAULT_HALO_THRESHOLD"]

@@ -38,7 +38,7 @@ from repro.core.device_graph import CAPACITY_MODES, DeviceGraph, ShardedDeviceGr
 from repro.core.lp import edge_histogram_jnp, spinner_penalty, tau_term
 from repro.core.registry import register
 
-_CHUNK_SCHEDULES = ("sequential", "sharded")
+_CHUNK_SCHEDULES = ("sequential", "sharded", "halo")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,7 +127,10 @@ def _restream_chunk_rule(cfg: RestreamConfig, ctx: engine.ChunkContext,
     k = cfg.k
     key, k_mig = jax.random.split(key)
     cur = jax.lax.dynamic_slice(labels, (ctx.v0,), (bv,))
-    rank = jax.lax.dynamic_slice(ctx.repl["rank"], (ctx.v0,), (bv,))
+    # rank is a replicated [n_pad] array in global vertex space — slice it by
+    # the block's global offset (gv0 == v0 except under the halo schedule,
+    # where v0 addresses the shard's local+halo buffer instead)
+    rank = jax.lax.dynamic_slice(ctx.repl["rank"], (ctx.gv0,), (bv,))
 
     # degree-priority gate: superstep t re-decides only the top
     # (t+1)/priority_ramp degree quantile; after the ramp, everyone

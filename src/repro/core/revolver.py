@@ -47,7 +47,7 @@ _VALID_CHOICES = {
     "hist_impl": ("jnp", "pallas"),
     "weight_mode": ("self_lambda", "neighbor_lambda"),
     "capacity_mode": CAPACITY_MODES,
-    "chunk_schedule": ("sequential", "sharded"),
+    "chunk_schedule": ("sequential", "sharded", "halo"),
 }
 
 
@@ -80,6 +80,9 @@ class RevolverConfig:
     #                 scans only its own blocks (async within the shard),
     #                 labels are all-gathered and load deltas psum-merged
     #                 once per superstep (Jacobi sync across shards).
+    #   "halo":       the sharded schedule with the full label all-gather
+    #                 replaced by a precomputed boundary-block exchange
+    #                 (O(halo) traffic; exact — see repro.core.halo).
     chunk_schedule: str = "sequential"
 
     def __post_init__(self):
@@ -139,6 +142,11 @@ def revolver_init_from_labels(
     are recomputed from the (possibly changed) degree vector, so the
     invariant b(l) == sum deg over labels==l holds from step 0.
 
+    Both `labels` and `probs` are indexed by **original vertex id** (row v =
+    vertex v); on a locality-permuted layout they are scattered to each
+    vertex's storage position, mirroring how `run_partitioner` /
+    `StreamRunner` return them in original order.
+
     `prob_sharpen` in [0, 1) blends every automaton toward a one-hot on its
     carried label: p <- (1-s) p + s onehot(label). Carried probabilities
     from a refinement that halted early are still diffuse, which makes the
@@ -160,7 +168,11 @@ def revolver_init_from_labels(
                 f"carried probs have k={p.shape[-1]}, config expects k={cfg.k}")
         p = p.reshape(-1, cfg.k)
         p_keep = min(int(p.shape[0]), dg.n_pad)
-        flat = jax.lax.dynamic_update_slice(flat, p[:p_keep], (0, 0))
+        o2s = getattr(dg, "o2s", None)
+        if o2s is None:
+            flat = jax.lax.dynamic_update_slice(flat, p[:p_keep], (0, 0))
+        else:  # carried rows are original-order; scatter to storage slots
+            flat = flat.at[jnp.asarray(o2s[:p_keep])].set(p[:p_keep])
     if prob_sharpen > 0.0:
         onehot = jax.nn.one_hot(lab, cfg.k, dtype=jnp.float32)
         flat = (1.0 - prob_sharpen) * flat + prob_sharpen * onehot

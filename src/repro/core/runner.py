@@ -36,10 +36,13 @@ from repro.core import engine
 from repro.core.device_graph import (
     DeviceGraph,
     ShardedDeviceGraph,
+    attach_halo,
     prepare_device_graph,
     prepare_sharded_device_graph,
     shard_device_graph,
+    vertices_to_original,
 )
+from repro.core.halo import DEFAULT_HALO_THRESHOLD
 from repro.core.metrics import local_edges, max_normalized_load
 from repro.core.registry import StaticAlgorithm, get_algorithm
 from repro.graphs.csr import Graph
@@ -155,6 +158,8 @@ def run_partitioner(
     track_history: bool = True,
     dg: Optional[DeviceGraph] = None,
     mesh=None,
+    assignment="contiguous",
+    halo_threshold: float = DEFAULT_HALO_THRESHOLD,
     sync_every: int = 1,
     init_labels: Optional[np.ndarray] = None,
     init_probs: Optional[np.ndarray] = None,
@@ -184,19 +189,35 @@ def run_partitioner(
     runs the superstep data-parallel over a 1-D ``("blocks",)`` mesh —
     `mesh` selects it (default: all visible devices, see `make_blocks_mesh`);
     a passed `dg` is aligned and placed onto the mesh if it is not already a
-    `ShardedDeviceGraph`.
+    `ShardedDeviceGraph`. `chunk_schedule="halo"` is the sharded schedule
+    with the full label all-gather replaced by the precomputed
+    boundary-block exchange (`repro.core.halo`; `halo_threshold` sets the
+    coverage above which it falls back to the full gather). `assignment`
+    selects the block->shard mapping ("contiguous" | "locality" | explicit
+    permutation, see `shard_device_graph`) — locality co-location shrinks
+    the halo, making the exchanged traffic proportional to partition
+    quality. Returned labels (and probs) are always in original vertex
+    order, whatever the assignment.
     """
     t0 = time.time()
     if sync_every < 1:
         raise ValueError(f"sync_every must be >= 1, got {sync_every}")
     algorithm = get_algorithm(algo)
     static = isinstance(algorithm, StaticAlgorithm)
-    sharded = cfg_kwargs.get("chunk_schedule") == "sharded"
+    schedule = cfg_kwargs.get("chunk_schedule")
+    sharded = schedule in ("sharded", "halo")
     if mesh is not None and not sharded:
-        raise ValueError("mesh is only meaningful with chunk_schedule='sharded'")
+        raise ValueError(
+            "mesh is only meaningful with chunk_schedule='sharded'/'halo'")
+    if not sharded and not (isinstance(assignment, str)
+                            and assignment == "contiguous"):
+        raise ValueError(
+            "assignment is only meaningful with chunk_schedule="
+            "'sharded'/'halo'")
     if static and cfg_kwargs:
         raise TypeError(f"{algo!r} runs no supersteps; it takes no config kwargs")
     if sharded:
+        halo = schedule == "halo"
         if mesh is None and isinstance(dg, ShardedDeviceGraph):
             mesh = dg.mesh
         if mesh is None:
@@ -204,9 +225,25 @@ def run_partitioner(
 
             mesh = make_blocks_mesh()
         if dg is None:
-            dg = prepare_sharded_device_graph(graph, mesh, n_blocks=n_blocks)
+            dg = prepare_sharded_device_graph(
+                graph, mesh, n_blocks=n_blocks, assignment=assignment,
+                halo=halo, halo_threshold=halo_threshold)
         elif not isinstance(dg, ShardedDeviceGraph):
-            dg = shard_device_graph(dg, mesh)
+            dg = shard_device_graph(dg, mesh, assignment=assignment,
+                                    halo=halo, halo_threshold=halo_threshold)
+        else:
+            if not (isinstance(assignment, str)
+                    and assignment == "contiguous"):
+                # a placed layout's assignment is baked into its storage
+                # order — silently running the contiguous layout here would
+                # fake locality measurements
+                raise ValueError(
+                    "assignment cannot be applied to a pre-built "
+                    "ShardedDeviceGraph; pass assignment= to "
+                    "shard_device_graph / prepare_sharded_device_graph "
+                    "when building the layout")
+            if halo and dg.halo is None:
+                dg = attach_halo(dg, halo_threshold)
     elif dg is None:
         dg = prepare_device_graph(graph, n_blocks=n_blocks)
     key = jax.random.PRNGKey(seed)
@@ -260,9 +297,13 @@ def run_partitioner(
     pending_ml: List[jax.Array] = []
 
     def on_step(s):
+        # labels and the dir_*/deg arrays live in the same (possibly
+        # locality-permuted) index space; the load metric uses the full
+        # padded arrays because real vertices are not a prefix under a
+        # permuted assignment (padding carries zero degree, so the value is
+        # unchanged on contiguous layouts)
         pending_le.append(local_edges(s.labels, dg.dir_src, dg.dir_dst))
-        pending_ml.append(
-            max_normalized_load(s.labels[: graph.n], dg.deg_out[: graph.n], k))
+        pending_ml.append(max_normalized_load(s.labels, dg.deg_out, k))
 
     def drain_metrics():
         history["local_edges"].extend(float(x) for x in jax.device_get(pending_le))
@@ -282,16 +323,19 @@ def run_partitioner(
     # final fetch: one device_get for everything still needed. With history
     # tracking on, the final step's local_edges/max_norm_load already came
     # back through the windowed drain — reuse them instead of issuing two
-    # extra blocking float(...) syncs after convergence.
-    fetch = {"labels": state.labels[: graph.n]}
+    # extra blocking float(...) syncs after convergence. Labels/probs cross
+    # the API boundary in original vertex order (identity gather on
+    # unpermuted layouts).
+    fetch = {"labels": vertices_to_original(dg, state.labels)[: graph.n]}
     if track_history and history["local_edges"]:
         le, ml = history["local_edges"][-1], history["max_norm_load"][-1]
     else:
         fetch["le"] = local_edges(state.labels, dg.dir_src, dg.dir_dst)
-        fetch["ml"] = max_normalized_load(
-            state.labels[: graph.n], dg.deg_out[: graph.n], k)
+        fetch["ml"] = max_normalized_load(state.labels, dg.deg_out, k)
     if keep_probs and algorithm.supports_probs:
-        fetch["probs"] = state.probs
+        flat = state.probs.reshape(dg.n_pad, cfg.k)
+        fetch["probs"] = vertices_to_original(dg, flat).reshape(
+            dg.n_blocks, dg.block_v, cfg.k)
     fetched = jax.device_get(fetch)
     if "le" in fetched:
         le, ml = float(fetched["le"]), float(fetched["ml"])

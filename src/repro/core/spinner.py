@@ -28,7 +28,7 @@ from repro.core.device_graph import CAPACITY_MODES, DeviceGraph, ShardedDeviceGr
 from repro.core.lp import edge_histogram_jnp, spinner_scores
 from repro.core.registry import register
 
-_CHUNK_SCHEDULES = ("sequential", "sharded")
+_CHUNK_SCHEDULES = ("sequential", "sharded", "halo")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,7 +40,8 @@ class SpinnerConfig:
     theta: float = 0.001
     capacity_mode: str = "spinner"
     # "sequential": one shard spanning the whole graph; "sharded": BSP
-    # data-parallel over the blocked slabs on a ("blocks",) mesh.
+    # data-parallel over the blocked slabs on a ("blocks",) mesh; "halo":
+    # same, syncing only the precomputed boundary blocks (repro.core.halo).
     chunk_schedule: str = "sequential"
 
     def __post_init__(self):

@@ -35,7 +35,10 @@ def main(argv=None):
     ap.add_argument("--epsilon", type=float, default=0.05)
     ap.add_argument("--n-blocks", type=int, default=8)
     ap.add_argument("--chunk-schedule", default="sequential",
-                    choices=["sequential", "sharded"])
+                    choices=["sequential", "sharded", "halo"])
+    ap.add_argument("--assignment", default="contiguous",
+                    choices=["contiguous", "locality"],
+                    help="block->shard mapping for sharded/halo schedules")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
@@ -48,6 +51,8 @@ def main(argv=None):
         if not isinstance(get_algorithm(algo), StaticAlgorithm):
             kwargs = dict(epsilon=args.epsilon,
                           chunk_schedule=args.chunk_schedule)
+            if args.chunk_schedule != "sequential":
+                kwargs["assignment"] = args.assignment
         res = run_partitioner(algo, g, args.k, seed=args.seed,
                               max_steps=args.max_steps,
                               n_blocks=args.n_blocks, **kwargs)

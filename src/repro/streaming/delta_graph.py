@@ -25,15 +25,25 @@ them and contribute nothing while isolated.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.device_graph import DeviceGraph
-from repro.graphs.blocking import block_slab_sizes, fill_block_slab
+from repro.core.device_graph import (
+    DeviceGraph,
+    ShardedDeviceGraph,
+    block_vertex_perms,
+)
+from repro.core.halo import DEFAULT_HALO_THRESHOLD, build_halo_spec
+from repro.graphs.blocking import (
+    block_adjacency,
+    block_slab_sizes,
+    fill_block_slab,
+    locality_block_order,
+)
 from repro.graphs.csr import (
     Graph,
     canonicalize_edges,
@@ -152,6 +162,24 @@ class IncrementalDeviceGraph:
     owning a touched vertex are rewritten. The flat metric arrays
     (dir_src/dir_dst, edge_*) track the true edge count and therefore change
     length — they feed cheap eager metrics, not the jitted superstep.
+
+    **Locality-aware assignment** (`assignment="locality"` or an explicit
+    block permutation; requires `mesh`): the maintained slabs live in
+    permuted *storage* order with neighbor ids rewritten into the permuted
+    space, so a rewritten dirty slab still transfers straight to the shard
+    that owns the block under the permuted assignment. A "locality"
+    permutation is decided once, from the block-level edge-cut matrix of the
+    first merged delta (typically the bulk load), and then held fixed for
+    the whole stream — the carried labels/probabilities and the jit cache
+    depend on a stable layout; a drifting graph that outgrows its
+    assignment is a re-shard event, not a per-delta adjustment.
+
+    **Halo** (`as_sharded(halo=True)`): the boundary-exchange plan is
+    rebuilt per delta from the current slabs (same O(n_blocks * e_max) host
+    cost class as the per-delta array uploads), with `b_max` only ever
+    growing (monotonic floor) so the jitted halo superstep keeps its shapes
+    until the halo genuinely widens — the same recompile discipline as an
+    `e_max` re-pad.
     """
 
     def __init__(
@@ -163,6 +191,7 @@ class IncrementalDeviceGraph:
         edge_chunk: int = 256,
         e_headroom: float = 1.5,
         mesh=None,
+        assignment: Union[str, np.ndarray, None] = "contiguous",
     ):
         self.inc = IncrementalGraph(n)
         n_blocks = max(1, min(n_blocks, n))
@@ -190,6 +219,47 @@ class IncrementalDeviceGraph:
         self._blk_w = np.zeros((self.n_blocks, 0), dtype=np.float32)
         self.graph: Optional[Graph] = None
         self.device_graph: Optional[DeviceGraph] = None
+        # block->shard assignment state (storage permutation)
+        if isinstance(assignment, str) and assignment not in (
+                "contiguous", "locality"):
+            raise ValueError(
+                f"unknown assignment {assignment!r}; expected 'contiguous', "
+                "'locality', or an explicit block permutation")
+        if not isinstance(assignment, str) and assignment is not None:
+            assignment = np.asarray(assignment, dtype=np.int64)
+        if mesh is None and (
+                (isinstance(assignment, str) and assignment == "locality")
+                or isinstance(assignment, np.ndarray)):
+            raise ValueError("a block->shard assignment needs a mesh")
+        self._assignment = assignment
+        self.block_perm: Optional[np.ndarray] = None  # storage -> orig block
+        self._pos: Optional[np.ndarray] = None        # orig block -> storage
+        self.o2s: Optional[np.ndarray] = None
+        self.s2o: Optional[np.ndarray] = None
+        # "locality" is decided once, from the first non-empty merge; the
+        # flag (not `block_perm is None` — the decision may legitimately be
+        # the identity) keeps it from being re-litigated every delta
+        self._perm_decided = not (isinstance(assignment, str)
+                                  and assignment == "locality")
+        if isinstance(assignment, np.ndarray):
+            self._set_perm(assignment)
+        self._b_max_floor = 0
+
+    def _set_perm(self, perm: np.ndarray):
+        perm = np.asarray(perm, dtype=np.int64)
+        if perm.shape != (self.n_blocks,) or not np.array_equal(
+                np.sort(perm), np.arange(self.n_blocks)):
+            raise ValueError(
+                f"perm must be a permutation of range({self.n_blocks})")
+        if np.array_equal(perm, np.arange(self.n_blocks)):
+            return
+        self.block_perm = perm
+        self._pos = np.empty(self.n_blocks, dtype=np.int64)
+        self._pos[perm] = np.arange(self.n_blocks)
+        self.o2s, self.s2o = block_vertex_perms(perm, self.block_v)
+
+    def _storage_row(self, blk: int) -> int:
+        return int(self._pos[blk]) if self._pos is not None else int(blk)
 
     @property
     def n(self) -> int:
@@ -197,6 +267,11 @@ class IncrementalDeviceGraph:
 
     def _round_e(self, need: int) -> int:
         return -(-max(need, 1) // self.edge_chunk) * self.edge_chunk
+
+    def _fill(self, g: Graph, blk: int):
+        fill_block_slab(g, blk, self.block_v, self._blk_dst, self._blk_row,
+                        self._blk_w, out_blk=self._storage_row(blk),
+                        dst_map=self.o2s)
 
     def apply(self, delta: EdgeDelta) -> Tuple[DeviceGraph, MergeInfo]:
         info = self.inc.apply(delta)
@@ -217,11 +292,66 @@ class IncrementalDeviceGraph:
             touched = info.touched_vertices
             dirty = np.unique(touched // self.block_v) if touched.size else np.empty(0, np.int64)
         for blk in dirty:
-            fill_block_slab(g, int(blk), self.block_v, self._blk_dst, self._blk_row, self._blk_w)
+            self._fill(g, int(blk))
         info.dirty_blocks = int(len(dirty))
+
+        if not self._perm_decided and g.m > 0:
+            # decide the stream's assignment from the first non-empty merge
+            # (slabs are still in natural order at this point), then rebuild
+            # every slab into permuted storage — a one-time full rewrite,
+            # same cost class as the initial fill
+            adj = block_adjacency(self._blk_dst, self._blk_w, self.block_v)
+            perm = locality_block_order(adj, int(self.mesh.shape["blocks"]))
+            self._perm_decided = True
+            self._set_perm(perm)
+            if self.block_perm is not None:
+                self._blk_dst[:] = 0
+                self._blk_row[:] = 0
+                self._blk_w[:] = 0.0
+                for blk in range(self._real_blocks):
+                    self._fill(g, blk)
 
         self.device_graph = self._to_device(g)
         return self.device_graph, info
+
+    def as_sharded(
+        self,
+        *,
+        halo: bool = False,
+        halo_threshold: float = DEFAULT_HALO_THRESHOLD,
+    ) -> ShardedDeviceGraph:
+        """Wrap the latest device layout for the sharded/halo schedules.
+
+        The arrays are already mesh-aligned, permuted, and placed; this
+        attaches the assignment metadata (so carried labels/probs convert
+        at the API boundary) and, for `halo=True`, the boundary-exchange
+        plan rebuilt against the current slabs (`b_max` floored at its
+        historical maximum so the jitted superstep's shapes are stable
+        while the halo only drifts, not widens).
+        """
+        if self.mesh is None:
+            raise ValueError("as_sharded needs a mesh-aligned layout")
+        if self.device_graph is None:
+            raise ValueError("no device layout yet; apply a delta first")
+        n_shards = int(self.mesh.shape["blocks"])
+        spec = None
+        if halo:
+            spec = build_halo_spec(
+                self._blk_dst, self._blk_w, n_shards, self.block_v,
+                threshold=halo_threshold, b_max_floor=self._b_max_floor,
+                mesh=self.mesh)
+            self._b_max_floor = spec.b_max
+        return ShardedDeviceGraph(
+            dg=self.device_graph,
+            mesh=self.mesh,
+            n_shards=n_shards,
+            blocks_per_shard=self.n_blocks // n_shards,
+            block_perm=(tuple(int(b) for b in self.block_perm)
+                        if self.block_perm is not None else None),
+            o2s=self.o2s,
+            s2o=self.s2o,
+            halo=spec,
+        )
 
     def _to_device(self, g: Graph) -> DeviceGraph:
         n_pad = self.n_pad
@@ -238,6 +368,25 @@ class IncrementalDeviceGraph:
         vmask[: g.n] = True
         src_flat = np.repeat(np.arange(g.n, dtype=np.int32), np.diff(g.adj_ptr).astype(np.int64))
         dir_src = np.repeat(np.arange(g.n, dtype=np.int32), np.diff(g.row_ptr).astype(np.int64))
+        edge_dst, dir_dst = g.adj_idx, g.col_idx
+        if self.block_perm is not None:
+            # storage-permuted layout: per-vertex arrays follow their block,
+            # flat metric ids are rewritten so metrics read the same space
+            # the (permuted) labels live in. This mirrors
+            # device_graph.permute_blocks field-for-field (the incremental
+            # path permutes incrementally instead of wholesale); a
+            # DeviceGraph field added to one site must be added to the
+            # other — tests/test_halo.py pins the two layouts equal.
+            perm = self.block_perm
+
+            def pv(a):
+                return a.reshape(self.n_blocks, self.block_v)[perm].reshape(-1)
+
+            deg_out, inv_wsum, vmask = pv(deg_out), pv(inv_wsum), pv(vmask)
+            src_flat = self.o2s[src_flat]
+            edge_dst = self.o2s[edge_dst]
+            dir_src = self.o2s[dir_src]
+            dir_dst = self.o2s[dir_dst]
         if self.mesh is not None:
             # device-aligned placement: each slab row / per-vertex slice goes
             # straight from host to its owning device; flat metric arrays
@@ -260,10 +409,10 @@ class IncrementalDeviceGraph:
             block_v=self.block_v,
             e_max=self.e_max,
             edge_src=put_flat(src_flat),
-            edge_dst=put_flat(g.adj_idx),
+            edge_dst=put_flat(edge_dst),
             edge_w=put_flat(g.adj_w),
             dir_src=put_flat(dir_src),
-            dir_dst=put_flat(g.col_idx),
+            dir_dst=put_flat(dir_dst),
             blk_dst=put_blocked(self._blk_dst),
             blk_row=put_blocked(self._blk_row),
             blk_w=put_blocked(self._blk_w),

@@ -41,7 +41,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine
-from repro.core.device_graph import shard_device_graph
+from repro.core.device_graph import vertices_to_original
+from repro.core.halo import DEFAULT_HALO_THRESHOLD
 from repro.core.metrics import local_edges, max_normalized_load
 from repro.core.registry import Algorithm, get_algorithm
 from repro.core.runner import run_convergence_loop
@@ -106,10 +107,20 @@ class StreamRunner:
     incremental layout is mesh-aligned up front, so a delta's rewritten
     dirty slabs transfer straight to their owning device and the jitted
     sharded superstep stays shape-stable across the stream.
+    `chunk_schedule="halo"` syncs only the precomputed boundary blocks each
+    superstep (`repro.core.halo`; the plan is refreshed per delta with a
+    monotonic `b_max` so shapes stay jit-stable), and `assignment=
+    "locality"` permutes the block->shard mapping so densely connected
+    blocks share a shard — decided once from the first merged delta and
+    held fixed, with dirty slabs still landing directly on their owning
+    shard under the permuted layout. Carried labels/probabilities stay in
+    original vertex order regardless of the assignment.
     """
 
     def __init__(self, n: int, cfg: StreamConfig, *, algo: str = "revolver",
-                 seed: int = 0, mesh=None, **algo_kwargs):
+                 seed: int = 0, mesh=None, assignment="contiguous",
+                 halo_threshold: float = DEFAULT_HALO_THRESHOLD,
+                 **algo_kwargs):
         self.cfg = cfg
         self.algo = get_algorithm(algo)
         if not isinstance(self.algo, Algorithm):
@@ -134,16 +145,25 @@ class StreamRunner:
             theta=cfg.theta,
             **algo_kwargs,
         )
-        if self.rcfg.chunk_schedule == "sharded" and mesh is None:
+        sharded = self.rcfg.chunk_schedule in ("sharded", "halo")
+        if sharded and mesh is None:
             from repro.launch.mesh import make_blocks_mesh
 
             mesh = make_blocks_mesh()
-        if mesh is not None and self.rcfg.chunk_schedule != "sharded":
+        if mesh is not None and not sharded:
             raise ValueError(
-                "mesh is only meaningful with chunk_schedule='sharded'")
+                "mesh is only meaningful with chunk_schedule='sharded'/'halo'")
+        if not sharded and not (isinstance(assignment, str)
+                                and assignment == "contiguous"):
+            raise ValueError(
+                "assignment is only meaningful with chunk_schedule="
+                "'sharded'/'halo'")
         self.mesh = mesh
+        self._halo = self.rcfg.chunk_schedule == "halo"
+        self._halo_threshold = halo_threshold
         self.idg = IncrementalDeviceGraph(
-            n, n_blocks=cfg.n_blocks, e_headroom=cfg.e_headroom, mesh=mesh
+            n, n_blocks=cfg.n_blocks, e_headroom=cfg.e_headroom, mesh=mesh,
+            assignment=assignment,
         )
         self._key = jax.random.PRNGKey(seed)
         self.labels: Optional[np.ndarray] = None   # [n_active] carried labels
@@ -171,9 +191,12 @@ class StreamRunner:
         patience = cfg.refine_patience if patience is None else patience
         dg, info = self.idg.apply(delta)
         if self.mesh is not None:
-            # arrays are already aligned + placed (IncrementalDeviceGraph
-            # owns the mesh); this only wraps them for the sharded superstep
-            dg = shard_device_graph(dg, self.mesh)
+            # arrays are already aligned, permuted, and placed
+            # (IncrementalDeviceGraph owns the mesh and the assignment);
+            # this wraps them with the metadata the sharded/halo schedules
+            # and the label-order conversions need
+            dg = self.idg.as_sharded(halo=self._halo,
+                                     halo_threshold=self._halo_threshold)
 
         self._key, k_init = jax.random.split(self._key)
         if self.labels is None:
@@ -195,12 +218,17 @@ class StreamRunner:
         state, refine_steps, converged = self._refine(dg, state, max_steps, patience)
         steps += refine_steps
 
-        self.labels = np.asarray(state.labels[: dg.n])
+        # carried state crosses the delta boundary in original vertex order
+        # (identity on unpermuted layouts); metrics read the storage space
+        # the labels and dir_*/deg arrays share
+        self.labels = np.asarray(vertices_to_original(dg, state.labels)[: dg.n])
         if self.algo.supports_probs:
-            self.probs = np.asarray(state.probs)
+            flat = state.probs.reshape(dg.n_pad, cfg.k)
+            self.probs = np.asarray(
+                vertices_to_original(dg, flat).reshape(state.probs.shape))
 
         le = float(local_edges(state.labels, dg.dir_src, dg.dir_dst))
-        ml = float(max_normalized_load(state.labels[: dg.n], dg.deg_out[: dg.n], cfg.k))
+        ml = float(max_normalized_load(state.labels, dg.deg_out, cfg.k))
         report = DeltaReport(
             delta_idx=len(self.reports),
             m=info.m,
@@ -239,7 +267,10 @@ class StreamRunner:
         priority-ordered chunks, letting each chunk re-decide before the
         next is released (high-degree-first, per the restreaming paper)."""
         cfg = self.cfg
-        deg = np.asarray(dg.deg_out[: dg.n])
+        # full padded degree vector: real vertices are not a prefix under a
+        # permuted assignment, and padding (degree 0) never wins the top-k;
+        # the selected positions are storage ids, matching the probs rows
+        deg = np.asarray(dg.deg_out)
         n_replay = int(cfg.restream_frac * dg.n)
         if n_replay == 0:
             return state, 0

@@ -11,6 +11,10 @@ with:
     loads). With one block per shard this is the fully-synchronous corner of
     the schedule; labels/probs must match bit-exactly over several
     supersteps, scores to float tolerance (psum association).
+  * ``halo_parity`` — ``chunk_schedule="halo"`` vs ``"sharded"`` at 8
+    shards on WIKI/LJ/USA (contiguous + locality assignments, coverage
+    fallback disabled): the boundary-only exchange must reproduce the
+    full-gather trajectory bit-for-bit on labels/loads/probs.
   * ``quality`` — sharded-vs-sequential local-edges ratio on WIKI and LJ at
     k=8 after a fixed step budget (the Jacobi merge's quality cost).
 """
@@ -67,6 +71,7 @@ def jacobi_reference_superstep(dg, cfg, state, n_shards):
         for b in range(s * bps, (s + 1) * bps):
             ctx = ChunkContext(
                 blk_idx=jnp.int32(b), v0=jnp.int32(b * bv),
+                gv0=jnp.int32(b * bv),
                 e_dst=dg.blk_dst[b], e_row=dg.blk_row[b], e_w=dg.blk_w[b],
                 deg=deg_b[b], inv_wsum=inv_b[b], vmask=msk_b[b],
                 step=state.step, n_shards=n_shards, loads0=state.loads,
@@ -128,6 +133,46 @@ def jacobi_parity(n_shards: int, n_blocks: int, steps: int = 5) -> dict:
     }
 
 
+def halo_parity(dataset: str, *, scale: float, n_shards: int = 8,
+                n_blocks: int = 64, steps: int = 5, k: int = 8,
+                assignment="contiguous") -> dict:
+    """chunk_schedule="halo" vs "sharded" on the same fixed assignment:
+    the boundary exchange is an exact optimization of the full-gather sync,
+    so labels/loads/probs must match bit-for-bit over the trajectory.
+    threshold=2.0 disables the coverage fallback so the real halo path runs
+    even on power-law graphs whose halo covers every block."""
+    g = load_dataset(dataset, scale=scale, seed=0)
+    mesh = make_blocks_mesh(n_shards)
+    kwargs = dict(n_blocks=n_blocks, assignment=assignment)
+    sdg = prepare_sharded_device_graph(g, mesh, **kwargs)
+    sdg_halo = prepare_sharded_device_graph(g, mesh, halo=True,
+                                            halo_threshold=2.0, **kwargs)
+    cfg_sh = RevolverConfig(k=k, chunk_schedule="sharded")
+    cfg_halo = RevolverConfig(k=k, chunk_schedule="halo")
+    key = jax.random.PRNGKey(0)
+    st_sh = place_revolver_state(revolver_init(sdg, cfg_sh, key), sdg)
+    st_halo = place_revolver_state(revolver_init(sdg_halo, cfg_halo, key),
+                                   sdg_halo)
+    for _ in range(steps):
+        st_sh = revolver_superstep(sdg, cfg_sh, st_sh)
+        st_halo = revolver_superstep(sdg_halo, cfg_halo, st_halo)
+    spec = sdg_halo.halo
+    return {
+        "dataset": dataset, "n_shards": n_shards, "n_blocks": n_blocks,
+        "steps": steps,
+        "assignment": assignment if isinstance(assignment, str) else "explicit",
+        "b_max": spec.b_max, "blocks_per_shard": spec.blocks_per_shard,
+        "coverage": spec.coverage,
+        "labels_equal": bool((np.asarray(st_sh.labels)
+                              == np.asarray(st_halo.labels)).all()),
+        "loads_equal": bool((np.asarray(st_sh.loads)
+                             == np.asarray(st_halo.loads)).all()),
+        "max_probs_diff": float(np.abs(np.asarray(st_sh.probs)
+                                       - np.asarray(st_halo.probs)).max()),
+        "score_diff": abs(float(st_sh.score) - float(st_halo.score)),
+    }
+
+
 def quality(dataset: str, *, scale: float, steps: int, k: int = 8) -> dict:
     g = load_dataset(dataset, scale=scale, seed=0)
     mesh = make_blocks_mesh(8)
@@ -151,6 +196,14 @@ def main() -> int:
         "jacobi_parity": [
             jacobi_parity(8, 8),    # one block per shard: pure Jacobi corner
             jacobi_parity(4, 8),    # two blocks per shard: async-within mix
+        ],
+        "halo_parity": [
+            # the acceptance gate: halo == sharded bit-for-bit at 8 host
+            # devices on WIKI/LJ, contiguous and locality assignments
+            halo_parity("WIKI", scale=5e-4),
+            halo_parity("LJ", scale=3e-4),
+            halo_parity("USA", scale=5e-4),   # the genuinely sparse halo
+            halo_parity("WIKI", scale=5e-4, assignment="locality"),
         ],
         "quality": [
             quality("WIKI", scale=5e-4, steps=40),

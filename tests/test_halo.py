@@ -1,0 +1,426 @@
+"""Halo-exchange schedule + locality-aware shard assignment.
+
+Three layers:
+
+  * **plan-level** (pure numpy, no devices needed): `build_halo_spec` on
+    crafted block layouts — empty halo, full halo, asymmetric reference
+    patterns — plus the buffer-space slab rewrite checked against a
+    simulated exchange, and `locality_block_order` determinism/recovery;
+  * **schedule-level** (in-process, 1 shard): `chunk_schedule="halo"` must
+    be bit-identical to `"sharded"` (and hence to `"sequential"`) for every
+    registered rule, under both the contiguous and a permuted assignment;
+  * **boundary conversions**: labels/probs cross `run_partitioner` /
+    `StreamRunner` in original vertex order whatever the assignment.
+
+The true multi-shard halo (8 forced host devices) is pinned by
+`tests/sharded_parity_worker.py`, driven from `tests/test_sharded.py`.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.core.device_graph import (
+    block_vertex_perms,
+    permute_blocks,
+    prepare_device_graph,
+    prepare_sharded_device_graph,
+    vertices_to_original,
+)
+from repro.core.halo import build_halo_spec
+from repro.core.metrics import local_edges
+from repro.core.registry import get_algorithm, superstep_algorithms
+from repro.core.runner import run_partitioner
+from repro.graphs.blocking import block_adjacency, locality_block_order
+from repro.graphs.csr import build_graph
+from repro.graphs.generators import dc_sbm, ring_of_cliques
+from repro.launch.mesh import make_blocks_mesh
+
+
+# --------------------------------------------------------------------------
+# crafted block layouts (slab arrays built by hand; block_v = 4)
+# --------------------------------------------------------------------------
+BV = 4
+
+
+def slabs(n_blocks, e_max, refs):
+    """Build (blk_dst, blk_w) where block b references the blocks listed in
+    refs[b] (one unit-weight edge each, row 0)."""
+    dst = np.zeros((n_blocks, e_max), dtype=np.int32)
+    w = np.zeros((n_blocks, e_max), dtype=np.float32)
+    for b, targets in refs.items():
+        for j, t in enumerate(targets):
+            dst[b, j] = t * BV          # row 0 of the target block
+            w[b, j] = 1.0
+    return dst, w
+
+
+class TestHaloSpec:
+    def test_empty_halo(self):
+        """Two shards whose slabs only reference their own blocks: nothing
+        to exchange, zero-width boundary, never a fallback."""
+        dst, w = slabs(4, 4, {0: [0, 1], 1: [0], 2: [3], 3: [2, 3]})
+        spec = build_halo_spec(dst, w, 2, BV)
+        assert spec.b_max == 0 and spec.coverage == 0.0
+        assert not spec.fallback
+        assert spec.halo_blocks == (0, 0) and spec.boundary_blocks == (0, 0)
+        assert spec.gathered_elems_per_device() == 0
+        # all-local rewrite: dst ids become shard-local offsets
+        local = np.asarray(spec.blk_dst_halo)
+        assert local[0, 0] == 0 * BV and local[0, 1] == 1 * BV
+        assert local[2, 0] == 1 * BV      # block 3 is shard 1's local block 1
+
+    def test_full_halo_falls_back(self):
+        """Every block referencing every remote block: coverage 1.0 — the
+        exchange cannot beat the all-gather, so the plan falls back."""
+        refs = {b: list(range(4)) for b in range(4)}
+        dst, w = slabs(4, 4, refs)
+        spec = build_halo_spec(dst, w, 2, BV)
+        assert spec.b_max == 2 and spec.coverage == 1.0
+        assert spec.fallback and spec.blk_dst_halo is None
+        assert spec.gathered_elems_per_device() == \
+            spec.full_gather_elems_per_device()
+
+    def test_asymmetric_references(self):
+        """Shard 0 reads one of shard 1's blocks; shard 1 reads nothing
+        remote — need/send sets are per-direction."""
+        dst, w = slabs(4, 4, {0: [0, 2], 1: [1], 2: [2], 3: [3]})
+        spec = build_halo_spec(dst, w, 2, BV, threshold=2.0)
+        assert spec.halo_blocks == (1, 0)       # shard 0 needs block 2
+        assert spec.boundary_blocks == (0, 1)   # shard 1 sends block 2
+        assert spec.b_max == 1 and not spec.fallback
+        # block 2 sits at boundary position 0 of owner shard 1
+        rows = np.asarray(spec.boundary_rows)
+        assert rows[1, 0] == 0
+        # shard 0's slab ref to block 2 -> buffer slot local_n + (1*b_max+0)*BV
+        assert np.asarray(spec.blk_dst_halo)[0, 1] == spec.local_n + 1 * BV
+
+    def test_rewrite_matches_simulated_exchange(self):
+        """For every shard, gathering labels through the rewritten slab ids
+        out of the assembled local+halo buffer must read the same values the
+        full [n_pad] gather would."""
+        rng = np.random.default_rng(0)
+        nb, e_max, S = 8, 6, 4
+        refs = {b: sorted(rng.choice(nb, size=3, replace=False).tolist())
+                for b in range(nb)}
+        dst, w = slabs(nb, e_max, refs)
+        # also reference arbitrary rows, not just row 0
+        dst[w > 0] += rng.integers(0, BV, size=int((w > 0).sum()))
+        spec = build_halo_spec(dst, w, S, BV, threshold=2.0)
+        assert not spec.fallback
+        bps = nb // S
+        labels = rng.integers(0, 100, size=nb * BV)
+        rows = np.asarray(spec.boundary_rows)
+        halo_dst = np.asarray(spec.blk_dst_halo)
+        gathered = np.stack([
+            labels[(t * bps + rows[t])[:, None] * BV + np.arange(BV)]
+            for t in range(S)
+        ]) if spec.b_max else np.zeros((S, 0, BV), labels.dtype)
+        for s in range(S):
+            local = labels[s * spec.local_n:(s + 1) * spec.local_n]
+            buf = np.concatenate([local, gathered.reshape(-1)])
+            for b in range(s * bps, (s + 1) * bps):
+                real = w[b] > 0
+                np.testing.assert_array_equal(
+                    buf[halo_dst[b][real]], labels[dst[b][real]])
+
+    def test_b_max_floor_keeps_shape(self):
+        dst, w = slabs(4, 4, {0: [0, 2], 1: [1], 2: [2], 3: [3]})
+        spec = build_halo_spec(dst, w, 2, BV, threshold=2.0, b_max_floor=3)
+        assert spec.b_max == 3
+        assert np.asarray(spec.boundary_rows).shape == (2, 3)
+
+
+class TestLocalityAssignment:
+    def scrambled_cliques(self):
+        """32 cliques of 16 vertices on a ring, vertex ids permuted at block
+        granularity with a stride so contiguous striping splits every
+        neighborhood while a locality pass can fully recover it."""
+        g = ring_of_cliques(32, 16)
+        nb = 32
+        scram = np.arange(nb).reshape(-1, 8).T.reshape(-1)  # stride-8 order
+        o2s, _ = block_vertex_perms(scram, 16)
+        src = np.repeat(np.arange(g.n, dtype=np.int64),
+                        np.diff(g.row_ptr).astype(np.int64))
+        return build_graph(o2s[src], o2s[g.col_idx], g.n)
+
+    def test_deterministic(self):
+        g = self.scrambled_cliques()
+        dg = prepare_device_graph(g, n_blocks=32, block_multiple=16)
+        adj = block_adjacency(np.asarray(dg.blk_dst), np.asarray(dg.blk_w),
+                              dg.block_v)
+        p1 = locality_block_order(adj, 8)
+        p2 = locality_block_order(adj, 8)
+        np.testing.assert_array_equal(p1, p2)
+        np.testing.assert_array_equal(np.sort(p1), np.arange(dg.n_blocks))
+
+    def test_recovers_scrambled_structure(self):
+        """Locality assignment must beat contiguous striping on the
+        scrambled layout: fewer boundary blocks, active (non-fallback)
+        halo."""
+        g = self.scrambled_cliques()
+        mesh = make_blocks_mesh(1)
+        contig = prepare_sharded_device_graph(
+            g, mesh, n_blocks=32, block_multiple=16, halo=True)
+        # measure the halo of both assignments for an 8-shard split without
+        # needing 8 devices: plan-level only
+        spec_c = build_halo_spec(np.asarray(contig.blk_dst),
+                                 np.asarray(contig.blk_w), 8,
+                                 contig.block_v, threshold=2.0)
+        adj = block_adjacency(np.asarray(contig.blk_dst),
+                              np.asarray(contig.blk_w), contig.block_v)
+        perm = locality_block_order(adj, 8)
+        assert not np.array_equal(perm, np.arange(32))
+        loc = permute_blocks(contig.dg, perm)
+        spec_l = build_halo_spec(np.asarray(loc.blk_dst),
+                                 np.asarray(loc.blk_w), 8, loc.block_v,
+                                 threshold=2.0)
+        assert spec_l.b_max < spec_c.b_max
+        assert spec_l.coverage < 0.75      # active halo at default threshold
+
+    def test_never_worse_than_contiguous(self):
+        """On a vertex order that is already locality-friendly (road
+        lattice), the pass keeps the identity assignment."""
+        from repro.graphs.generators import grid_road
+        g = grid_road(4096, seed=0)
+        dg = prepare_device_graph(g, n_blocks=32)
+        adj = block_adjacency(np.asarray(dg.blk_dst), np.asarray(dg.blk_w),
+                              dg.block_v)
+        perm = locality_block_order(adj, 8)
+        np.testing.assert_array_equal(perm, np.arange(dg.n_blocks))
+
+
+class TestPermutedLayout:
+    def test_permute_blocks_preserves_graph(self):
+        """A permuted layout is the same graph under a vertex relabeling:
+        any labeling scores the same local_edges through the remapped
+        metric arrays."""
+        g = dc_sbm(512, 4096, n_comm=8, mixing=0.3, seed=1)
+        dg = prepare_device_graph(g, n_blocks=8)
+        rng = np.random.default_rng(0)
+        perm = rng.permutation(8)
+        pdg = permute_blocks(dg, perm)
+        o2s, s2o = block_vertex_perms(perm, dg.block_v)
+        labels = rng.integers(0, 4, size=dg.n_pad).astype(np.int32)
+        le = float(local_edges(jax.numpy.asarray(labels),
+                               dg.dir_src, dg.dir_dst))
+        le_p = float(local_edges(jax.numpy.asarray(labels[s2o]),
+                                 pdg.dir_src, pdg.dir_dst))
+        assert le == pytest.approx(le_p, abs=1e-7)
+        # degree mass follows the blocks
+        np.testing.assert_array_equal(
+            np.asarray(pdg.deg_out)[o2s], np.asarray(dg.deg_out))
+
+
+@pytest.fixture(scope="module")
+def sbm_graph():
+    return dc_sbm(1024, 8192, n_comm=16, mixing=0.25, degree_exponent=0.5,
+                  seed=3)
+
+
+class TestHaloSchedule:
+    """1-shard in-process checks; the 8-shard legs live in the parity
+    worker (device count is pinned at backend init)."""
+
+    @pytest.mark.parametrize("name", superstep_algorithms())
+    def test_halo_bit_identical_to_sharded(self, sbm_graph, name):
+        mesh = make_blocks_mesh(1)
+        common = dict(seed=3, max_steps=4, patience=10_000,
+                      track_history=False, n_blocks=8, mesh=mesh)
+        r_sh = run_partitioner(name, sbm_graph, 4, chunk_schedule="sharded",
+                               **common)
+        r_halo = run_partitioner(name, sbm_graph, 4, chunk_schedule="halo",
+                                 **common)
+        np.testing.assert_array_equal(r_sh.labels, r_halo.labels)
+        assert r_halo.local_edges == pytest.approx(r_sh.local_edges, abs=1e-7)
+
+    def test_halo_with_permuted_assignment_bit_identical(self, sbm_graph):
+        """For any fixed assignment, halo is an exact optimization of the
+        full-gather sync: same trajectory bit-for-bit."""
+        mesh = make_blocks_mesh(1)
+        perm = np.arange(8)[::-1].copy()
+        common = dict(seed=3, max_steps=4, patience=10_000,
+                      track_history=False, n_blocks=8, mesh=mesh,
+                      assignment=perm)
+        r_sh = run_partitioner("revolver", sbm_graph, 4,
+                               chunk_schedule="sharded", **common)
+        r_halo = run_partitioner("revolver", sbm_graph, 4,
+                                 chunk_schedule="halo", **common)
+        np.testing.assert_array_equal(r_sh.labels, r_halo.labels)
+
+    def test_permuted_labels_returned_in_original_order(self, sbm_graph):
+        """The reported metric must match a host-side recompute from the
+        returned labels on the *original* graph — the permutation cannot
+        leak through the API."""
+        g = sbm_graph
+        r = run_partitioner("revolver", g, 4, seed=0, max_steps=4,
+                            patience=10_000, track_history=False,
+                            chunk_schedule="sharded", mesh=make_blocks_mesh(1),
+                            assignment=np.arange(8)[::-1].copy())
+        src = np.repeat(np.arange(g.n), np.diff(g.row_ptr).astype(np.int64))
+        le = float((r.labels[src] == r.labels[g.col_idx]).mean())
+        assert le == pytest.approx(r.local_edges, abs=1e-6)
+
+    def test_warm_start_round_trip_under_permutation(self, sbm_graph):
+        """Carried labels (and probs) are original-order on both sides of a
+        permuted run: warm-starting from a permuted run's output preserves
+        the assignment."""
+        mesh = make_blocks_mesh(1)
+        perm = np.roll(np.arange(8), 3)
+        sdg = prepare_sharded_device_graph(sbm_graph, mesh, n_blocks=8,
+                                           assignment=perm)
+        algo = get_algorithm("revolver")
+        cfg = algo.config_cls(k=4, chunk_schedule="sharded")
+        carried = (np.arange(sbm_graph.n) % 4).astype(np.int32)
+        state = algo.init_from_labels(sdg, cfg, jax.random.PRNGKey(0), carried)
+        back = np.asarray(
+            vertices_to_original(sdg, state.labels)[: sbm_graph.n])
+        np.testing.assert_array_equal(back, carried)
+
+    def test_keep_probs_original_order(self, sbm_graph):
+        """probs returned by a permuted run are original-order and chain
+        into a warm restart losslessly (same check as labels: vertex v's
+        automaton row is row v)."""
+        mesh = make_blocks_mesh(1)
+        perm = np.roll(np.arange(8), 2)
+        common = dict(seed=0, max_steps=3, patience=10_000,
+                      track_history=False, chunk_schedule="sharded",
+                      mesh=mesh, n_blocks=8)
+        r_id = run_partitioner("revolver", sbm_graph, 4, keep_probs=True,
+                               **common)
+        r_pm = run_partitioner("revolver", sbm_graph, 4, keep_probs=True,
+                               assignment=perm, **common)
+        # same graph, same seed, different layout -> different trajectories,
+        # but both probs tensors must describe real vertices in rows [0, n)
+        assert r_id.probs.shape == r_pm.probs.shape
+        n = sbm_graph.n
+        flat = r_pm.probs.reshape(-1, 4)
+        assert np.all(np.abs(flat[:n].sum(axis=1) - 1.0) < 1e-5)
+
+    def test_halo_errors_without_plan(self, sbm_graph):
+        from repro.core import engine
+        mesh = make_blocks_mesh(1)
+        sdg = prepare_sharded_device_graph(sbm_graph, mesh, n_blocks=8)
+        algo = get_algorithm("revolver")
+        cfg = algo.config_cls(k=4, chunk_schedule="halo")
+        st = algo.init(sdg, algo.config_cls(k=4), jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="halo"):
+            engine.superstep(algo, sdg, cfg, st)
+
+    def test_assignment_requires_sharded_schedule(self, sbm_graph):
+        with pytest.raises(ValueError, match="assignment"):
+            run_partitioner("revolver", sbm_graph, 4, assignment="locality")
+
+    def test_assignment_rejected_on_prebuilt_layout(self, sbm_graph):
+        """A placed layout's assignment is baked into its storage order —
+        asking for a different one must raise, not silently run the
+        pre-built layout (that would fake locality measurements)."""
+        mesh = make_blocks_mesh(1)
+        sdg = prepare_sharded_device_graph(sbm_graph, mesh, n_blocks=8)
+        with pytest.raises(ValueError, match="pre-built"):
+            run_partitioner("revolver", sbm_graph, 4, dg=sdg,
+                            chunk_schedule="sharded", assignment="locality",
+                            max_steps=2)
+
+
+class TestStreamingHalo:
+    def test_stream_halo_matches_sequential_one_shard(self, sbm_graph):
+        from repro.streaming.runner import StreamConfig, StreamRunner
+        from repro.streaming.stream import stream_from_graph
+
+        cfg = StreamConfig(k=4, n_blocks=8, refine_max_steps=4,
+                           refine_patience=10_000, sync_every=2)
+        r_seq = StreamRunner(sbm_graph.n, cfg, seed=0)
+        r_halo = StreamRunner(sbm_graph.n, cfg, seed=0,
+                              chunk_schedule="halo",
+                              mesh=make_blocks_mesh(1))
+        for d_seq, d_halo in zip(stream_from_graph(sbm_graph, 3, seed=0),
+                                 stream_from_graph(sbm_graph, 3, seed=0)):
+            rep_seq = r_seq.ingest(d_seq)
+            rep_halo = r_halo.ingest(d_halo)
+            assert rep_halo.steps == rep_seq.steps
+            assert rep_halo.local_edges == pytest.approx(
+                rep_seq.local_edges, abs=1e-7)
+        np.testing.assert_array_equal(r_seq.labels, r_halo.labels)
+
+    def test_stream_permuted_assignment_carries_state(self, sbm_graph):
+        """Dirty slabs keep landing on their owning shard under an explicit
+        permutation, and quality tracks the unpermuted stream (same rule,
+        different but equivalent layout)."""
+        from repro.streaming.runner import StreamConfig, StreamRunner
+        from repro.streaming.stream import stream_from_graph
+
+        cfg = StreamConfig(k=4, n_blocks=8, refine_max_steps=4,
+                           refine_patience=10_000, sync_every=2)
+        perm = np.arange(8)[::-1].copy()
+        r_ref = StreamRunner(sbm_graph.n, cfg, seed=0)
+        r_perm = StreamRunner(sbm_graph.n, cfg, seed=0,
+                              chunk_schedule="halo", mesh=make_blocks_mesh(1),
+                              assignment=perm)
+        last_ref = last_perm = None
+        for d_ref, d_perm in zip(stream_from_graph(sbm_graph, 3, seed=0),
+                                 stream_from_graph(sbm_graph, 3, seed=0)):
+            last_ref = r_ref.ingest(d_ref)
+            last_perm = r_perm.ingest(d_perm)
+        assert last_perm.local_edges == pytest.approx(
+            last_ref.local_edges, abs=0.08)
+        assert r_perm.labels.shape == (sbm_graph.n,)
+
+    def test_stream_locality_requires_mesh(self, sbm_graph):
+        from repro.streaming.delta_graph import IncrementalDeviceGraph
+
+        with pytest.raises(ValueError, match="mesh"):
+            IncrementalDeviceGraph(64, assignment="locality")
+
+    def test_stream_locality_decided_once(self, sbm_graph):
+        """The locality decision runs exactly once (first non-empty merge)
+        even when it settles on the identity assignment — later deltas must
+        not re-litigate (and potentially flip) the layout."""
+        from unittest import mock
+
+        from repro.streaming import delta_graph as dg_mod
+        from repro.streaming.stream import stream_from_graph
+
+        idg = dg_mod.IncrementalDeviceGraph(
+            sbm_graph.n, n_blocks=8, mesh=make_blocks_mesh(1),
+            assignment="locality")
+        with mock.patch.object(dg_mod, "locality_block_order",
+                               wraps=dg_mod.locality_block_order) as spy:
+            for delta in stream_from_graph(sbm_graph, 3, seed=0):
+                idg.apply(delta)
+        assert spy.call_count == 1
+
+    def test_streaming_permuted_layout_matches_static(self, sbm_graph):
+        """The incremental permuted layout and `permute_blocks` implement
+        the same rewrite field-for-field: streaming a whole graph as one
+        delta under an explicit permutation must reproduce the statically
+        permuted layout (up to slab padding width)."""
+        from repro.core.device_graph import shard_device_graph
+        from repro.streaming.delta_graph import IncrementalDeviceGraph
+        from repro.streaming.stream import stream_from_graph
+
+        g = sbm_graph
+        perm = np.roll(np.arange(8), 3)
+        mesh = make_blocks_mesh(1)
+        idg = IncrementalDeviceGraph(g.n, n_blocks=8, mesh=mesh,
+                                     assignment=perm)
+        (delta,) = stream_from_graph(g, 1, seed=0)
+        dg_stream, _ = idg.apply(delta)
+        dg_static = shard_device_graph(
+            prepare_device_graph(g, n_blocks=8), mesh, assignment=perm).dg
+        assert dg_stream.block_v == dg_static.block_v
+        assert dg_stream.n_blocks == dg_static.n_blocks
+        for field in ("deg_out", "inv_wsum", "vmask", "edge_src", "edge_dst",
+                      "dir_src", "dir_dst"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(dg_stream, field)),
+                np.asarray(getattr(dg_static, field)), err_msg=field)
+        # slab e_max differs (streaming pads with headroom): compare the
+        # real (dst, row, w) triples per storage row
+        for b in range(dg_static.n_blocks):
+            def triples(dg_, blk):
+                d = np.asarray(dg_.blk_dst[blk])
+                r = np.asarray(dg_.blk_row[blk])
+                w = np.asarray(dg_.blk_w[blk])
+                m = w > 0
+                return sorted(zip(d[m], r[m], w[m]))
+            assert triples(dg_stream, b) == triples(dg_static, b), b

@@ -55,17 +55,18 @@ class TestLookup:
 
 
 class TestRoundTrip:
-    """Every engine algorithm x {sequential, sharded} x {cold, warm}."""
+    """Every engine algorithm x {sequential, sharded, halo} x {cold, warm}."""
 
     @pytest.mark.parametrize("name", superstep_algorithms())
-    @pytest.mark.parametrize("schedule", ["sequential", "sharded"])
+    @pytest.mark.parametrize("schedule", ["sequential", "sharded", "halo"])
     @pytest.mark.parametrize("warm", [False, True])
     def test_supersteps_preserve_invariants(self, graph, name, schedule, warm):
         algo = get_algorithm(name)
         cfg = algo.config_cls(k=K, chunk_schedule=schedule)
-        if schedule == "sharded":
+        if schedule in ("sharded", "halo"):
             dg = prepare_sharded_device_graph(graph, make_blocks_mesh(1),
-                                              n_blocks=4)
+                                              n_blocks=4,
+                                              halo=schedule == "halo")
         else:
             dg = prepare_device_graph(graph, n_blocks=4)
         key = jax.random.PRNGKey(0)
@@ -77,7 +78,7 @@ class TestRoundTrip:
                 np.asarray(state.labels[: graph.n]), carried)
         else:
             state = algo.init(dg, cfg, key)
-        if schedule == "sharded":
+        if schedule in ("sharded", "halo"):
             state = engine.place_state(algo, state, dg)
         for step in range(STEPS):
             state = engine.superstep(algo, dg, cfg, state)

@@ -267,6 +267,20 @@ class TestMultiShard:
             assert par["max_probs_diff"] <= 1e-6, par
             assert par["score_diff"] <= 1e-5, par
 
+    def test_halo_schedule_bit_identical_to_sharded(self, parity_report):
+        """The boundary-only halo exchange is an exact optimization of the
+        full-gather Jacobi sync: labels/loads bit-equal at 8 shards on
+        WIKI/LJ/USA, under contiguous and locality assignments alike."""
+        seen = set()
+        for par in parity_report["halo_parity"]:
+            seen.add((par["dataset"], par["assignment"]))
+            assert par["labels_equal"], par
+            assert par["loads_equal"], par
+            assert par["max_probs_diff"] == 0.0, par
+            assert par["score_diff"] <= 1e-6, par
+        assert {("WIKI", "contiguous"), ("LJ", "contiguous"),
+                ("WIKI", "locality")} <= seen
+
     def test_quality_ratio_vs_sequential(self, parity_report):
         """The Jacobi merge trades per-superstep freshness for parallelism;
         the satellite's acceptance bar is >= 0.97 of sequential quality on

@@ -1,0 +1,92 @@
+"""Intra-repo markdown link checker (the CI docs job).
+
+Scans every tracked ``*.md`` file for markdown links and validates that:
+
+  * relative link targets exist on disk (files or directories);
+  * fragment links (``path#anchor`` or ``#anchor``) point at a real
+    heading in the target file, using GitHub's anchor slug rules.
+
+External links (http/https/mailto) are not fetched — CI must not depend on
+the network. Exit status is nonzero iff any intra-repo link is broken.
+
+  python tools/check_links.py            # whole repo
+  python tools/check_links.py README.md  # specific files
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", "node_modules",
+             ".claude", "results"}
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+FENCE_RE = re.compile(r"^```.*?^```", re.MULTILINE | re.DOTALL)
+CODE_SPAN_RE = re.compile(r"`[^`\n]*`")
+
+
+def strip_code(text: str) -> str:
+    """Remove fenced blocks and inline code spans — `d[k](v)` in a snippet
+    is not a markdown link."""
+    return CODE_SPAN_RE.sub("", FENCE_RE.sub("", text))
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style heading anchor: strip formatting, lowercase, keep
+    alphanumerics/underscores/hyphens, spaces become hyphens."""
+    text = heading.strip().lower()
+    text = text.replace("`", "")
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(md: Path) -> set:
+    return {slugify(h) for h in HEADING_RE.findall(md.read_text())}
+
+
+def md_files(argv):
+    if argv:
+        return [Path(a).resolve() for a in argv]
+    out = []
+    for p in sorted(REPO.rglob("*.md")):
+        if not any(part in SKIP_DIRS for part in p.parts):
+            out.append(p)
+    return out
+
+
+def main(argv=None) -> int:
+    errors = []
+    files = md_files(argv if argv is not None else sys.argv[1:])
+    n_links = 0
+    for md in files:
+        text = strip_code(md.read_text())
+        for match in LINK_RE.finditer(text):
+            target = match.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            n_links += 1
+            path_part, _, fragment = target.partition("#")
+            if path_part:
+                resolved = (md.parent / path_part).resolve()
+                if not resolved.exists():
+                    errors.append(f"{md.relative_to(REPO)}: broken link "
+                                  f"-> {target}")
+                    continue
+            else:
+                resolved = md
+            if fragment:
+                if resolved.suffix != ".md" or not resolved.is_file():
+                    continue          # anchors into non-markdown: skip
+                if fragment not in anchors_of(resolved):
+                    errors.append(f"{md.relative_to(REPO)}: missing anchor "
+                                  f"-> {target}")
+    print(f"checked {n_links} intra-repo links across {len(files)} files")
+    for e in errors:
+        print(f"BROKEN  {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
