@@ -1,6 +1,11 @@
 """Benchmark orchestrator — one section per paper table/figure plus the
 framework's §Roofline report. CSV contract: ``name,value,derived``.
 
+Every section runs even when an earlier one fails; regression gates are
+collected into an end-of-run summary table (gate, status, artifact) and the
+process exits nonzero if any gate failed or any section errored — so one
+run reports *all* regressions instead of stopping at the first.
+
   PYTHONPATH=src python -m benchmarks.run            # CPU-sized defaults
   PYTHONPATH=src python -m benchmarks.run --quick    # smoke (CI)
 """
@@ -9,6 +14,20 @@ from __future__ import annotations
 import argparse
 import os
 import time
+import traceback
+
+
+def _section(title: str, gates: list, fn, *, name: str, artifact: str = "-"):
+    """Run one benchmark section, converting an exception into an 'error'
+    gate row instead of aborting the whole sweep."""
+    print("=" * 72)
+    print(f"== {title} ==")
+    try:
+        return fn()
+    except Exception:
+        traceback.print_exc()
+        gates.append((f"{name} (section)", "error", artifact))
+        return None
 
 
 def main(argv=None):
@@ -23,52 +42,55 @@ def main(argv=None):
                             streaming_bench, superstep_bench, table1_datasets)
 
     t0 = time.time()
-    print("=" * 72)
-    print("== Table I: dataset suite ==")
-    table1_datasets.run(scale=0.0005 if args.quick else 0.001)
+    # (gate name, status "ok"/"FAIL"/"error", artifact) rows for the summary
+    gates: list = []
 
-    print("=" * 72)
-    print("== Fig. 3: partition quality (local edges / max norm load) ==")
-    if args.quick:
-        fig3_partition_quality.run(datasets=("LJ",), ks=(8,),
-                                   scale=0.001, max_steps=40)
-    else:
-        fig3_partition_quality.run()
+    _section("Table I: dataset suite", gates,
+             lambda: table1_datasets.run(scale=0.0005 if args.quick else 0.001),
+             name="table1")
 
-    print("=" * 72)
-    print("== Fig. 4: convergence (LJ, k=32) + async-vs-sync ablation ==")
-    fig4_convergence.run(scale=0.001 if args.quick else 0.002,
-                         max_steps=60 if args.quick else 290)
+    _section("Fig. 3: partition quality (local edges / max norm load)", gates,
+             (lambda: fig3_partition_quality.run(datasets=("LJ",), ks=(8,),
+                                                 scale=0.001, max_steps=40))
+             if args.quick else fig3_partition_quality.run,
+             name="fig3")
 
-    print("=" * 72)
-    print("== Streaming ingestion: quality-vs-batch / steps-to-recover ==")
-    if args.quick:
-        streaming_bench.run(dataset="WIKI", k=4, scale=0.0005, deltas=4,
-                            refine_max_steps=8)
-    else:
-        streaming_bench.run()
+    _section("Fig. 4: convergence (LJ, k=32) + async-vs-sync ablation", gates,
+             lambda: fig4_convergence.run(scale=0.001 if args.quick else 0.002,
+                                          max_steps=60 if args.quick else 290),
+             name="fig4")
 
-    print("=" * 72)
-    print("== Superstep perf baseline ({hist,la}_impl sweep + parity gate) ==")
-    bench = superstep_bench.run(quick=args.quick)
-    if not bench["meta"]["parity_ok"]:
-        raise SystemExit("superstep kernel-parity regression (see above)")
-    if not bench["meta"]["quality_ok"]:
-        raise SystemExit("restream-vs-revolver quality regression (see above)")
+    _section("Streaming ingestion: quality-vs-batch / steps-to-recover", gates,
+             (lambda: streaming_bench.run(dataset="WIKI", k=4, scale=0.0005,
+                                          deltas=4, refine_max_steps=8))
+             if args.quick else streaming_bench.run,
+             name="streaming")
 
-    print("=" * 72)
-    print("== Sharded superstep scaling (1/2/4/8 devices + quality gate) ==")
-    scaling = scaling_bench.run(quick=args.quick)
-    if not scaling["meta"]["quality_ok"]:
-        raise SystemExit("sharded-schedule quality regression (see above)")
-    if not scaling["meta"]["halo_parity_ok"]:
-        raise SystemExit("halo-schedule parity regression (see above)")
-    if not scaling["meta"]["traffic_ok"]:
-        raise SystemExit("halo traffic-reduction regression (see above)")
+    bench = _section("Superstep perf baseline ({hist,la}_impl sweep + parity "
+                     "gate)", gates,
+                     lambda: superstep_bench.run(quick=args.quick),
+                     name="superstep", artifact="BENCH_superstep.json")
+    if bench is not None:
+        for gate, ok in (("superstep kernel parity", bench["meta"]["parity_ok"]),
+                         ("restream-vs-revolver quality",
+                          bench["meta"]["quality_ok"])):
+            gates.append((gate, "ok" if ok else "FAIL", "BENCH_superstep.json"))
 
-    print("=" * 72)
-    print("== Kernel microbench (CPU; interpret-mode parity) ==")
-    kernel_bench.run()
+    scaling = _section("Sharded superstep scaling (1/2/4/8 devices + quality "
+                       "gate)", gates,
+                       lambda: scaling_bench.run(quick=args.quick),
+                       name="scaling", artifact="BENCH_scaling.json")
+    if scaling is not None:
+        for gate, ok in (("sharded-schedule quality",
+                          scaling["meta"]["quality_ok"]),
+                         ("halo-schedule parity",
+                          scaling["meta"]["halo_parity_ok"]),
+                         ("halo traffic reduction",
+                          scaling["meta"]["traffic_ok"])):
+            gates.append((gate, "ok" if ok else "FAIL", "BENCH_scaling.json"))
+
+    _section("Kernel microbench (CPU; interpret-mode parity)", gates,
+             kernel_bench.run, name="kernel")
 
     print("=" * 72)
     if os.path.exists(args.dryrun_results):
@@ -77,7 +99,17 @@ def main(argv=None):
         print(f"(no dry-run results at {args.dryrun_results}; run "
               "PYTHONPATH=src python -m repro.launch.dryrun --all "
               f"--out {args.dryrun_results})")
+
+    print("=" * 72)
+    print("== Gate summary ==")
+    print(f"{'gate':<34}{'status':<8}{'artifact'}")
+    for gate, status, artifact in gates:
+        print(f"{gate:<34}{status:<8}{artifact}")
+    bad = [g for g in gates if g[1] != "ok"]
     print(f"\ntotal benchmark time: {time.time() - t0:.0f}s")
+    if bad:
+        raise SystemExit(
+            f"{len(bad)} gate(s) failed: " + ", ".join(g[0] for g in bad))
 
 
 if __name__ == "__main__":

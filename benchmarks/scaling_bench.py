@@ -79,6 +79,7 @@ def _worker(args) -> dict:
     import jax
     import numpy as np
 
+    from repro import obs
     from repro.core import engine
     from repro.core.device_graph import prepare_sharded_device_graph
     from repro.core.registry import get_algorithm
@@ -171,8 +172,13 @@ def _worker(args) -> dict:
                               mesh=mesh)
                 sh = run_partitioner("revolver", g, args.k,
                                      chunk_schedule="sharded", **common)
+                # trace the halo leg: the summary (superstep spans, halo
+                # gauges, migrations, recompiles) rides the traffic row so
+                # the artifact records how the numbers were measured
+                tracer = obs.Tracer()
                 ha = run_partitioner("revolver", g, args.k,
-                                     chunk_schedule="halo", **common)
+                                     chunk_schedule="halo", trace=tracer,
+                                     **common)
 
                 cfg = algo.config_cls(k=args.k, chunk_schedule="halo")
                 st = engine.place_state(
@@ -205,6 +211,7 @@ def _worker(args) -> dict:
                     "halo_supersteps_per_s": sps,
                     "labels_bit_identical": bool(
                         np.array_equal(sh.labels, ha.labels)),
+                    "obs": tracer.summary(),
                 })
     return out
 

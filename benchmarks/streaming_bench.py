@@ -16,6 +16,7 @@ import argparse
 import json
 import time
 
+from repro import obs
 from repro.core import run_partitioner
 from repro.graphs import load_dataset
 from repro.streaming import StreamConfig, StreamRunner, stream_from_graph
@@ -38,7 +39,9 @@ def run(*, dataset="WIKI", k=8, scale=0.002, deltas=5, seed=0,
         k=k, refine_max_steps=refine_max_steps, refine_patience=refine_patience,
         sync_every=sync_every, warm_sharpen=warm_sharpen, restream=restream,
     )
-    runner = StreamRunner(g.n, cfg, seed=seed)
+    tracer = obs.Tracer()   # per-delta counters + recompile causes for the
+                            # artifact (dirty blocks, re-pads, merge spans)
+    runner = StreamRunner(g.n, cfg, seed=seed, trace=tracer)
     t0 = time.time()
     for rep in runner.run(stream_from_graph(g, deltas, seed=seed)):
         print(f"delta {rep.delta_idx:2d}  m={rep.m:8,d} (+{rep.added:,}) "
@@ -68,6 +71,7 @@ def run(*, dataset="WIKI", k=8, scale=0.002, deltas=5, seed=0,
                    "per_delta": [vars(r) for r in runner.reports]},
         "quality_ratio": quality_ratio,
         "step_ratio": step_ratio,
+        "obs": tracer.summary(),
     }
     if out:
         with open(out, "w") as f:

@@ -251,6 +251,17 @@ def run(*, quick: bool = False, out: str = "BENCH_superstep.json",
               f"(gate {RESTREAM_GATE}) "
               f"{'PASS' if ratio >= RESTREAM_GATE else 'FAIL'}")
 
+    # observability: a short traced run on the last dataset — the phase /
+    # counter aggregates (superstep spans, migrations, recompiles) ride the
+    # artifact so perf baselines carry their measurement context
+    from repro import obs
+    from repro.core.runner import run_partitioner
+
+    tracer = obs.Tracer()
+    run_partitioner("revolver", g, k, seed=seed, max_steps=steps,
+                    patience=10_000, dg=dg, track_history=False, trace=tracer)
+    results["obs"] = tracer.summary()
+
     results["kernel"] = _kernel_compare(dg, k, iters=3 if quick else 5,
                                         seed=seed)
     kc = results["kernel"]

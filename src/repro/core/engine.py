@@ -63,6 +63,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.core.device_graph import (
     DeviceGraph,
     ShardedDeviceGraph,
@@ -250,9 +251,11 @@ class ShardContext:
         if not self.axis:
             return x
         if self.halo_rows is None:
-            return gather_shards(x, self.axis)
-        return halo_exchange(x, self.halo_rows, self.idx, self.blocks,
-                             self.block_v, self.axis)
+            with obs.annotate("halo-exchange", kind="full-gather"):
+                return gather_shards(x, self.axis)
+        with obs.annotate("halo-exchange", kind="halo"):
+            return halo_exchange(x, self.halo_rows, self.idx, self.blocks,
+                                 self.block_v, self.axis)
 
     def psum(self, x):
         """Sum a shard-local reduction across shards."""
@@ -342,11 +345,16 @@ def _chunk_superstep(algo, cfg, layout, axis, graph, cap, state, step):
     block_v = layout.block_v
     halo = "halo_rows" in graph
     if halo:
-        vert = {f: halo_exchange(state[f], graph["halo_rows"], idx, bps,
-                                 block_v, axis)
-                for f in algo.vertex_fields}
+        with obs.annotate("halo-exchange", kind="halo",
+                          fields=len(algo.vertex_fields)):
+            vert = {f: halo_exchange(state[f], graph["halo_rows"], idx, bps,
+                                     block_v, axis)
+                    for f in algo.vertex_fields}
     elif axis:
-        vert = {f: gather_shards(state[f], axis) for f in algo.vertex_fields}
+        with obs.annotate("halo-exchange", kind="full-gather",
+                          fields=len(algo.vertex_fields)):
+            vert = {f: gather_shards(state[f], axis)
+                    for f in algo.vertex_fields}
     else:
         vert = {f: state[f] for f in algo.vertex_fields}
     key = shard_chain_key(state["key"], axis) if axis else state["key"]
@@ -435,6 +443,13 @@ def _finish(algo, layout, state_in, out, step):
 @partial(jax.jit, static_argnames=("algo", "cfg", "layout"),
          donate_argnames=("donated",))
 def _sequential_superstep(algo, cfg, layout, graph, cap, donated, kept):
+    # this body runs only while XLA traces it — i.e. exactly once per
+    # jit-cache miss — so this records every (re)compile, with its static
+    # shape signature for cause attribution (no-op when tracing is off)
+    obs.record_compile(
+        "superstep", algo=algo.name, schedule="sequential",
+        n_blocks=layout.n_blocks, block_v=layout.block_v,
+        e_max=int(graph["blk_dst"].shape[-1]))
     state = {**donated, **kept}
     step = state.pop("step")
     state.pop("score")
@@ -445,6 +460,13 @@ def _sequential_superstep(algo, cfg, layout, graph, cap, donated, kept):
 @partial(jax.jit, static_argnames=("algo", "cfg", "mesh", "layout"),
          donate_argnames=("donated",))
 def _sharded_superstep(algo, cfg, mesh, layout, graph, cap, donated, kept):
+    obs.record_compile(
+        "superstep", algo=algo.name, schedule=cfg.chunk_schedule,
+        n_shards=layout.n_blocks // layout.blocks_per_shard,
+        n_blocks=layout.n_blocks, block_v=layout.block_v,
+        e_max=int(graph["blk_dst"].shape[-1]),
+        b_max=(int(graph["halo_rows"].shape[-1])
+               if "halo_rows" in graph else None))
     state = {**donated, **kept}
     step = state.pop("step")
     state.pop("score")

@@ -33,6 +33,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import engine
 from repro.core.device_graph import CAPACITY_MODES, DeviceGraph, ShardedDeviceGraph  # noqa: F401  (re-exported API)
 from repro.core.lp import edge_histogram_jnp, spinner_penalty, tau_term
@@ -138,8 +139,9 @@ def _restream_chunk_rule(cfg: RestreamConfig, ctx: engine.ChunkContext,
     active = (rank >= unlock) & ctx.vmask
 
     # greedy objective against the freshest configuration (async view)
-    nbr_labels = labels[ctx.e_dst]
-    hist = edge_histogram_jnp(ctx.e_row, nbr_labels, ctx.e_w, bv, k)
+    with obs.annotate("edge-phase", impl="jnp"):
+        nbr_labels = labels[ctx.e_dst]
+        hist = edge_histogram_jnp(ctx.e_row, nbr_labels, ctx.e_w, bv, k)
     scores = tau_term(hist, ctx.inv_wsum) \
         - cfg.gamma * spinner_penalty(loads, cap)[None, :]
     bump = jax.nn.one_hot(cur, k, dtype=scores.dtype) * 1e-6  # stay on ties

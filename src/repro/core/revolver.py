@@ -34,6 +34,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import engine
 from repro.core.device_graph import CAPACITY_MODES, DeviceGraph, ShardedDeviceGraph  # noqa: F401  (re-exported API)
 from repro.core.la import split_weights_and_signals, weighted_la_update
@@ -233,17 +234,18 @@ def _revolver_chunk_rule(cfg: RevolverConfig, ctx: engine.ChunkContext,
     # returns the per-row (A, N) factorization and the lambda(v) one-hot
     # scatter is finished below once scores exist). The jnp path is the
     # two-scatter-add reference with identical semantics.
-    if fused_op is not None:
-        feasible_f = (p_mig > 0).astype(jnp.float32)
-        hist, w_acc = fused_op(
-            ctx.e_dst[None], ctx.e_row[None], ctx.e_w[None], labels, lam,
-            action[None], feasible_f[None],
-            block_v=bv, k=k, weight_mode=cfg.weight_mode)
-        hist, w_acc = hist[0], w_acc[0]
-    else:
-        nbr_labels = labels[ctx.e_dst]               # async: freshest labels
-        hist = edge_histogram_jnp(ctx.e_row, nbr_labels, ctx.e_w, bv, k)
-        w_acc = None
+    with obs.annotate("edge-phase", impl=cfg.hist_impl):
+        if fused_op is not None:
+            feasible_f = (p_mig > 0).astype(jnp.float32)
+            hist, w_acc = fused_op(
+                ctx.e_dst[None], ctx.e_row[None], ctx.e_w[None], labels, lam,
+                action[None], feasible_f[None],
+                block_v=bv, k=k, weight_mode=cfg.weight_mode)
+            hist, w_acc = hist[0], w_acc[0]
+        else:
+            nbr_labels = labels[ctx.e_dst]           # async: freshest labels
+            hist = edge_histogram_jnp(ctx.e_row, nbr_labels, ctx.e_w, bv, k)
+            w_acc = None
 
     scores = revolver_scores(hist, ctx.inv_wsum, loads, cap)
     lam_chunk = jnp.argmax(scores, axis=-1).astype(jnp.int32)
@@ -269,34 +271,38 @@ def _revolver_chunk_rule(cfg: RevolverConfig, ctx: engine.ChunkContext,
     # The slot written depends on cfg.weight_mode (eq. 13 ambiguity):
     #   self_lambda     -> slot lambda(v) (the literal LHS w(v, lambda(v)))
     #   neighbor_lambda -> slot lambda(u)
-    if w_acc is not None:
-        if cfg.weight_mode == "self_lambda":
-            # finish the kernel's (A, N) packing: every edge of row v lands
-            # in slot lambda(v), feasibility is a per-row scalar
-            contrib = w_acc[:, 0] + jnp.where(
-                p_mig[lam_chunk] > 0, w_acc[:, 1], 0.0)
-            w_raw = jax.nn.one_hot(
-                lam_chunk, k, dtype=jnp.float32) * contrib[:, None]
+    with obs.annotate("edge-phase", impl=cfg.hist_impl, part="weights"):
+        if w_acc is not None:
+            if cfg.weight_mode == "self_lambda":
+                # finish the kernel's (A, N) packing: every edge of row v
+                # lands in slot lambda(v), feasibility is a per-row scalar
+                contrib = w_acc[:, 0] + jnp.where(
+                    p_mig[lam_chunk] > 0, w_acc[:, 1], 0.0)
+                w_raw = jax.nn.one_hot(
+                    lam_chunk, k, dtype=jnp.float32) * contrib[:, None]
+            else:
+                w_raw = w_acc                        # finished in-kernel
         else:
-            w_raw = w_acc                            # finished in-kernel
-    else:
-        lam_nbr = lam[ctx.e_dst]
-        agree = (action[ctx.e_row] == lam_nbr)
-        if cfg.weight_mode == "self_lambda":
-            slot = lam_chunk[ctx.e_row]
-        else:
-            slot = lam_nbr
-        feasible = p_mig[slot] > 0
-        val = jnp.where(agree, ctx.e_w, jnp.where(feasible, 1.0, 0.0))
-        val = jnp.where(ctx.e_w > 0, val, 0.0)  # kill padding slots
-        w_raw = edge_histogram_jnp(ctx.e_row, slot, val, bv, k)
+            lam_nbr = lam[ctx.e_dst]
+            agree = (action[ctx.e_row] == lam_nbr)
+            if cfg.weight_mode == "self_lambda":
+                slot = lam_chunk[ctx.e_row]
+            else:
+                slot = lam_nbr
+            feasible = p_mig[slot] > 0
+            val = jnp.where(agree, ctx.e_w, jnp.where(feasible, 1.0, 0.0))
+            val = jnp.where(ctx.e_w > 0, val, 0.0)  # kill padding slots
+            w_raw = edge_histogram_jnp(ctx.e_row, slot, val, bv, k)
 
     # -- 6./7. reinforcement signals + weighted LA update ---------------------
-    w_norm, r = split_weights_and_signals(w_raw)
-    if la_op is not None:
-        new_probs = la_op(probs, w_norm, r, cfg.alpha, cfg.beta, renorm=cfg.renorm)
-    else:
-        new_probs = weighted_la_update(probs, w_norm, r, cfg.alpha, cfg.beta, renorm=cfg.renorm)
+    with obs.annotate("la-update", impl=cfg.la_impl):
+        w_norm, r = split_weights_and_signals(w_raw)
+        if la_op is not None:
+            new_probs = la_op(probs, w_norm, r, cfg.alpha, cfg.beta,
+                              renorm=cfg.renorm)
+        else:
+            new_probs = weighted_la_update(probs, w_norm, r, cfg.alpha,
+                                           cfg.beta, renorm=cfg.renorm)
 
     return engine.ChunkUpdate(
         vert={"labels": new_lbl, "lam": lam_chunk},

@@ -30,8 +30,10 @@ import time
 from typing import Dict, List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import engine
 from repro.core.device_graph import (
     DeviceGraph,
@@ -76,6 +78,8 @@ def run_convergence_loop(
     on_step=None,
     on_score=None,
     on_drain=None,
+    tracer=None,
+    step0: int = 0,
 ):
     """Drive `step_fn` with the paper's score-stall halting (Section IV-D
     step 9): stop after `patience` consecutive steps whose score improves by
@@ -93,20 +97,31 @@ def run_convergence_loop(
     `run_partitioner`'s history metrics) drain them there, on the same
     cadence as the score fetch.
 
+    `tracer` (a `repro.obs.Tracer`; default no-op) records one "superstep"
+    span per executed step — the *dispatch* cost; the device time of a
+    window accrues to its blocking "device-sync" span — numbered from
+    `step0` (streaming passes a global step offset so spans stay monotonic
+    across deltas). Tracing changes no fetch cadence: the only blocking
+    calls are the same windowed `device_get`s the untraced loop makes.
+
     Returns (state, steps_executed, converged).
     """
+    tracer = tracer if tracer is not None else obs.NULL_TRACER
     prev_score, stall, converged = -np.inf, 0, False
     steps = 0
     pending: list = []
     for step in range(max_steps):
-        state = step_fn(state)
+        with tracer.span("superstep", step=step0 + step):
+            state = step_fn(state)
         steps = step + 1
         pending.append(state.score)
         if on_step is not None:
             on_step(state)
         if len(pending) < sync_every and steps < max_steps:
             continue
-        for score in (float(s) for s in jax.device_get(pending)):
+        with tracer.span("device-sync", steps=len(pending), what="scores"):
+            scores = jax.device_get(pending)
+        for score in (float(s) for s in scores):
             if on_score is not None:
                 on_score(score)
             if converged:
@@ -165,6 +180,7 @@ def run_partitioner(
     init_probs: Optional[np.ndarray] = None,
     init_sharpen: float = 0.0,
     keep_probs: bool = False,
+    trace=None,
     **cfg_kwargs,
 ) -> PartitionResult:
     """Partition `graph` into `k` parts with the named algorithm.
@@ -198,6 +214,15 @@ def run_partitioner(
     the halo, making the exchanged traffic proportional to partition
     quality. Returned labels (and probs) are always in original vertex
     order, whatever the assignment.
+
+    `trace` (a `repro.obs.Tracer`; default off) records the run into a
+    perfetto-exportable trace: a "run-partitioner" root span, layout build,
+    one span per superstep, the windowed device syncs, recompile events,
+    and per-superstep counter series (`local_edges`, `max_norm_load`,
+    `migrations`) that ride the existing `sync_every` drain windows — the
+    traced loop issues exactly the same blocking device fetches as the
+    untraced one, and with tracing off results are bit-identical (see
+    `docs/observability.md`).
     """
     t0 = time.time()
     if sync_every < 1:
@@ -216,36 +241,87 @@ def run_partitioner(
             "'sharded'/'halo'")
     if static and cfg_kwargs:
         raise TypeError(f"{algo!r} runs no supersteps; it takes no config kwargs")
-    if sharded:
-        halo = schedule == "halo"
-        if mesh is None and isinstance(dg, ShardedDeviceGraph):
-            mesh = dg.mesh
-        if mesh is None:
-            from repro.launch.mesh import make_blocks_mesh
+    tracer = trace if trace is not None else obs.NULL_TRACER
+    with obs.use(tracer), \
+            tracer.span("run-partitioner", algo=algo, k=k,
+                        schedule=schedule or "sequential",
+                        n=graph.n, m=graph.m):
+        result = _run_partitioner_traced(
+            tracer, algorithm, static, schedule, sharded,
+            algo, graph, k, t0,
+            seed=seed, n_blocks=n_blocks, max_steps=max_steps,
+            track_history=track_history, dg=dg, mesh=mesh,
+            assignment=assignment, halo_threshold=halo_threshold,
+            sync_every=sync_every, init_labels=init_labels,
+            init_probs=init_probs, init_sharpen=init_sharpen,
+            keep_probs=keep_probs, cfg_kwargs=cfg_kwargs)
+    if tracer.enabled:
+        # run manifest: trace_report --validate checks one superstep span
+        # per executed step against this
+        tracer.meta.setdefault("runs", []).append({
+            "algo": algo, "k": k, "schedule": schedule or "sequential",
+            "steps": result.steps})
+    return result
 
-            mesh = make_blocks_mesh()
-        if dg is None:
-            dg = prepare_sharded_device_graph(
-                graph, mesh, n_blocks=n_blocks, assignment=assignment,
-                halo=halo, halo_threshold=halo_threshold)
-        elif not isinstance(dg, ShardedDeviceGraph):
-            dg = shard_device_graph(dg, mesh, assignment=assignment,
-                                    halo=halo, halo_threshold=halo_threshold)
+
+def _run_partitioner_traced(
+    tracer, algorithm, static, schedule, sharded,
+    algo: str, graph: Graph, k: int, t0: float, *,
+    seed, n_blocks, max_steps, track_history, dg, mesh, assignment,
+    halo_threshold, sync_every, init_labels, init_probs, init_sharpen,
+    keep_probs, cfg_kwargs,
+) -> PartitionResult:
+    """Body of `run_partitioner`, running under `obs.use(tracer)` inside the
+    root span (split out so the traced scope covers every early return)."""
+    with tracer.span("prepare-layout", schedule=schedule or "sequential"):
+        if sharded:
+            halo = schedule == "halo"
+            if mesh is None and isinstance(dg, ShardedDeviceGraph):
+                mesh = dg.mesh
+            if mesh is None:
+                from repro.launch.mesh import make_blocks_mesh
+
+                mesh = make_blocks_mesh()
+            if dg is None:
+                dg = prepare_sharded_device_graph(
+                    graph, mesh, n_blocks=n_blocks, assignment=assignment,
+                    halo=halo, halo_threshold=halo_threshold)
+            elif not isinstance(dg, ShardedDeviceGraph):
+                dg = shard_device_graph(dg, mesh, assignment=assignment,
+                                        halo=halo, halo_threshold=halo_threshold)
+            else:
+                if not (isinstance(assignment, str)
+                        and assignment == "contiguous"):
+                    # a placed layout's assignment is baked into its storage
+                    # order — silently running the contiguous layout here would
+                    # fake locality measurements
+                    raise ValueError(
+                        "assignment cannot be applied to a pre-built "
+                        "ShardedDeviceGraph; pass assignment= to "
+                        "shard_device_graph / prepare_sharded_device_graph "
+                        "when building the layout")
+                if halo and dg.halo is None:
+                    dg = attach_halo(dg, halo_threshold)
+        elif dg is None:
+            dg = prepare_device_graph(graph, n_blocks=n_blocks)
+    if tracer.enabled and sharded:
+        # static per-run exchange gauges from the precomputed plan — what
+        # each superstep's gather moves, without touching the device
+        n_fields = 1 if static else len(algorithm.vertex_fields)
+        if dg.halo is not None:
+            spec = dg.halo
+            tracer.counter("halo_b_max", spec.b_max)
+            tracer.counter("halo_coverage", spec.coverage)
+            tracer.counter(
+                "gathered_bytes_halo",
+                spec.gathered_elems_per_device() * 4 * n_fields)
+            tracer.counter(
+                "gathered_bytes_full",
+                spec.full_gather_elems_per_device() * 4 * n_fields)
         else:
-            if not (isinstance(assignment, str)
-                    and assignment == "contiguous"):
-                # a placed layout's assignment is baked into its storage
-                # order — silently running the contiguous layout here would
-                # fake locality measurements
-                raise ValueError(
-                    "assignment cannot be applied to a pre-built "
-                    "ShardedDeviceGraph; pass assignment= to "
-                    "shard_device_graph / prepare_sharded_device_graph "
-                    "when building the layout")
-            if halo and dg.halo is None:
-                dg = attach_halo(dg, halo_threshold)
-    elif dg is None:
-        dg = prepare_device_graph(graph, n_blocks=n_blocks)
+            n_shards = int(dg.mesh.devices.size)
+            per_dev = (n_shards - 1) * (dg.n_blocks // n_shards) * dg.block_v
+            tracer.counter("gathered_bytes_full", per_dev * 4 * n_fields)
     key = jax.random.PRNGKey(seed)
 
     if static:
@@ -255,6 +331,9 @@ def run_partitioner(
                                (0, dg.n_pad - graph.n))
         le = float(local_edges(labels, dg.dir_src, dg.dir_dst))
         ml = float(max_normalized_load(labels[: graph.n], dg.deg_out[: graph.n], k))
+        if tracer.enabled:
+            tracer.counter("local_edges", le, step=0)
+            tracer.counter("max_norm_load", ml, step=0)
         return PartitionResult(
             algo=algo, k=k, labels=np.asarray(labels[: graph.n]), steps=0,
             converged=True, local_edges=le, max_norm_load=ml,
@@ -287,14 +366,33 @@ def run_partitioner(
         state = algorithm.init(dg, cfg, key)
     if sharded:
         state = engine.place_state(algorithm, state, dg)
-    step_fn = lambda s: engine.superstep(algorithm, dg, cfg, s)
+    base_step = lambda s: engine.superstep(algorithm, dg, cfg, s)
 
     history: Dict[str, List[float]] = {"local_edges": [], "max_norm_load": [], "score": []}
     # per-step metric arrays stay on device and are drained on the same
-    # sync_every window as the scores — history tracking no longer forces a
-    # host sync per superstep
+    # sync_every window as the scores — neither history tracking nor tracing
+    # forces a host sync per superstep
     pending_le: List[jax.Array] = []
     pending_ml: List[jax.Array] = []
+    pending_mig: List[jax.Array] = []
+    step_ts: List[float] = []    # dispatch timestamp per buffered step, so
+                                 # drained counters are back-dated to the
+                                 # superstep that produced them
+    drained = [0]                # global index of the next drained step
+
+    if tracer.enabled:
+        def step_fn(s):
+            # labels are donated into the superstep — copy *before* dispatch
+            # (the copy is enqueued ahead of the overwrite) to count
+            # migrations as a device-side reduction drained with the window
+            prev = jnp.copy(s.labels)
+            s2 = base_step(s)
+            pending_mig.append(jnp.sum((s2.labels != prev) & dg.vmask))
+            return s2
+    else:
+        step_fn = base_step
+
+    collect = track_history or tracer.enabled
 
     def on_step(s):
         # labels and the dir_*/deg arrays live in the same (possibly
@@ -304,20 +402,40 @@ def run_partitioner(
         # unchanged on contiguous layouts)
         pending_le.append(local_edges(s.labels, dg.dir_src, dg.dir_dst))
         pending_ml.append(max_normalized_load(s.labels, dg.deg_out, k))
+        if tracer.enabled:
+            step_ts.append(tracer.now_us())
 
     def drain_metrics():
-        history["local_edges"].extend(float(x) for x in jax.device_get(pending_le))
-        history["max_norm_load"].extend(float(x) for x in jax.device_get(pending_ml))
+        # one bundled fetch per window, traced or not — the sync-count
+        # contract pinned by tests/test_obs.py
+        with tracer.span("device-sync", steps=len(pending_le), what="metrics"):
+            le_v, ml_v, mig_v = jax.device_get(
+                (pending_le, pending_ml, pending_mig))
+        if track_history:
+            history["local_edges"].extend(float(x) for x in le_v)
+            history["max_norm_load"].extend(float(x) for x in ml_v)
+        if tracer.enabled:
+            for i in range(len(le_v)):
+                step = drained[0] + i
+                ts = step_ts[i] if i < len(step_ts) else None
+                tracer.counter("local_edges", float(le_v[i]), step=step, ts=ts)
+                tracer.counter("max_norm_load", float(ml_v[i]), step=step, ts=ts)
+                if i < len(mig_v):
+                    tracer.counter("migrations", float(mig_v[i]), step=step, ts=ts)
+        drained[0] += len(le_v)
         pending_le.clear()
         pending_ml.clear()
+        pending_mig.clear()
+        step_ts.clear()
 
     state, steps, converged = run_convergence_loop(
         step_fn, state,
         max_steps=cfg.max_steps, patience=cfg.patience, theta=cfg.theta,
         sync_every=sync_every,
-        on_step=on_step if track_history else None,
+        on_step=on_step if collect else None,
         on_score=history["score"].append if track_history else None,
-        on_drain=drain_metrics if track_history else None,
+        on_drain=drain_metrics if collect else None,
+        tracer=tracer,
     )
 
     # final fetch: one device_get for everything still needed. With history
@@ -329,6 +447,9 @@ def run_partitioner(
     fetch = {"labels": vertices_to_original(dg, state.labels)[: graph.n]}
     if track_history and history["local_edges"]:
         le, ml = history["local_edges"][-1], history["max_norm_load"][-1]
+    elif tracer.enabled and tracer.series.get("local_edges"):
+        le = tracer.series["local_edges"][-1][1]
+        ml = tracer.series["max_norm_load"][-1][1]
     else:
         fetch["le"] = local_edges(state.labels, dg.dir_src, dg.dir_dst)
         fetch["ml"] = max_normalized_load(state.labels, dg.deg_out, k)
@@ -336,7 +457,8 @@ def run_partitioner(
         flat = state.probs.reshape(dg.n_pad, cfg.k)
         fetch["probs"] = vertices_to_original(dg, flat).reshape(
             dg.n_blocks, dg.block_v, cfg.k)
-    fetched = jax.device_get(fetch)
+    with tracer.span("device-sync", what="result"):
+        fetched = jax.device_get(fetch)
     if "le" in fetched:
         le, ml = float(fetched["le"]), float(fetched["ml"])
     return PartitionResult(

@@ -23,6 +23,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import engine
 from repro.core.device_graph import CAPACITY_MODES, DeviceGraph, ShardedDeviceGraph  # noqa: F401  (re-exported API)
 from repro.core.lp import edge_histogram_jnp, spinner_scores
@@ -98,9 +99,10 @@ def _spinner_shard_rule(cfg: SpinnerConfig, ctx: engine.ShardContext,
     labels_g = ctx.gather(labels)
 
     # eq. (3) histogram over the local slabs (same edges as the flat arrays)
-    slots = labels_g[ctx.blk_dst.reshape(-1)]
-    hist = edge_histogram_jnp(ctx.local_rows(), slots, ctx.blk_w.reshape(-1),
-                              ctx.local_n, k)
+    with obs.annotate("edge-phase", impl="jnp"):
+        slots = labels_g[ctx.blk_dst.reshape(-1)]
+        hist = edge_histogram_jnp(ctx.local_rows(), slots,
+                                  ctx.blk_w.reshape(-1), ctx.local_n, k)
     scores = spinner_scores(hist, ctx.inv_wsum, loads, cap)
     # prefer the current label on ties (Spinner keeps vertices in place)
     bump = jax.nn.one_hot(labels, k, dtype=scores.dtype) * 1e-6

@@ -41,7 +41,20 @@ def main(argv=None):
                     help="block->shard mapping for sharded/halo schedules")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a perfetto-loadable trace (Chrome trace-event"
+                         " JSON) covering every run to PATH; inspect with "
+                         "tools/trace_report.py or at https://ui.perfetto.dev")
     args = ap.parse_args(argv)
+
+    tracer = None
+    if args.trace:
+        from repro import obs
+
+        tracer = obs.Tracer()
+        tracer.meta["cli"] = {"dataset": args.dataset, "scale": args.scale,
+                              "k": args.k,
+                              "chunk_schedule": args.chunk_schedule}
 
     g = load_dataset(args.dataset, scale=args.scale, seed=args.seed)
     algos = args.algo or list(available_algorithms())
@@ -55,7 +68,7 @@ def main(argv=None):
                 kwargs["assignment"] = args.assignment
         res = run_partitioner(algo, g, args.k, seed=args.seed,
                               max_steps=args.max_steps,
-                              n_blocks=args.n_blocks, **kwargs)
+                              n_blocks=args.n_blocks, trace=tracer, **kwargs)
         row = {"dataset": args.dataset, "algo": algo, "k": args.k,
                "local_edges": round(res.local_edges, 4),
                "max_norm_load": round(res.max_norm_load, 4),
@@ -67,6 +80,11 @@ def main(argv=None):
                   f"steps={row['steps']}")
     if args.json:
         print(json.dumps(rows))
+    if tracer is not None:
+        tracer.save(args.trace)
+        if not args.json:
+            print(f"trace written to {args.trace} "
+                  f"({len(tracer.events)} events)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,22 @@
+"""Observability subsystem: superstep tracing, engine counters, perfetto
+export. See docs/observability.md for the span taxonomy, counter glossary,
+and the overhead contract."""
+from repro.obs.tracer import (
+    NULL_TRACER,
+    NullTracer,
+    Tracer,
+    annotate,
+    current,
+    record_compile,
+    use,
+)
+
+__all__ = [
+    "NULL_TRACER",
+    "NullTracer",
+    "Tracer",
+    "annotate",
+    "current",
+    "record_compile",
+    "use",
+]

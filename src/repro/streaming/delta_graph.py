@@ -265,6 +265,13 @@ class IncrementalDeviceGraph:
     def n(self) -> int:
         return self.inc.n
 
+    @property
+    def b_max_floor(self) -> int:
+        """Monotonic halo width (padded boundary blocks per shard) the jitted
+        halo superstep is compiled for; growth means a recompile
+        (`StreamRunner` attributes it as a "halo-widen" event)."""
+        return self._b_max_floor
+
     def _round_e(self, need: int) -> int:
         return -(-max(need, 1) // self.edge_chunk) * self.edge_chunk
 

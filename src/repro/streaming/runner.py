@@ -33,6 +33,7 @@ the rule itself, so the replay pass would be redundant.)
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from typing import Iterable, List, Optional, Tuple
 
@@ -40,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import engine
 from repro.core.device_graph import vertices_to_original
 from repro.core.halo import DEFAULT_HALO_THRESHOLD
@@ -48,6 +50,8 @@ from repro.core.registry import Algorithm, get_algorithm
 from repro.core.runner import run_convergence_loop
 from repro.streaming.delta_graph import IncrementalDeviceGraph
 from repro.streaming.stream import EdgeDelta
+
+_log = logging.getLogger("repro.streaming")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,8 +124,15 @@ class StreamRunner:
     def __init__(self, n: int, cfg: StreamConfig, *, algo: str = "revolver",
                  seed: int = 0, mesh=None, assignment="contiguous",
                  halo_threshold: float = DEFAULT_HALO_THRESHOLD,
-                 **algo_kwargs):
+                 trace=None, **algo_kwargs):
         self.cfg = cfg
+        # `trace` (a repro.obs.Tracer; default off) records the whole stream:
+        # one "delta" span per ingest with merge/warm-start/superstep children
+        # numbered globally across deltas, per-delta counters, and recompile
+        # events with attributed causes ("e_max-repad" / "halo-widen"); with
+        # tracing off the shape-change recompiles log a one-line warning
+        # instead of passing silently
+        self.tracer = trace if trace is not None else obs.NULL_TRACER
         self.algo = get_algorithm(algo)
         if not isinstance(self.algo, Algorithm):
             raise ValueError(
@@ -185,37 +196,97 @@ class StreamRunner:
         config for this delta only — callers that know the stream's shape
         (e.g. a quiet period ahead, or the initial bulk load) can spend
         their superstep budget unevenly."""
+        tracer = self.tracer
+        with obs.use(tracer), tracer.span("delta", idx=len(self.reports)):
+            try:
+                return self._ingest(delta, max_steps=max_steps,
+                                    patience=patience)
+            finally:
+                # a noted cause no compile consumed (e.g. the repadded layout
+                # hit a still-cached shape) must not mis-attribute a later,
+                # unrelated recompile
+                tracer.clear_recompile_cause()
+
+    def _ingest(
+        self,
+        delta: EdgeDelta,
+        *,
+        max_steps: Optional[int],
+        patience: Optional[int],
+    ) -> DeltaReport:
         t0 = time.time()
         cfg = self.cfg
+        tracer = self.tracer
+        idx = len(self.reports)
+        step0 = self.total_steps   # superstep spans numbered across deltas
         max_steps = cfg.refine_max_steps if max_steps is None else max_steps
         patience = cfg.refine_patience if patience is None else patience
-        dg, info = self.idg.apply(delta)
-        if self.mesh is not None:
-            # arrays are already aligned, permuted, and placed
-            # (IncrementalDeviceGraph owns the mesh and the assignment);
-            # this wraps them with the metadata the sharded/halo schedules
-            # and the label-order conversions need
-            dg = self.idg.as_sharded(halo=self._halo,
-                                     halo_threshold=self._halo_threshold)
+        with tracer.span("merge", idx=idx):
+            dg, info = self.idg.apply(delta)
+            if info.repadded and idx > 0:
+                # shape change -> the jitted refine superstep recompiles on
+                # dispatch; attribute it (or at least say so out loud). The
+                # first delta's "re-pad" is the initial allocation — that
+                # compile is a plain first-compile, not a recompile.
+                tracer.note_recompile_cause("e_max-repad")
+                if not tracer.enabled:
+                    _log.warning(
+                        "delta %d: e_max re-pad to %d recompiles the refine "
+                        "superstep (pass trace= for attributed recompile "
+                        "events)", idx, self.idg.e_max)
+            if self.mesh is not None:
+                # arrays are already aligned, permuted, and placed
+                # (IncrementalDeviceGraph owns the mesh and the assignment);
+                # this wraps them with the metadata the sharded/halo schedules
+                # and the label-order conversions need
+                prev_floor = self.idg.b_max_floor
+                dg = self.idg.as_sharded(halo=self._halo,
+                                         halo_threshold=self._halo_threshold)
+                if self._halo and 0 < prev_floor < self.idg.b_max_floor:
+                    tracer.note_recompile_cause("halo-widen")
+                    if not tracer.enabled:
+                        _log.warning(
+                            "delta %d: halo widened to b_max=%d, recompiling "
+                            "the refine superstep (pass trace= for attributed "
+                            "recompile events)", idx, self.idg.b_max_floor)
+        if tracer.enabled:
+            tracer.counter("delta_m", info.m, step=idx)
+            tracer.counter("delta_added_edges", info.added, step=idx)
+            tracer.counter("delta_deleted_edges", info.deleted, step=idx)
+            tracer.counter("delta_dirty_blocks", info.dirty_blocks, step=idx)
+            if self._halo and getattr(dg, "halo", None) is not None:
+                spec = dg.halo
+                n_fields = len(self.algo.vertex_fields)
+                tracer.counter("halo_b_max", spec.b_max, step=idx)
+                tracer.counter("halo_coverage", spec.coverage, step=idx)
+                tracer.counter(
+                    "gathered_bytes_halo",
+                    spec.gathered_elems_per_device() * 4 * n_fields, step=idx)
+                tracer.counter(
+                    "gathered_bytes_full",
+                    spec.full_gather_elems_per_device() * 4 * n_fields,
+                    step=idx)
 
-        self._key, k_init = jax.random.split(self._key)
-        if self.labels is None:
-            state = self.algo.init(dg, self.rcfg, k_init)
-        elif self.algo.supports_probs:
-            state = self.algo.init_from_labels(
-                dg, self.rcfg, k_init, self.labels, probs=self.probs,
-                prob_sharpen=cfg.warm_sharpen,
-            )
-        else:
-            state = self.algo.init_from_labels(dg, self.rcfg, k_init, self.labels)
-        if self.mesh is not None:
-            state = engine.place_state(self.algo, state, dg)
+        with tracer.span("warm-start", idx=idx, cold=self.labels is None):
+            self._key, k_init = jax.random.split(self._key)
+            if self.labels is None:
+                state = self.algo.init(dg, self.rcfg, k_init)
+            elif self.algo.supports_probs:
+                state = self.algo.init_from_labels(
+                    dg, self.rcfg, k_init, self.labels, probs=self.probs,
+                    prob_sharpen=cfg.warm_sharpen,
+                )
+            else:
+                state = self.algo.init_from_labels(dg, self.rcfg, k_init, self.labels)
+            if self.mesh is not None:
+                state = engine.place_state(self.algo, state, dg)
 
         steps = 0
         if cfg.restream and self.labels is not None:
-            state, replay_steps = self._replay_prioritized(dg, state)
+            state, replay_steps = self._replay_prioritized(dg, state, step0)
             steps += replay_steps
-        state, refine_steps, converged = self._refine(dg, state, max_steps, patience)
+        state, refine_steps, converged = self._refine(
+            dg, state, max_steps, patience, step0 + steps)
         steps += refine_steps
 
         # carried state crosses the delta boundary in original vertex order
@@ -229,6 +300,10 @@ class StreamRunner:
 
         le = float(local_edges(state.labels, dg.dir_src, dg.dir_dst))
         ml = float(max_normalized_load(state.labels, dg.deg_out, cfg.k))
+        if tracer.enabled:
+            tracer.counter("delta_local_edges", le, step=idx)
+            tracer.counter("delta_max_norm_load", ml, step=idx)
+            tracer.counter("delta_steps", steps, step=idx)
         report = DeltaReport(
             delta_idx=len(self.reports),
             m=info.m,
@@ -243,6 +318,13 @@ class StreamRunner:
             wall_s=time.time() - t0,
         )
         self.reports.append(report)
+        if tracer.enabled:
+            # run manifest: trace_report --validate checks one superstep span
+            # per executed step against this
+            tracer.meta.setdefault("runs", []).append({
+                "algo": self.algo.name, "k": cfg.k,
+                "schedule": self.rcfg.chunk_schedule, "delta": idx,
+                "steps": steps})
         return report
 
     def run(self, stream: Iterable[EdgeDelta]) -> List[DeltaReport]:
@@ -253,16 +335,18 @@ class StreamRunner:
     def _superstep(self, dg, state):
         return engine.superstep(self.algo, dg, self.rcfg, state)
 
-    def _refine(self, dg, state, max_steps: int, patience: int):
+    def _refine(self, dg, state, max_steps: int, patience: int,
+                step0: int = 0):
         """Warm refinement via the shared score-stall convergence loop
         (same halting semantics as `run_partitioner`, windowed host sync)."""
         return run_convergence_loop(
             lambda s: self._superstep(dg, s), state,
             max_steps=max_steps, patience=patience, theta=self.rcfg.theta,
             sync_every=self.cfg.sync_every,
+            tracer=self.tracer, step0=step0,
         )
 
-    def _replay_prioritized(self, dg, state) -> Tuple[object, int]:
+    def _replay_prioritized(self, dg, state, step0: int = 0) -> Tuple[object, int]:
         """Restream pass: reset the LA state of high-degree vertices in
         priority-ordered chunks, letting each chunk re-decide before the
         next is released (high-degree-first, per the restreaming paper)."""
@@ -282,6 +366,8 @@ class StreamRunner:
             flat = flat.at[jnp.asarray(chunk)].set(1.0 / cfg.k)
             state = state._replace(probs=flat.reshape(dg.n_blocks, dg.block_v, cfg.k))
             for _ in range(cfg.restream_steps_per_chunk):
-                state = self._superstep(dg, state)
+                with self.tracer.span("superstep", step=step0 + steps,
+                                      replay=True):
+                    state = self._superstep(dg, state)
                 steps += 1
         return state, steps

@@ -1,0 +1,78 @@
+"""Edge cases of the Section V-E quality metrics (`repro.core.metrics`).
+
+These functions run inside the engine's windowed metric drain on padded,
+possibly permuted label arrays, so the edge cases are not hypothetical:
+padded vertices carry zero degree and arbitrary (zeroed) labels, early
+supersteps can leave partitions empty, and synthetic smoke graphs can be
+degenerate (no edges at all).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import (
+    edge_cuts,
+    local_edges,
+    max_normalized_load,
+    partition_loads,
+)
+
+
+def test_partition_loads_sums_to_total_degree():
+    labels = np.array([0, 1, 1, 2, 0], dtype=np.int32)
+    deg = np.array([3, 1, 4, 1, 5], dtype=np.int32)
+    loads = np.asarray(partition_loads(labels, deg, 3))
+    assert loads.tolist() == [8.0, 5.0, 1.0]
+    assert loads.sum() == deg.sum()
+
+
+def test_empty_partition_gets_zero_load():
+    labels = np.array([0, 0, 2, 2], dtype=np.int32)
+    deg = np.ones(4, dtype=np.int32)
+    loads = np.asarray(partition_loads(labels, deg, 4))
+    assert loads.tolist() == [2.0, 0.0, 2.0, 0.0]
+    # balance metric still finite and reflects the imbalance: max load 2
+    # over expected 4/4 = 1
+    assert float(max_normalized_load(labels, deg, 4)) == pytest.approx(2.0)
+
+
+def test_padded_vertices_do_not_count():
+    """Padding rides the [n_pad] arrays with label 0 and degree 0 — it must
+    not tilt partition 0's load or the balance metric."""
+    labels = np.array([1, 2, 3], dtype=np.int32)
+    deg = np.array([2, 2, 2], dtype=np.int32)
+    base = np.asarray(partition_loads(labels, deg, 4))
+    padded_labels = np.concatenate([labels, np.zeros(5, np.int32)])
+    padded_deg = np.concatenate([deg, np.zeros(5, np.int32)])
+    padded = np.asarray(partition_loads(padded_labels, padded_deg, 4))
+    np.testing.assert_array_equal(base, padded)
+    assert float(max_normalized_load(padded_labels, padded_deg, 4)) == \
+        pytest.approx(float(max_normalized_load(labels, deg, 4)))
+
+
+def test_k_larger_than_used_labels():
+    """All vertices in one partition: max load == |E|, expected == |E|/k,
+    so the metric saturates at exactly k."""
+    labels = np.zeros(6, dtype=np.int32)
+    deg = np.ones(6, dtype=np.int32)
+    assert float(max_normalized_load(labels, deg, 8)) == pytest.approx(8.0)
+
+
+def test_zero_total_degree_guard_returns_zero():
+    """A graph with no edges has expected load 0; the epsilon guard must
+    yield 0, not inf/nan."""
+    labels = np.array([0, 1, 2], dtype=np.int32)
+    deg = np.zeros(3, dtype=np.int32)
+    val = float(max_normalized_load(labels, deg, 3))
+    assert val == 0.0
+    assert np.isfinite(val)
+
+
+def test_local_edges_and_cuts_complement():
+    labels = np.array([0, 0, 1, 1], dtype=np.int32)
+    src = np.array([0, 0, 2, 1], dtype=np.int32)
+    dst = np.array([1, 2, 3, 3], dtype=np.int32)
+    le = float(local_edges(labels, src, dst))
+    assert le == pytest.approx(0.5)   # 0-1 and 2-3 internal; 0-2, 1-3 cut
+    assert float(edge_cuts(labels, src, dst)) == pytest.approx(1.0 - le)

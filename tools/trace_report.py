@@ -1,0 +1,169 @@
+#!/usr/bin/env python
+"""Summarize / validate a partitioner trace (Chrome trace-event JSON).
+
+The engine's tracer (``repro.obs``, plumbed via ``run_partitioner(trace=)``,
+``StreamRunner(trace=)``, or ``launch partition --trace PATH``) writes
+perfetto-loadable JSON. This tool reads it back without a browser:
+
+  python tools/trace_report.py trace.json             # phase/counter report
+  python tools/trace_report.py trace.json --validate  # CI well-formedness gate
+
+``--validate`` checks the structural contract the tracer promises:
+
+  * ``traceEvents`` is a list of well-formed events (name/ph/ts; complete
+    "X" events carry a ``dur``);
+  * every run recorded in ``otherData.runs`` is covered: the number of
+    "superstep" spans equals the total executed steps across runs (one span
+    per superstep — none dropped, none duplicated);
+  * counter events carry numeric values.
+
+Exit status is non-zero on validation failure, so CI can gate on it. The
+tool reads only the stdlib — it must work in environments without jax.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+_REQUIRED_KEYS = ("name", "ph", "ts")
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        raise ValueError(f"{path}: not a trace-event JSON object "
+                         "(missing 'traceEvents')")
+    return doc
+
+
+def validate(doc: dict) -> list:
+    """Return a list of problem strings (empty == valid)."""
+    problems = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return ["traceEvents is not a list"]
+    supersteps = 0
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            problems.append(f"event #{i} is not an object")
+            continue
+        missing = [k for k in _REQUIRED_KEYS if k not in ev]
+        if missing:
+            problems.append(f"event #{i} ({ev.get('name', '?')!r}) missing "
+                            f"keys: {missing}")
+            continue
+        if not isinstance(ev["ts"], (int, float)):
+            problems.append(f"event #{i} ({ev['name']!r}) has non-numeric ts")
+        if ev["ph"] == "X":
+            if not isinstance(ev.get("dur"), (int, float)):
+                problems.append(
+                    f"event #{i} ({ev['name']!r}) is a complete span "
+                    "without a numeric dur")
+            if ev["name"] == "superstep":
+                supersteps += 1
+        elif ev["ph"] == "C":
+            value = ev.get("args", {}).get("value")
+            if not isinstance(value, (int, float)):
+                problems.append(
+                    f"event #{i} (counter {ev['name']!r}) has no numeric "
+                    "args.value")
+    runs = doc.get("otherData", {}).get("runs", [])
+    if runs:
+        expected = sum(int(r.get("steps", 0)) for r in runs)
+        if supersteps != expected:
+            problems.append(
+                f"superstep span count {supersteps} != {expected} executed "
+                f"steps recorded across {len(runs)} run(s) in otherData.runs")
+        if expected > 0 and supersteps == 0:
+            problems.append("runs executed supersteps but no superstep "
+                            "spans were recorded")
+    return problems
+
+
+def report(doc: dict) -> str:
+    events = doc["traceEvents"]
+    lines = []
+    spans = defaultdict(lambda: {"count": 0, "total_us": 0.0})
+    counters = defaultdict(list)
+    recompiles = []
+    for ev in events:
+        if not isinstance(ev, dict):
+            continue
+        if ev.get("ph") == "X":
+            agg = spans[ev["name"]]
+            agg["count"] += 1
+            agg["total_us"] += float(ev.get("dur", 0.0))
+        elif ev.get("ph") == "C":
+            counters[ev["name"]].append(
+                float(ev.get("args", {}).get("value", 0.0)))
+        elif ev.get("ph") == "i" and ev.get("name") == "recompile":
+            recompiles.append(ev.get("args", {}))
+
+    runs = doc.get("otherData", {}).get("runs", [])
+    if runs:
+        lines.append("runs:")
+        for r in runs:
+            lines.append("  " + json.dumps(r))
+        lines.append("")
+
+    lines.append(f"{'span':<18}{'count':>8}{'total ms':>12}{'mean ms':>10}")
+    for name in sorted(spans):
+        agg = spans[name]
+        total_ms = agg["total_us"] / 1e3
+        lines.append(f"{name:<18}{agg['count']:>8}{total_ms:>12.3f}"
+                     f"{total_ms / agg['count']:>10.3f}")
+    lines.append("")
+
+    if counters:
+        lines.append(f"{'counter':<24}{'points':>8}{'first':>12}{'last':>12}"
+                     f"{'min':>12}{'max':>12}")
+        for name in sorted(counters):
+            vs = counters[name]
+            lines.append(f"{name:<24}{len(vs):>8}{vs[0]:>12.4g}{vs[-1]:>12.4g}"
+                         f"{min(vs):>12.4g}{max(vs):>12.4g}")
+        lines.append("")
+
+    if recompiles:
+        causes = defaultdict(int)
+        for r in recompiles:
+            causes[r.get("cause", "?")] += 1
+        lines.append("recompiles: " + ", ".join(
+            f"{c}×{n}" for c, n in sorted(causes.items())))
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="trace-event JSON written by --trace / "
+                                  "Tracer.save")
+    ap.add_argument("--validate", action="store_true",
+                    help="check structural invariants instead of printing a "
+                         "report; non-zero exit on failure")
+    args = ap.parse_args(argv)
+    try:
+        doc = load(args.trace)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"INVALID: {e}", file=sys.stderr)
+        return 2
+    if args.validate:
+        problems = validate(doc)
+        if problems:
+            print(f"INVALID: {args.trace}", file=sys.stderr)
+            for p in problems:
+                print(f"  - {p}", file=sys.stderr)
+            return 1
+        n_spans = sum(1 for e in doc["traceEvents"]
+                      if isinstance(e, dict) and e.get("ph") == "X")
+        print(f"OK: {args.trace} — {len(doc['traceEvents'])} events, "
+              f"{n_spans} spans, {len(doc.get('otherData', {}).get('runs', []))}"
+              " run(s)")
+        return 0
+    print(report(doc))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
