@@ -73,7 +73,9 @@ def main(argv=None):
     if bench is not None:
         for gate, ok in (("superstep kernel parity", bench["meta"]["parity_ok"]),
                          ("restream-vs-revolver quality",
-                          bench["meta"]["quality_ok"])):
+                          bench["meta"]["quality_ok"]),
+                         ("checkpoint overhead <=5%",
+                          bench["meta"]["checkpoint_ok"])):
             gates.append((gate, "ok" if ok else "FAIL", "BENCH_superstep.json"))
 
     scaling = _section("Sharded superstep scaling (1/2/4/8 devices + quality "

@@ -7,7 +7,7 @@ independent ``edge_histogram`` launches, and writes everything to
 ``BENCH_superstep.json`` so later PRs have a measured baseline to hold
 against.
 
-Three hard gates (process exits nonzero on failure — the CI regression check):
+Four hard gates (process exits nonzero on failure — the CI regression check):
   * superstep parity — ``hist_impl="pallas"`` must reproduce the
     ``"jnp"`` partition at fixed seed within the score tolerance;
   * kernel parity — the fused kernel's histograms must match the two-call
@@ -15,7 +15,10 @@ Three hard gates (process exits nonzero on failure — the CI regression check):
   * algorithm quality — every engine algorithm in the registry is run at a
     fixed step budget against the hash baseline, and the restream rule's
     edge locality must stay within ``RESTREAM_GATE`` (0.90) of revolver's
-    (the third-partitioner acceptance bar; see core/README.md).
+    (the third-partitioner acceptance bar; see core/README.md);
+  * checkpoint overhead — drain-window checkpointing must keep
+    ``CHECKPOINT_GATE`` (0.95) of the plain steps/s and leave the final
+    labels bit-identical (docs/fault-tolerance.md).
 
 On this CPU container the Pallas paths execute in interpret mode, so their
 wall-clock is a harness/correctness sanity check, not TPU perf (see
@@ -29,7 +32,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import shutil
 import sys
+import tempfile
 import time
 
 import jax
@@ -44,6 +50,7 @@ from repro.utils.provenance import bench_provenance
 IMPLS = ("jnp", "pallas")
 PARITY_TOL = 1e-5
 RESTREAM_GATE = 0.90   # restream edge locality vs revolver, fixed budget
+CHECKPOINT_GATE = 0.95  # steps/s with checkpointing on vs off (<=5% overhead)
 
 
 def _algo_quality(g, dg, k: int, *, steps: int, seed: int) -> list[dict]:
@@ -73,6 +80,60 @@ def _algo_quality(g, dg, k: int, *, steps: int, seed: int) -> list[dict]:
         row["restream_vs_revolver"] = ratio
         row["pass"] = bool(ratio >= RESTREAM_GATE)
     return rows
+
+
+def _checkpoint_overhead(k: int, *, steps: int, seed: int,
+                         scale: float = 4e-3, trials: int = 4) -> dict:
+    """Steps/s with drain-window checkpointing on vs off (the crash-safety
+    cost; see docs/fault-tolerance.md). The snapshot rides the existing
+    sync_every fetch and the disk write is async, so the gate is tight:
+    checkpointing must keep >= CHECKPOINT_GATE of the plain throughput.
+    Also asserts the two runs' labels are bit-identical — checkpointing
+    must observe the trajectory, never perturb it.
+
+    Measured on a dedicated graph large enough that supersteps are
+    compute-bound (the fixed per-save host cost is meaningless against a
+    dispatch-bound toy loop), best-of-N interleaved trials to shrug off
+    scheduler noise on shared CI machines."""
+    from repro.core.device_graph import prepare_device_graph
+    from repro.core.runner import run_partitioner
+
+    g = load_dataset("WIKI", scale=scale, seed=seed)
+    dg = prepare_device_graph(g, n_blocks=8)
+    common = dict(seed=seed, max_steps=steps, patience=10_000, dg=dg,
+                  track_history=False, sync_every=4)
+    run_partitioner("revolver", g, k, **common)              # compile + warm
+    sps_off = sps_on = 0.0
+    off = on = None
+    n_ckpts = 0
+    for _ in range(trials):
+        off = run_partitioner("revolver", g, k, **common)
+        td = tempfile.mkdtemp(prefix="bench_ckpt_")
+        try:
+            on = run_partitioner("revolver", g, k, checkpoint_dir=td,
+                                 checkpoint_every=4, **common)
+            n_ckpts = len([d for d in os.listdir(td)
+                           if d.startswith("step_") and not d.endswith(".tmp")])
+        finally:
+            shutil.rmtree(td, ignore_errors=True)
+        sps_off = max(sps_off, off.steps / max(off.wall_s, 1e-9))
+        sps_on = max(sps_on, on.steps / max(on.wall_s, 1e-9))
+    labels_eq = bool(np.array_equal(off.labels, on.labels))
+    ratio = sps_on / max(sps_off, 1e-9)
+    return {
+        "n": g.n,
+        "m": g.m,
+        "steps": steps,
+        "trials": trials,
+        "checkpoint_every": 4,
+        "checkpoints_written": n_ckpts,
+        "supersteps_per_s_off": sps_off,
+        "supersteps_per_s_on": sps_on,
+        "overhead_ratio": ratio,
+        "labels_bit_identical": labels_eq,
+        "gate": CHECKPOINT_GATE,
+        "pass": bool(ratio >= CHECKPOINT_GATE and labels_eq),
+    }
 
 
 def _time_supersteps(dg, cfg, *, steps: int, seed: int = 0) -> float:
@@ -200,11 +261,13 @@ def run(*, quick: bool = False, out: str = "BENCH_superstep.json",
             "steps_timed": steps,
             "quality_steps": quality_steps,
             "restream_gate": RESTREAM_GATE,
+            "checkpoint_gate": CHECKPOINT_GATE,
         },
         "superstep": [],
         "kernel": None,
         "parity": [],
         "algos": [],
+        "checkpoint": None,
     }
 
     print(f"{'dataset':8s} {'hist':7s} {'la':7s} {'supersteps/s':>12s} "
@@ -270,13 +333,24 @@ def run(*, quick: bool = False, out: str = "BENCH_superstep.json",
           f"err={kc['max_abs_err']:.1e} "
           f"{'PASS' if kc['pass'] else 'FAIL'}")
 
+    results["checkpoint"] = _checkpoint_overhead(
+        k, steps=12 if quick else 24, seed=seed)
+    ck = results["checkpoint"]
+    print(f"ckpt    off={ck['supersteps_per_s_off']:.2f}/s "
+          f"on={ck['supersteps_per_s_on']:.2f}/s "
+          f"ratio={ck['overhead_ratio']:.3f} (gate {CHECKPOINT_GATE}) "
+          f"bit_identical={ck['labels_bit_identical']} "
+          f"{'PASS' if ck['pass'] else 'FAIL'}")
+
     parity_ok = (all(p["pass"] for p in results["parity"])
                  and results["kernel"]["pass"])
     quality_ok = bool(results["algos"]) and all(
         row["pass"] for row in results["algos"])
+    checkpoint_ok = results["checkpoint"]["pass"]
     results["meta"]["parity_ok"] = parity_ok
     results["meta"]["quality_ok"] = quality_ok
-    ok = parity_ok and quality_ok
+    results["meta"]["checkpoint_ok"] = checkpoint_ok
+    ok = parity_ok and quality_ok and checkpoint_ok
     if out:
         with open(out, "w") as f:
             json.dump(results, f, indent=2)
@@ -285,6 +359,9 @@ def run(*, quick: bool = False, out: str = "BENCH_superstep.json",
         print("KERNEL PARITY REGRESSION", file=sys.stderr)
     if not quality_ok:
         print(f"RESTREAM QUALITY REGRESSION (gate {RESTREAM_GATE})",
+              file=sys.stderr)
+    if not checkpoint_ok:
+        print(f"CHECKPOINT OVERHEAD REGRESSION (gate {CHECKPOINT_GATE})",
               file=sys.stderr)
     return results
 
@@ -304,7 +381,8 @@ def main(argv=None) -> int:
                   scale=args.scale, k=args.k, n_blocks=args.n_blocks,
                   steps=args.steps, seed=args.seed)
     return 0 if (results["meta"]["parity_ok"]
-                 and results["meta"]["quality_ok"]) else 1
+                 and results["meta"]["quality_ok"]
+                 and results["meta"]["checkpoint_ok"]) else 1
 
 
 if __name__ == "__main__":

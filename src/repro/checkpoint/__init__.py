@@ -1,3 +1,20 @@
 """Sharded checkpointing (npz + manifest, async, elastic re-shard)."""
-from repro.checkpoint.store import latest_step, restore_checkpoint, save_checkpoint
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+from repro.checkpoint.store import (
+    CheckpointError,
+    all_steps,
+    latest_step,
+    load_checkpoint_arrays,
+    load_manifest,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = [
+    "CheckpointError",
+    "all_steps",
+    "latest_step",
+    "load_checkpoint_arrays",
+    "load_manifest",
+    "restore_checkpoint",
+    "save_checkpoint",
+]

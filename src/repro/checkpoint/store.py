@@ -2,10 +2,19 @@
 elastic restore (re-shard onto a different mesh).
 
 Layout:  <dir>/step_<n>/arrays.npz  +  <dir>/step_<n>/manifest.json
-Writes go to a tmp dir renamed into place, so a checkpoint directory is
-either absent or complete — a crash mid-save can't corrupt resume.
-Restore loads host arrays and ``jax.device_put``s them with the target
-sharding, which is exactly the elastic mesh-to-mesh re-shard path.
+Writes go to a tmp dir renamed into place after the payload and manifest
+are fsynced, so a checkpoint directory is either absent or complete and
+durable — a crash mid-save leaves only a ``.tmp`` dir that `latest_step`
+ignores. Restore loads host arrays and ``jax.device_put``s them with the
+target sharding, which is exactly the elastic mesh-to-mesh re-shard path.
+
+The manifest carries an opaque ``meta`` dict (JSON) alongside the array
+inventory; runners use it for host-side loop state (score-stall counters,
+step counts) that must survive a crash with the device state.
+
+Fault-injection points (`repro.faults`, no-ops unless a plan is active):
+``save-payload`` after the npz write, ``save`` right before the atomic
+rename — the two torn-write shapes a resume must tolerate.
 """
 from __future__ import annotations
 
@@ -13,9 +22,20 @@ import json
 import os
 import shutil
 import threading
+from typing import List, Optional
 
 import jax
 import numpy as np
+
+from repro import faults
+
+_FORMAT = 1
+
+
+class CheckpointError(ValueError):
+    """An on-disk checkpoint exists but cannot be read back (corrupt or
+    truncated payload, unreadable manifest). Subclasses ValueError so
+    callers catching the store's shape/dtype errors catch this too."""
 
 
 def _flatten(tree):
@@ -28,59 +48,179 @@ def _flatten(tree):
     return out, treedef
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree, *, async_save=False):
-    """Returns a handle with .wait() (no-op handle when synchronous)."""
+def _fsync_dir(path: str):
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+class Handle:
+    """Async-save handle. `wait()` joins the writer thread and re-raises
+    anything it raised — a swallowed ENOSPC is a checkpoint that does not
+    exist when the resume needs it."""
+
+    def __init__(self, thread: Optional[threading.Thread] = None):
+        self._thread = thread
+        self._exc: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, *, async_save=False,
+                    meta: Optional[dict] = None,
+                    keep: Optional[int] = None) -> Handle:
+    """Write one checkpoint; returns a `Handle` (`wait()` is a no-op when
+    synchronous, and re-raises writer-thread failures when async).
+
+    The device->host snapshot happens *before* this returns (one bundled
+    ``jax.device_get``; leaves that are already host numpy arrays are
+    taken as-is), so async saves are safe against donated buffers being
+    overwritten by the next superstep. ``meta`` is stored in the manifest;
+    ``keep`` prunes all but the newest N complete checkpoints after the
+    rename (crash-safe: pruning only ever removes older, complete steps).
+    """
     flat, _ = _flatten(tree)
-    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    keys = list(flat)
+    vals = [flat[k] for k in keys]
+    if any(isinstance(v, jax.Array) for v in vals):
+        vals = jax.device_get(vals)
+    host = {k: np.asarray(v) for k, v in zip(keys, vals)}
 
     def _write():
+        os.makedirs(ckpt_dir, exist_ok=True)
         final = os.path.join(ckpt_dir, f"step_{step:08d}")
         tmp = final + ".tmp"
-        os.makedirs(tmp, exist_ok=True)
-        np.savez(os.path.join(tmp, "arrays.npz"),
-                 **{k.replace("/", "::"): v for k, v in host.items()})
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+            np.savez(f, **{k.replace("/", "::"): v for k, v in host.items()})
+            f.flush()
+            os.fsync(f.fileno())
+        faults.fire("save-payload")
         manifest = {
+            "format": _FORMAT,
             "step": step,
             "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                      for k, v in host.items()},
+            "meta": meta or {},
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_dir(tmp)
+        faults.fire("save")
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
+        _fsync_dir(ckpt_dir)
+        if keep is not None and keep > 0:
+            for old in all_steps(ckpt_dir)[:-keep]:
+                shutil.rmtree(os.path.join(ckpt_dir, f"step_{old:08d}"),
+                              ignore_errors=True)
 
+    handle = Handle()
     if async_save:
-        t = threading.Thread(target=_write)
-        t.start()
+        def _guarded():
+            try:
+                _write()
+            except BaseException as e:   # re-raised by Handle.wait
+                handle._exc = e
 
-        class Handle:
-            def wait(self):
-                t.join()
-        return Handle()
+        handle._thread = threading.Thread(target=_guarded, daemon=True)
+        handle._thread.start()
+        return handle
     _write()
-
-    class Done:
-        def wait(self):
-            pass
-    return Done()
+    return handle
 
 
-def latest_step(ckpt_dir: str) -> int | None:
+def _manifest_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")
+
+
+def load_manifest(ckpt_dir: str, step: int) -> dict:
+    """Read one checkpoint's manifest; `CheckpointError` if unreadable."""
+    try:
+        with open(_manifest_path(ckpt_dir, step)) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointError(
+            f"unreadable manifest for step {step} in {ckpt_dir}: {e}") from e
+    if "step" not in manifest or "keys" not in manifest:
+        raise CheckpointError(
+            f"manifest for step {step} in {ckpt_dir} lacks required keys")
+    return manifest
+
+
+def _valid(ckpt_dir: str, step: int) -> bool:
+    try:
+        load_manifest(ckpt_dir, step)
+        return True
+    except CheckpointError:
+        return False
+
+
+def all_steps(ckpt_dir: str) -> List[int]:
+    """Sorted steps of *complete* checkpoints: a ``step_<n>`` dir counts
+    only if its manifest exists and parses — half-written ``.tmp`` dirs and
+    directories with a missing/corrupt manifest are skipped, never
+    returned as a resume candidate."""
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_") and not d.endswith(".tmp")]
-    return max(steps) if steps else None
+        return []
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if not d.startswith("step_") or d.endswith(".tmp"):
+            continue
+        try:
+            step = int(d.split("_")[1])
+        except (IndexError, ValueError):
+            continue
+        if _valid(ckpt_dir, step):
+            steps.append(step)
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def load_checkpoint_arrays(ckpt_dir: str, step: int):
+    """Raw host-side load: ``(arrays, manifest)`` with arrays keyed by the
+    flattened tree path. No ``like`` structure needed — the entry point for
+    callers whose array shapes are data-dependent (the streaming CSR state)
+    and for tools inspecting a checkpoint directly."""
+    manifest = load_manifest(ckpt_dir, step)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "arrays.npz")
+    try:
+        with np.load(path) as z:
+            arrays = {k.replace("::", "/"): z[k] for k in z.files}
+    except Exception as e:
+        raise CheckpointError(
+            f"corrupt checkpoint payload for step {step} in {ckpt_dir}: "
+            f"{e}") from e
+    missing = set(manifest["keys"]) - set(arrays)
+    if missing:
+        raise CheckpointError(
+            f"checkpoint payload for step {step} lacks arrays listed in its "
+            f"manifest: {sorted(missing)[:5]} ...")
+    return arrays, manifest
 
 
 def restore_checkpoint(ckpt_dir: str, step: int, like, *, shardings=None):
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs). ``shardings``: matching pytree of NamedSharding for
     elastic placement onto the current mesh; None = default device."""
-    path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with np.load(os.path.join(path, "arrays.npz")) as z:
-        host = {k.replace("::", "/"): z[k] for k in z.files}
+    host, _ = load_checkpoint_arrays(ckpt_dir, step)
     flat_like, treedef = _flatten(like)
     missing = set(flat_like) - set(host)
     if missing:

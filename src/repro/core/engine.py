@@ -554,6 +554,19 @@ def place_state(algo: Algorithm, state, sdg: ShardedDeviceGraph):
     return algo.state_cls(**placed)
 
 
+def state_shardings(algo: Algorithm, state, mesh):
+    """`NamedSharding`s for every state field per the algorithm's declared
+    specs — the elastic-restore companion of `place_state`: hand them to
+    `repro.checkpoint.restore_checkpoint(shardings=)` and a checkpoint
+    lands directly on the current mesh, whatever mesh wrote it. Accepts a
+    state NamedTuple (or pytree dict) of arrays or ShapeDtypeStructs and
+    returns the matching structure of shardings."""
+    items = (state._asdict() if hasattr(state, "_asdict") else state).items()
+    made = {name: NamedSharding(mesh, _state_spec(algo, name, value))
+            for name, value in items}
+    return algo.state_cls(**made) if hasattr(state, "_asdict") else made
+
+
 # ---------------------------------------------------------------------------
 # shared warm-start helpers (every rule's init_from_labels uses these)
 # ---------------------------------------------------------------------------
@@ -594,6 +607,7 @@ __all__ = [
     "halo_exchange",
     "superstep",
     "place_state",
+    "state_shardings",
     "warm_labels",
     "loads_from_labels",
 ]

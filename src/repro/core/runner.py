@@ -26,6 +26,7 @@ exactly.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from typing import Dict, List, Optional
 
@@ -33,7 +34,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import obs
+from repro import faults, obs
+from repro.checkpoint import store as ckpt_store
 from repro.core import engine
 from repro.core.device_graph import (
     DeviceGraph,
@@ -48,6 +50,15 @@ from repro.core.halo import DEFAULT_HALO_THRESHOLD
 from repro.core.metrics import local_edges, max_normalized_load
 from repro.core.registry import StaticAlgorithm, get_algorithm
 from repro.graphs.csr import Graph
+
+_log = logging.getLogger("repro.core.runner")
+
+
+class PartitionStateError(RuntimeError):
+    """The drain-window state guard found corrupt partitioner state
+    (non-finite LA probabilities or out-of-range labels) under the
+    ``guard="raise"`` policy, or a recovery policy could not be applied
+    (e.g. rollback with no usable checkpoint)."""
 
 
 @dataclasses.dataclass
@@ -65,6 +76,10 @@ class PartitionResult:
                                         # (probs-carrying algorithms with
                                         # keep_probs=True only; feeds warm
                                         # restarts)
+    resumed_from: int = 0               # global superstep of the checkpoint
+                                        # this run resumed from (0 = fresh);
+                                        # `steps` counts from superstep 0
+                                        # either way
 
 
 def run_convergence_loop(
@@ -80,6 +95,8 @@ def run_convergence_loop(
     on_drain=None,
     tracer=None,
     step0: int = 0,
+    prev_score: float = -np.inf,
+    stall: int = 0,
 ):
     """Drive `step_fn` with the paper's score-stall halting (Section IV-D
     step 9): stop after `patience` consecutive steps whose score improves by
@@ -92,10 +109,26 @@ def run_convergence_loop(
     `on_score(float)` fires for every drained score, in step order — every
     *executed* step's score is drained, including the up-to-`sync_every - 1`
     steps past the detected convergence point, so history lists stay aligned
-    with `steps_executed`. `on_drain()` fires once per fetched window, after
-    its scores; callers buffering their own per-step device arrays (e.g.
-    `run_partitioner`'s history metrics) drain them there, on the same
-    cadence as the score fetch.
+    with `steps_executed`. `on_drain(state, steps, prev_score, stall)` fires
+    once per fetched window, after its scores; callers buffering their own
+    per-step device arrays (e.g. `run_partitioner`'s history metrics) drain
+    them there, on the same cadence as the score fetch. It receives the
+    loop's halting state so a checkpoint written at the drain can resume
+    exactly; it may return a dict with any of ``state`` / ``prev_score`` /
+    ``stall`` to *replace* the loop's state (the guard's rollback/reinit
+    recovery path — a replacement also clears a convergence detected in the
+    corrupted window).
+
+    `prev_score` / `stall` seed the halting state — a resumed run passes the
+    values its checkpoint recorded so the stall counter picks up exactly
+    where the killed run left it; `step0` likewise offsets the superstep
+    numbering (spans, fault-injection points) to the global step index.
+
+    Fault injection (`repro.faults`): after each dispatched superstep the
+    loop checks the ``superstep`` point with the global step index — a kill
+    plan SIGKILLs here, a poison plan corrupts the state device-side (for
+    guard testing). No-ops (one early-returning call) when no plan is
+    active.
 
     `tracer` (a `repro.obs.Tracer`; default no-op) records one "superstep"
     span per executed step — the *dispatch* cost; the device time of a
@@ -107,12 +140,15 @@ def run_convergence_loop(
     Returns (state, steps_executed, converged).
     """
     tracer = tracer if tracer is not None else obs.NULL_TRACER
-    prev_score, stall, converged = -np.inf, 0, False
+    converged = False
     steps = 0
     pending: list = []
     for step in range(max_steps):
         with tracer.span("superstep", step=step0 + step):
             state = step_fn(state)
+        act = faults.fire("superstep", step0 + step)
+        if act is not None:
+            state = faults.poison(state, act)
         steps = step + 1
         pending.append(state.score)
         if on_step is not None:
@@ -135,7 +171,12 @@ def run_convergence_loop(
             prev_score = score
         pending = []
         if on_drain is not None:
-            on_drain()
+            replace = on_drain(state, steps, prev_score, stall)
+            if replace is not None:
+                state = replace.get("state", state)
+                prev_score = replace.get("prev_score", prev_score)
+                stall = replace.get("stall", stall)
+                converged = False   # scores from corrupt state don't count
         if converged:
             break
     return state, steps, converged
@@ -162,6 +203,180 @@ def _make_cfg(cls, k: int, max_steps: Optional[int], cfg_kwargs: dict):
     return cfg
 
 
+# ---------------------------------------------------------------------------
+# crash safety: checkpointed resume (see docs/fault-tolerance.md)
+# ---------------------------------------------------------------------------
+def _is_vertex_field(algo, dg, name, value) -> bool:
+    return ((name in algo.vertex_fields or name in algo.replicated_fields)
+            and getattr(value, "ndim", 0) >= 1
+            and value.shape[0] == dg.n_pad)
+
+
+def _state_to_original(algo, state, dg) -> dict:
+    """Checkpoint view of a state: every per-vertex / per-block field
+    gathered into original vertex order (identity on unpermuted layouts,
+    a device-side gather otherwise — enqueued at the drain so the fetch
+    bundles with the window's metrics). A checkpoint is therefore
+    layout-independent: restorable onto a different device count or
+    block->shard assignment of the same graph."""
+    if getattr(dg, "o2s", None) is None:
+        # unpermuted layout: every conversion below is an identity
+        # reshape/gather round-trip — skip the dispatch overhead entirely
+        return dict(state._asdict())
+    out = {}
+    for name, v in state._asdict().items():
+        if name in algo.block_fields:
+            flat = v.reshape((dg.n_pad,) + v.shape[2:])
+            out[name] = vertices_to_original(dg, flat).reshape(v.shape)
+        elif _is_vertex_field(algo, dg, name, v):
+            out[name] = vertices_to_original(dg, v)
+        else:
+            out[name] = v
+    return out
+
+
+def _state_from_original(algo, tree: dict, dg):
+    """Inverse of `_state_to_original`: arrays in original vertex order ->
+    a state NamedTuple in the layout's storage order (scatter via ``s2o``;
+    identity on unpermuted layouts)."""
+    s2o = getattr(dg, "s2o", None)
+    out = {}
+    for name, v in tree.items():
+        if s2o is not None and name in algo.block_fields:
+            flat = np.asarray(v).reshape((dg.n_pad,) + tuple(v.shape[2:]))
+            out[name] = jnp.asarray(flat[np.asarray(s2o)]).reshape(v.shape)
+        elif s2o is not None and _is_vertex_field(algo, dg, name, v):
+            out[name] = jnp.asarray(np.asarray(v)[np.asarray(s2o)])
+        else:
+            out[name] = v
+    return algo.state_cls(**out)
+
+
+class _CheckpointManager:
+    """Drain-window checkpointing for `run_partitioner`.
+
+    Saves ride the existing ``sync_every`` drain windows: the state's
+    original-order view is enqueued device-side and fetched **in the same
+    bundled `jax.device_get`** as the window's metrics (zero additional
+    blocking device fetches — the PR-6 sync-count contract), then written
+    by an async writer thread while the loop keeps dispatching. One writer
+    is in flight at a time; waiting on the previous handle before the next
+    save (and at run end) both orders the atomic renames and re-raises
+    write failures instead of swallowing them.
+    """
+
+    def __init__(self, ckpt_dir, every, keep, algorithm, dg, sharded,
+                 meta, tracer):
+        self.dir = ckpt_dir
+        self.every = every
+        self.keep = keep
+        self.algorithm = algorithm
+        self.dg = dg
+        self.sharded = sharded
+        self.meta = meta
+        self.tracer = tracer
+        self.last_saved = 0
+        self.saved = 0
+        self._handles: list = []
+
+    def _reap(self, block: bool = False):
+        """Collect finished writer threads, re-raising any write failure
+        (the satellite contract: a swallowed ENOSPC is a checkpoint that
+        does not exist when the resume needs it). Non-blocking unless
+        `block` — the convergence loop must never stall on an fsync."""
+        alive = []
+        for h in self._handles:
+            if block or h._thread is None or not h._thread.is_alive():
+                h.wait()
+            else:
+                alive.append(h)
+        self._handles = alive
+
+    def busy(self) -> bool:
+        """True when the disk is falling behind (two writes already in
+        flight); the due save is skipped rather than blocking the loop —
+        the next drain window picks it up."""
+        self._reap()
+        return len(self._handles) >= 2
+
+    def due(self, global_steps: int) -> bool:
+        return self.every > 0 and global_steps - self.last_saved >= self.every
+
+    def device_tree(self, state) -> dict:
+        return _state_to_original(self.algorithm, state, self.dg)
+
+    def save(self, global_steps: int, host_tree: dict, prev_score, stall):
+        meta = dict(self.meta, steps=global_steps,
+                    prev_score=float(prev_score), stall=int(stall),
+                    converged=bool(stall >= self.meta.get("patience", 1 << 30)))
+        with self.tracer.span("checkpoint-save", step=global_steps):
+            self._handles.append(ckpt_store.save_checkpoint(
+                self.dir, global_steps, host_tree, async_save=True,
+                meta=meta, keep=self.keep))
+        self.last_saved = global_steps
+        self.saved += 1
+        if self.tracer.enabled:
+            self.tracer.counter("checkpoints_saved", float(self.saved),
+                                step=global_steps)
+
+    def finish(self):
+        self._reap(block=True)
+
+    # -- restore ---------------------------------------------------------- #
+
+    def restore_latest(self, like_state):
+        """Restore the newest usable checkpoint, falling back past corrupt
+        or incompatible ones. Returns ``(state, steps, prev_score, stall,
+        converged)`` or None when no checkpoint is usable."""
+        for step in reversed(ckpt_store.all_steps(self.dir)):
+            try:
+                return self._restore(step, like_state)
+            except (ckpt_store.CheckpointError, ValueError, KeyError) as e:
+                _log.warning(
+                    "checkpoint step %d in %s unusable (%s); trying the "
+                    "previous one", step, self.dir, e)
+        return None
+
+    def _restore(self, step, like_state):
+        manifest = ckpt_store.load_manifest(self.dir, step)
+        meta = manifest.get("meta", {})
+        for field in ("algo", "k", "n", "m"):
+            if field in meta and field in self.meta \
+                    and meta[field] != self.meta[field]:
+                raise ValueError(
+                    f"checkpoint step {step} was written by a different run: "
+                    f"{field}={meta[field]!r} vs this run's "
+                    f"{self.meta[field]!r}")
+        algo, dg = self.algorithm, self.dg
+        like = {name: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                for name, v in like_state._asdict().items()}
+        shardings = None
+        if self.sharded and getattr(dg, "o2s", None) is None:
+            # unpermuted layout: original order == storage order, so the
+            # checkpoint lands directly on the mesh — the store's elastic
+            # re-shard path, whatever device count wrote it
+            shardings = engine.state_shardings(algo, like, dg.mesh)
+        with self.tracer.span("checkpoint-restore", step=step):
+            tree = ckpt_store.restore_checkpoint(self.dir, step, like,
+                                                 shardings=shardings)
+            if shardings is not None:
+                state = algo.state_cls(**tree)
+            else:
+                state = _state_from_original(algo, tree, dg)
+                if self.sharded:
+                    state = engine.place_state(algo, state, dg)
+        if self.tracer.enabled:
+            self.tracer.instant("resumed", step=step)
+        return (state, int(meta.get("steps", step)),
+                float(meta.get("prev_score", -np.inf)),
+                int(meta.get("stall", 0)), bool(meta.get("converged", False)))
+
+
+_GUARD_POLICIES = ("off", "raise", "rollback", "reinit")
+_GUARD_ALIASES = {"rollback-to-last-checkpoint": "rollback",
+                  "reinit-affected-vertices": "reinit"}
+
+
 def run_partitioner(
     algo: str,
     graph: Graph,
@@ -181,6 +396,11 @@ def run_partitioner(
     init_sharpen: float = 0.0,
     keep_probs: bool = False,
     trace=None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 0,
+    resume: bool = False,
+    keep_checkpoints: int = 2,
+    guard: str = "off",
     **cfg_kwargs,
 ) -> PartitionResult:
     """Partition `graph` into `k` parts with the named algorithm.
@@ -223,10 +443,42 @@ def run_partitioner(
     traced loop issues exactly the same blocking device fetches as the
     untraced one, and with tracing off results are bit-identical (see
     `docs/observability.md`).
+
+    Crash safety (see `docs/fault-tolerance.md`): `checkpoint_dir` +
+    `checkpoint_every=N` snapshot the full algorithm state (every state
+    field, in original vertex order, plus the host-side score-stall
+    counters) at the first drain window N or more supersteps after the last
+    save — the state fetch rides the window's existing bundled
+    `jax.device_get` (zero additional blocking fetches) and the disk write
+    is async. `resume=True` restores the newest usable checkpoint (corrupt
+    ones are skipped) and continues; a killed-and-resumed run is
+    bit-identical to an uninterrupted one at the same arguments, including
+    resuming on a different device count (sequential schedule; the sharded
+    trajectory is device-count-specific, so its kill-resume exactness holds
+    at an unchanged count and a count change matches a planned
+    save/restore/continue migration). `keep_checkpoints` bounds the
+    checkpoints kept on disk. `guard` checks state sanity (finite probs,
+    in-range labels) at each drain window: "off" (default) | "raise" |
+    "rollback"/"rollback-to-last-checkpoint" | "reinit"/
+    "reinit-affected-vertices".
     """
     t0 = time.time()
     if sync_every < 1:
         raise ValueError(f"sync_every must be >= 1, got {sync_every}")
+    guard = _GUARD_ALIASES.get(guard, guard)
+    if guard not in _GUARD_POLICIES:
+        raise ValueError(
+            f"unknown guard policy {guard!r}; expected one of "
+            f"{_GUARD_POLICIES} (or a long alias "
+            f"{tuple(_GUARD_ALIASES)})")
+    if checkpoint_every < 0:
+        raise ValueError(
+            f"checkpoint_every must be >= 0, got {checkpoint_every}")
+    if checkpoint_dir is None and (checkpoint_every > 0 or resume):
+        raise ValueError(
+            "checkpoint_every/resume need a checkpoint_dir")
+    if guard == "rollback" and checkpoint_dir is None:
+        raise ValueError("guard='rollback' needs a checkpoint_dir")
     algorithm = get_algorithm(algo)
     static = isinstance(algorithm, StaticAlgorithm)
     schedule = cfg_kwargs.get("chunk_schedule")
@@ -241,6 +493,10 @@ def run_partitioner(
             "'sharded'/'halo'")
     if static and cfg_kwargs:
         raise TypeError(f"{algo!r} runs no supersteps; it takes no config kwargs")
+    if static and (checkpoint_dir is not None or guard != "off"):
+        raise TypeError(
+            f"{algo!r} runs no supersteps; checkpointing and the state guard "
+            "are meaningless")
     tracer = trace if trace is not None else obs.NULL_TRACER
     with obs.use(tracer), \
             tracer.span("run-partitioner", algo=algo, k=k,
@@ -254,13 +510,17 @@ def run_partitioner(
             assignment=assignment, halo_threshold=halo_threshold,
             sync_every=sync_every, init_labels=init_labels,
             init_probs=init_probs, init_sharpen=init_sharpen,
-            keep_probs=keep_probs, cfg_kwargs=cfg_kwargs)
+            keep_probs=keep_probs, checkpoint_dir=checkpoint_dir,
+            checkpoint_every=checkpoint_every, resume=resume,
+            keep_checkpoints=keep_checkpoints, guard=guard,
+            cfg_kwargs=cfg_kwargs)
     if tracer.enabled:
         # run manifest: trace_report --validate checks one superstep span
-        # per executed step against this
+        # per executed step against this (resumed steps ran in an earlier
+        # process — only the steps executed here have spans)
         tracer.meta.setdefault("runs", []).append({
             "algo": algo, "k": k, "schedule": schedule or "sequential",
-            "steps": result.steps})
+            "steps": result.steps - result.resumed_from})
     return result
 
 
@@ -269,7 +529,8 @@ def _run_partitioner_traced(
     algo: str, graph: Graph, k: int, t0: float, *,
     seed, n_blocks, max_steps, track_history, dg, mesh, assignment,
     halo_threshold, sync_every, init_labels, init_probs, init_sharpen,
-    keep_probs, cfg_kwargs,
+    keep_probs, checkpoint_dir, checkpoint_every, resume, keep_checkpoints,
+    guard, cfg_kwargs,
 ) -> PartitionResult:
     """Body of `run_partitioner`, running under `obs.use(tracer)` inside the
     root span (split out so the traced scope covers every early return)."""
@@ -368,6 +629,27 @@ def _run_partitioner_traced(
         state = engine.place_state(algorithm, state, dg)
     base_step = lambda s: engine.superstep(algorithm, dg, cfg, s)
 
+    # ---- crash safety: checkpoint manager + resume -----------------------
+    ckpt = None
+    if checkpoint_dir is not None:
+        run_meta = {"kind": "partition", "algo": algo, "k": k, "n": graph.n,
+                    "m": graph.m, "schedule": schedule or "sequential",
+                    "seed": seed, "sync_every": sync_every,
+                    "patience": cfg.patience}
+        ckpt = _CheckpointManager(checkpoint_dir, checkpoint_every,
+                                  keep_checkpoints, algorithm, dg, sharded,
+                                  run_meta, tracer)
+    start_step, start_prev_score, start_stall = 0, -np.inf, 0
+    resumed_converged = False
+    if resume:
+        restored = ckpt.restore_latest(state)
+        if restored is not None:
+            (state, start_step, start_prev_score, start_stall,
+             resumed_converged) = restored
+            ckpt.last_saved = start_step
+        # no checkpoint yet -> a fresh run (so the same command line works
+        # for the first launch and every relaunch)
+
     history: Dict[str, List[float]] = {"local_edges": [], "max_norm_load": [], "score": []}
     # per-step metric arrays stay on device and are drained on the same
     # sync_every window as the scores — neither history tracking nor tracing
@@ -405,12 +687,25 @@ def _run_partitioner_traced(
         if tracer.enabled:
             step_ts.append(tracer.now_us())
 
-    def drain_metrics():
+    def drain_metrics(dstate, loop_steps, prev_score, stall):
         # one bundled fetch per window, traced or not — the sync-count
-        # contract pinned by tests/test_obs.py
+        # contract pinned by tests/test_obs.py. Guard predicates and the
+        # checkpoint snapshot ride the *same* device_get, so crash safety
+        # adds zero blocking fetches.
+        gsteps = start_step + loop_steps
+        bundle = {"le": pending_le, "ml": pending_ml, "mig": pending_mig}
+        if guard != "off":
+            checks = {"labels": jnp.all(jnp.where(
+                dg.vmask, (dstate.labels >= 0) & (dstate.labels < cfg.k), True))}
+            if algorithm.supports_probs:
+                checks["probs"] = jnp.all(jnp.isfinite(dstate.probs))
+            bundle["guard"] = checks
+        save_due = ckpt is not None and ckpt.due(gsteps) and not ckpt.busy()
+        if save_due:
+            bundle["ckpt"] = ckpt.device_tree(dstate)
         with tracer.span("device-sync", steps=len(pending_le), what="metrics"):
-            le_v, ml_v, mig_v = jax.device_get(
-                (pending_le, pending_ml, pending_mig))
+            fetched = jax.device_get(bundle)
+        le_v, ml_v, mig_v = fetched["le"], fetched["ml"], fetched["mig"]
         if track_history:
             history["local_edges"].extend(float(x) for x in le_v)
             history["max_norm_load"].extend(float(x) for x in ml_v)
@@ -428,15 +723,85 @@ def _run_partitioner_traced(
         pending_mig.clear()
         step_ts.clear()
 
-    state, steps, converged = run_convergence_loop(
-        step_fn, state,
-        max_steps=cfg.max_steps, patience=cfg.patience, theta=cfg.theta,
-        sync_every=sync_every,
-        on_step=on_step if collect else None,
-        on_score=history["score"].append if track_history else None,
-        on_drain=drain_metrics if collect else None,
-        tracer=tracer,
-    )
+        bad = [name for name, ok in fetched.get("guard", {}).items()
+               if not bool(ok)]
+        if bad:
+            return _handle_guard_violation(bad, gsteps)
+        if save_due:
+            ckpt.save(gsteps, fetched["ckpt"], prev_score, stall)
+        return None
+
+    def _handle_guard_violation(bad, gsteps):
+        # never checkpoint a corrupt state — the save for this window is
+        # skipped no matter which recovery policy runs
+        desc = ("non-finite probs" if "probs" in bad
+                else "out-of-range labels")
+        tracer.instant("guard-violation", step=gsteps, checks=",".join(bad))
+        tracer.counter("guard_violations", 1)
+        _log.warning("state guard tripped at step %d: %s", gsteps, desc)
+        if guard == "raise":
+            raise PartitionStateError(
+                f"state guard tripped at step {gsteps}: {desc}")
+        if guard == "rollback":
+            restored = ckpt.restore_latest(state)
+            if restored is None:
+                raise PartitionStateError(
+                    f"state guard tripped at step {gsteps} ({desc}) and no "
+                    f"usable checkpoint exists in {checkpoint_dir} to roll "
+                    f"back to")
+            r_state, r_step, r_prev, r_stall, _ = restored
+            tracer.instant("rollback", from_step=gsteps, to_step=r_step)
+            _log.warning("rolled back to checkpoint step %d", r_step)
+            # loop step counting continues forward; only the halting state
+            # and device state rewind
+            return {"state": r_state, "prev_score": r_prev, "stall": r_stall}
+        # reinit-affected-vertices: repair device-side — clamp labels into
+        # range, rebuild loads from the repaired labels, and reset any
+        # non-finite prob rows to uniform
+        s = state_box[0]
+        labels = jnp.clip(s.labels, 0, cfg.k - 1).astype(s.labels.dtype)
+        fix = {"labels": labels}
+        if hasattr(s, "loads"):
+            fix["loads"] = engine.loads_from_labels(dg, cfg.k, labels)
+        if algorithm.supports_probs:
+            flat = s.probs.reshape(dg.n_pad, cfg.k)
+            row_ok = jnp.all(jnp.isfinite(flat), axis=1, keepdims=True)
+            uniform = jnp.full_like(flat, 1.0 / cfg.k)
+            fix["probs"] = jnp.where(row_ok, flat, uniform).reshape(
+                s.probs.shape)
+        tracer.instant("reinit", step=gsteps)
+        _log.warning("reinitialized affected vertices at step %d", gsteps)
+        return {"state": s._replace(**fix), "prev_score": -np.inf, "stall": 0}
+
+    # the reinit path needs the loop's current state object (drain_metrics
+    # receives it); a one-slot box keeps the closure simple
+    state_box = [state]
+
+    def on_drain(dstate, loop_steps, prev_score, stall):
+        state_box[0] = dstate
+        return drain_metrics(dstate, loop_steps, prev_score, stall)
+
+    need_drain = collect or ckpt is not None or guard != "off"
+    remaining = cfg.max_steps - start_step
+    if resumed_converged or remaining <= 0:
+        # nothing left to run: the checkpoint already recorded the outcome
+        # (hitting max_steps without a stall is converged=False, same as an
+        # uninterrupted run)
+        loop_steps, converged = 0, resumed_converged
+    else:
+        state, loop_steps, converged = run_convergence_loop(
+            step_fn, state,
+            max_steps=remaining, patience=cfg.patience, theta=cfg.theta,
+            sync_every=sync_every,
+            on_step=on_step if collect else None,
+            on_score=history["score"].append if track_history else None,
+            on_drain=on_drain if need_drain else None,
+            tracer=tracer,
+            step0=start_step, prev_score=start_prev_score, stall=start_stall,
+        )
+    if ckpt is not None:
+        ckpt.finish()
+    steps = start_step + loop_steps
 
     # final fetch: one device_get for everything still needed. With history
     # tracking on, the final step's local_edges/max_norm_load already came
@@ -466,4 +831,5 @@ def _run_partitioner_traced(
         converged=converged, local_edges=le, max_norm_load=ml, history=history,
         wall_s=time.time() - t0,
         probs=np.asarray(fetched["probs"]) if "probs" in fetched else None,
+        resumed_from=start_step,
     )

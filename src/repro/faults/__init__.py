@@ -1,0 +1,28 @@
+"""Deterministic fault injection (see `repro.faults.inject`).
+
+Production code calls `fire(point, index)` at its injection points; the
+call is a no-op early return unless a plan is active (the ``REPRO_FAULTS``
+env var or a `use_plan` scope), so crash-safety hooks cost nothing when
+nothing is being injected.
+"""
+from repro.faults.inject import (
+    ENV_VAR,
+    FaultAction,
+    FaultPlan,
+    active_plan,
+    fire,
+    parse_faults,
+    poison,
+    use_plan,
+)
+
+__all__ = [
+    "ENV_VAR",
+    "FaultAction",
+    "FaultPlan",
+    "active_plan",
+    "fire",
+    "parse_faults",
+    "poison",
+    "use_plan",
+]

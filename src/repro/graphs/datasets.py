@@ -16,6 +16,7 @@ CPU host in the benchmark harness; the partitioner itself is scale-free).
 """
 from __future__ import annotations
 
+import math
 from typing import Callable, Dict
 
 from repro.graphs.csr import Graph
@@ -52,9 +53,15 @@ DATASETS = tuple(_SPECS.keys())
 
 
 def load_dataset(name: str, *, scale: float = 0.01, seed: int = 0) -> Graph:
-    """Build the named Table-I-family graph at the given scale."""
+    """Build the named Table-I-family graph at the given scale. `scale`
+    must be a finite positive number (a NaN or zero scale would silently
+    build a degenerate graph and fail far from here)."""
     if name not in _SPECS:
         raise KeyError(f"unknown dataset {name!r}; available: {DATASETS}")
+    if not isinstance(scale, (int, float)) or isinstance(scale, bool) \
+            or not math.isfinite(scale) or scale <= 0:
+        raise ValueError(
+            f"scale must be a finite positive number, got {scale!r}")
     n_full, m_full, builder = _SPECS[name]
     n = max(int(n_full * scale), 64)
     m = max(int(m_full * scale), 256)

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 
 from repro.core import run_partitioner
 from repro.core.registry import (
@@ -40,6 +41,29 @@ def main(argv=None):
                     choices=["contiguous", "locality"],
                     help="block->shard mapping for sharded/halo schedules")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sync-every", type=int, default=1,
+                    help="device->host score fetch window (supersteps); "
+                         "checkpoints and state guards ride these windows")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="root directory for crash-safe checkpoints; each "
+                         "algorithm saves under <dir>/<algo> (see "
+                         "docs/fault-tolerance.md)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="snapshot the partitioner state every N supersteps "
+                         "(0 = off; needs --checkpoint-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume each algorithm from its newest usable "
+                         "checkpoint under --checkpoint-dir (fresh run if "
+                         "none exists) — a killed run relaunched with the "
+                         "same command line continues bit-identically")
+    ap.add_argument("--guard", default="off",
+                    choices=["off", "raise", "rollback", "reinit"],
+                    help="drain-window state guard policy for non-finite "
+                         "probs / out-of-range labels")
+    ap.add_argument("--labels-out", metavar="PATH", default=None,
+                    help="write final labels per algorithm to PATH (npz, one "
+                         "array per algorithm) — lets CI diff two runs "
+                         "bit-for-bit")
     ap.add_argument("--json", action="store_true")
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="write a perfetto-loadable trace (Chrome trace-event"
@@ -59,13 +83,23 @@ def main(argv=None):
     g = load_dataset(args.dataset, scale=args.scale, seed=args.seed)
     algos = args.algo or list(available_algorithms())
     rows = []
+    labels_out = {}
     for algo in algos:
         kwargs = {}
-        if not isinstance(get_algorithm(algo), StaticAlgorithm):
+        static = isinstance(get_algorithm(algo), StaticAlgorithm)
+        if not static:
             kwargs = dict(epsilon=args.epsilon,
-                          chunk_schedule=args.chunk_schedule)
+                          chunk_schedule=args.chunk_schedule,
+                          sync_every=args.sync_every, guard=args.guard)
             if args.chunk_schedule != "sequential":
                 kwargs["assignment"] = args.assignment
+            if args.checkpoint_dir:
+                # per-algo subdir: one CLI invocation runs several
+                # algorithms; their checkpoints must not collide
+                kwargs["checkpoint_dir"] = os.path.join(
+                    args.checkpoint_dir, algo)
+                kwargs["checkpoint_every"] = args.checkpoint_every
+                kwargs["resume"] = args.resume
         res = run_partitioner(algo, g, args.k, seed=args.seed,
                               max_steps=args.max_steps,
                               n_blocks=args.n_blocks, trace=tracer, **kwargs)
@@ -73,11 +107,22 @@ def main(argv=None):
                "local_edges": round(res.local_edges, 4),
                "max_norm_load": round(res.max_norm_load, 4),
                "steps": res.steps}
+        if res.resumed_from:
+            row["resumed_from"] = res.resumed_from
         rows.append(row)
+        labels_out[algo] = res.labels
         if not args.json:
+            resumed = (f" resumed_from={res.resumed_from}"
+                       if res.resumed_from else "")
             print(f"{algo:10s} local_edges={row['local_edges']:.4f} "
                   f"max_norm_load={row['max_norm_load']:.4f} "
-                  f"steps={row['steps']}")
+                  f"steps={row['steps']}{resumed}")
+    if args.labels_out:
+        import numpy as np
+
+        np.savez(args.labels_out, **labels_out)
+        if not args.json:
+            print(f"labels written to {args.labels_out}")
     if args.json:
         print(json.dumps(rows))
     if tracer is not None:

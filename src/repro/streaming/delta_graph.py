@@ -80,14 +80,50 @@ class IncrementalGraph:
         self.dir_keys = np.empty(0, dtype=np.int64)
         self.sym_keys = np.empty(0, dtype=np.int64)
         self.sym_w = np.empty(0, dtype=np.float32)
+        self.deltas_applied = 0
 
     @property
     def m(self) -> int:
         return int(self.dir_keys.size)
 
+    def _check_delta(self, delta: EdgeDelta):
+        """Reject malformed deltas before any state is touched, naming the
+        delta so a bad producer in a long stream is attributable."""
+        idx = self.deltas_applied
+        pairs = (("add_src", delta.add_src, "add_dst", delta.add_dst),
+                 ("del_src", delta.del_src, "del_dst", delta.del_dst))
+        for sname, s, dname, d in pairs:
+            s, d = np.asarray(s), np.asarray(d)
+            if s.shape != d.shape:
+                raise ValueError(
+                    f"delta {idx}: {sname}/{dname} shape mismatch "
+                    f"{s.shape} vs {d.shape}")
+            for name, a in ((sname, s), (dname, d)):
+                if a.dtype.kind == "f" and not np.isfinite(a).all():
+                    raise ValueError(
+                        f"delta {idx}: {name} contains NaN/inf edge data")
+                if a.dtype.kind not in "iu" and not (
+                        a.dtype.kind == "f"
+                        and (not a.size or (a == np.floor(a)).all())):
+                    raise ValueError(
+                        f"delta {idx}: {name} dtype {a.dtype} is not a "
+                        "vertex-id array")
+                if a.size and int(a.min()) < 0:
+                    raise ValueError(
+                        f"delta {idx}: {name} contains negative vertex ids "
+                        f"(min {int(a.min())})")
+                if a.size and int(a.max()) >= self.n:
+                    raise ValueError(
+                        f"delta {idx}: {name} contains vertex ids >= "
+                        f"n={self.n} (max {int(a.max())})")
+
     def apply(self, delta: EdgeDelta) -> MergeInfo:
         """Merge one delta. Deletions apply before insertions, so an edge
-        deleted and re-added within the same delta ends up present."""
+        deleted and re-added within the same delta ends up present.
+        Malformed deltas (id out of [0, n), NaN/inf data, shape-mismatched
+        src/dst) raise ValueError naming the delta index, before any state
+        is modified."""
+        self._check_delta(delta)
         n = self.n
         info = MergeInfo()
 
@@ -147,6 +183,7 @@ class IncrementalGraph:
             info.touched_vertices = np.unique(np.concatenate([pu, pv])).astype(np.int64)
         else:
             info.touched_vertices = np.empty(0, dtype=np.int64)
+        self.deltas_applied += 1
         return info
 
     def to_graph(self) -> Graph:

@@ -41,7 +41,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import obs
+from repro import faults, obs
+from repro.checkpoint import store as ckpt_store
 from repro.core import engine
 from repro.core.device_graph import vertices_to_original
 from repro.core.halo import DEFAULT_HALO_THRESHOLD
@@ -124,7 +125,9 @@ class StreamRunner:
     def __init__(self, n: int, cfg: StreamConfig, *, algo: str = "revolver",
                  seed: int = 0, mesh=None, assignment="contiguous",
                  halo_threshold: float = DEFAULT_HALO_THRESHOLD,
-                 trace=None, **algo_kwargs):
+                 trace=None, checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 1, resume: bool = False,
+                 keep_checkpoints: int = 2, **algo_kwargs):
         self.cfg = cfg
         # `trace` (a repro.obs.Tracer; default off) records the whole stream:
         # one "delta" span per ingest with merge/warm-start/superstep children
@@ -180,10 +183,35 @@ class StreamRunner:
         self.labels: Optional[np.ndarray] = None   # [n_active] carried labels
         self.probs: Optional[np.ndarray] = None    # carried LA probabilities
         self.reports: List[DeltaReport] = []
+        # crash safety (docs/fault-tolerance.md): per-delta durability — each
+        # checkpoint captures the incremental CSR + block slabs + carried
+        # assignment + PRNG key, so a resumed runner continues the stream
+        # bit-identically without replaying already-ingested deltas
+        if checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1 (deltas), got {checkpoint_every}")
+        if checkpoint_dir is None and resume:
+            raise ValueError("resume needs a checkpoint_dir")
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
+        self.keep_checkpoints = keep_checkpoints
+        self._ckpt_handle: Optional[ckpt_store.Handle] = None
+        self.delta_base = 0      # deltas ingested by earlier processes
+        self._steps_base = 0     # their supersteps (keeps span numbering and
+                                 # total_steps monotonic across a resume)
+        if resume:
+            self._restore_latest()
 
     @property
     def total_steps(self) -> int:
-        return sum(r.steps for r in self.reports)
+        """Supersteps across the whole stream, including deltas ingested
+        before a resume (their per-delta reports live with the process that
+        ran them; only the counters survive the crash)."""
+        return self._steps_base + sum(r.steps for r in self.reports)
+
+    @property
+    def deltas_ingested(self) -> int:
+        return self.delta_base + len(self.reports)
 
     def ingest(
         self,
@@ -197,7 +225,7 @@ class StreamRunner:
         (e.g. a quiet period ahead, or the initial bulk load) can spend
         their superstep budget unevenly."""
         tracer = self.tracer
-        with obs.use(tracer), tracer.span("delta", idx=len(self.reports)):
+        with obs.use(tracer), tracer.span("delta", idx=self.deltas_ingested):
             try:
                 return self._ingest(delta, max_steps=max_steps,
                                     patience=patience)
@@ -217,7 +245,8 @@ class StreamRunner:
         t0 = time.time()
         cfg = self.cfg
         tracer = self.tracer
-        idx = len(self.reports)
+        idx = self.deltas_ingested   # global index across resumes
+        faults.fire("delta", idx)
         step0 = self.total_steps   # superstep spans numbered across deltas
         max_steps = cfg.refine_max_steps if max_steps is None else max_steps
         patience = cfg.refine_patience if patience is None else patience
@@ -305,7 +334,7 @@ class StreamRunner:
             tracer.counter("delta_max_norm_load", ml, step=idx)
             tracer.counter("delta_steps", steps, step=idx)
         report = DeltaReport(
-            delta_idx=len(self.reports),
+            delta_idx=idx,
             m=info.m,
             added=info.added,
             deleted=info.deleted,
@@ -325,10 +354,144 @@ class StreamRunner:
                 "algo": self.algo.name, "k": cfg.k,
                 "schedule": self.rcfg.chunk_schedule, "delta": idx,
                 "steps": steps})
+        if (self.checkpoint_dir is not None
+                and self.deltas_ingested % self.checkpoint_every == 0):
+            self._save_checkpoint()
         return report
 
     def run(self, stream: Iterable[EdgeDelta]) -> List[DeltaReport]:
-        return [self.ingest(delta) for delta in stream]
+        """Drain an iterator of deltas. On a resumed runner the first
+        `delta_base` deltas are skipped — callers replay the *source* stream
+        from the top and the runner fast-forwards past what the crashed
+        process already ingested and checkpointed."""
+        reports = []
+        for i, delta in enumerate(stream):
+            if i < self.delta_base:
+                continue
+            reports.append(self.ingest(delta))
+        return reports
+
+    def finish(self):
+        """Block until the in-flight async checkpoint write (if any) is
+        durable; re-raises writer failures."""
+        if self._ckpt_handle is not None:
+            self._ckpt_handle.wait()
+            self._ckpt_handle = None
+
+    # -- durability ---------------------------------------------------- #
+
+    def _ckpt_meta(self) -> dict:
+        idg = self.idg
+        return {
+            "kind": "stream", "algo": self.algo.name, "k": self.cfg.k,
+            "n": idg.n, "m": idg.inc.m,
+            "deltas": self.deltas_ingested, "steps": self.total_steps,
+            "e_max": idg.e_max, "b_max_floor": idg.b_max_floor,
+            "perm_decided": idg._perm_decided,
+            "n_blocks": idg.n_blocks, "block_v": idg.block_v,
+        }
+
+    def _save_checkpoint(self):
+        """One durable snapshot per `checkpoint_every` deltas: the host-side
+        incremental CSR (sorted key/weight arrays), the padded block slabs,
+        the carried assignment (labels + LA probs, original vertex order),
+        and the PRNG key chain. Written async (atomic rename underneath);
+        one writer in flight at a time."""
+        if self._ckpt_handle is not None:
+            self._ckpt_handle.wait()
+        idg = self.idg
+        tree = {
+            "key": np.asarray(self._key),
+            "dir_keys": idg.inc.dir_keys,
+            "sym_keys": idg.inc.sym_keys,
+            "sym_w": idg.inc.sym_w,
+            "blk_dst": idg._blk_dst,
+            "blk_row": idg._blk_row,
+            "blk_w": idg._blk_w,
+        }
+        if self.labels is not None:
+            tree["labels"] = self.labels
+        if self.probs is not None:
+            tree["probs"] = self.probs
+        if idg.block_perm is not None:
+            tree["block_perm"] = idg.block_perm
+        with self.tracer.span("checkpoint-save", delta=self.deltas_ingested):
+            self._ckpt_handle = ckpt_store.save_checkpoint(
+                self.checkpoint_dir, self.deltas_ingested, tree,
+                async_save=True, meta=self._ckpt_meta(),
+                keep=self.keep_checkpoints)
+        if self.tracer.enabled:
+            self.tracer.counter("stream_checkpoints_saved",
+                                float(self.deltas_ingested))
+
+    def _restore_latest(self):
+        """Resume from the newest usable checkpoint (corrupt ones skipped).
+        No checkpoint at all -> a fresh stream, so the same construction
+        works for the first launch and every relaunch."""
+        for step in reversed(ckpt_store.all_steps(self.checkpoint_dir)):
+            try:
+                self._restore(step)
+                return
+            except (ckpt_store.CheckpointError, ValueError, KeyError) as e:
+                _log.warning(
+                    "stream checkpoint delta %d in %s unusable (%s); trying "
+                    "the previous one", step, self.checkpoint_dir, e)
+
+    def _restore(self, step: int):
+        arrays, manifest = ckpt_store.load_checkpoint_arrays(
+            self.checkpoint_dir, step)
+        meta = manifest.get("meta", {})
+        for field, mine in (("algo", self.algo.name), ("k", self.cfg.k),
+                            ("n", self.idg.n)):
+            if field in meta and meta[field] != mine:
+                raise ValueError(
+                    f"stream checkpoint delta {step} belongs to a different "
+                    f"stream: {field}={meta[field]!r} vs this runner's "
+                    f"{mine!r}")
+        idg = self.idg
+        for field in ("n_blocks", "block_v"):
+            if field in meta and meta[field] != getattr(idg, field):
+                raise ValueError(
+                    f"stream checkpoint delta {step} has {field}="
+                    f"{meta[field]} but this runner's layout uses "
+                    f"{getattr(idg, field)} (layout knobs must match across "
+                    "a resume)")
+        required = ("key", "dir_keys", "sym_keys", "sym_w",
+                    "blk_dst", "blk_row", "blk_w")
+        missing = [k for k in required if k not in arrays]
+        if missing:
+            raise KeyError(f"stream checkpoint missing arrays: {missing}")
+        with self.tracer.span("checkpoint-restore", delta=step):
+            inc = idg.inc
+            inc.dir_keys = arrays["dir_keys"].astype(np.int64)
+            inc.sym_keys = arrays["sym_keys"].astype(np.int64)
+            inc.sym_w = arrays["sym_w"].astype(np.float32)
+            idg.e_max = int(meta.get("e_max", arrays["blk_dst"].shape[1]))
+            if arrays["blk_dst"].shape != (idg.n_blocks, idg.e_max):
+                raise ValueError(
+                    f"stream checkpoint slab shape {arrays['blk_dst'].shape} "
+                    f"vs expected {(idg.n_blocks, idg.e_max)}")
+            idg._blk_dst = arrays["blk_dst"].astype(np.int32)
+            idg._blk_row = arrays["blk_row"].astype(np.int32)
+            idg._blk_w = arrays["blk_w"].astype(np.float32)
+            idg._b_max_floor = int(meta.get("b_max_floor", 0))
+            if "block_perm" in arrays:
+                idg._set_perm(arrays["block_perm"].astype(np.int64))
+            idg._perm_decided = bool(meta.get("perm_decided", True))
+            idg.graph = inc.to_graph()
+            idg.device_graph = idg._to_device(idg.graph)
+            self._key = jnp.asarray(arrays["key"])
+            self.labels = (arrays["labels"].copy()
+                           if "labels" in arrays else None)
+            self.probs = (arrays["probs"].copy()
+                          if "probs" in arrays else None)
+            self.delta_base = int(meta.get("deltas", step))
+            self._steps_base = int(meta.get("steps", 0))
+            inc.deltas_applied = self.delta_base  # global error attribution
+        if self.tracer.enabled:
+            self.tracer.instant("resumed", delta=self.delta_base)
+        _log.info("resumed stream at delta %d (%d supersteps) from %s",
+                  self.delta_base, self._steps_base, self.checkpoint_dir)
 
     # ------------------------------------------------------------------ #
 

@@ -64,20 +64,61 @@ class StreamBuffer:
     longest order-preserving prefix and is called repeatedly until None.
     """
 
-    def __init__(self, delta_size: int):
+    def __init__(self, delta_size: int, *, n: Optional[int] = None):
         if delta_size <= 0:
             raise ValueError(f"delta_size must be positive, got {delta_size}")
+        if n is not None and n <= 0:
+            raise ValueError(f"vertex space must be positive, got {n}")
         self.delta_size = delta_size
+        self.n = n          # optional vertex-space bound checked at push
         # arrival-ordered (src, dst, is_delete) chunks
         self._events: List[tuple] = []
         self._n_add = 0
+        self._pushed = 0    # events accepted so far (error attribution)
+
+    def _as_ids(self, name: str, a) -> np.ndarray:
+        """Validate one endpoint array at the front door. A stream source
+        feeding garbage (sensor NaNs, floats, ids outside the declared
+        vertex space) should fail loudly here, at the event that carried
+        it, not as a corrupt partition three subsystems later."""
+        a = np.atleast_1d(np.asarray(a))
+        where = f"{name} in push #{self._pushed}"
+        if a.dtype.kind == "f":
+            if not np.isfinite(a).all():
+                raise ValueError(f"{where} contains NaN/inf edge data")
+            if np.any(a != np.floor(a)):
+                raise ValueError(
+                    f"{where} has non-integral float vertex ids")
+        elif a.dtype.kind not in "iu":
+            raise ValueError(
+                f"{where} has non-numeric dtype {a.dtype} for vertex ids")
+        if a.size and int(a.min()) < 0:
+            raise ValueError(
+                f"{where} contains negative vertex ids (min {int(a.min())})")
+        if self.n is not None and a.size and int(a.max()) >= self.n:
+            raise ValueError(
+                f"{where} contains vertex ids >= n={self.n} "
+                f"(max {int(a.max())})")
+        return a.astype(np.int32)
 
     def push(self, src, dst, *, delete: bool = False) -> None:
-        """Buffer one event or a vector of events."""
-        src = np.atleast_1d(np.asarray(src, dtype=np.int32))
-        dst = np.atleast_1d(np.asarray(dst, dtype=np.int32))
+        """Buffer one event or a vector of events. Malformed events —
+        shape or dtype-kind mismatch between src and dst, NaN/inf data,
+        negative or (when `n` was declared) out-of-range vertex ids —
+        raise ValueError naming the offending push."""
+        src_raw = np.atleast_1d(np.asarray(src))
+        dst_raw = np.atleast_1d(np.asarray(dst))
+        if src_raw.dtype.kind != dst_raw.dtype.kind:
+            raise ValueError(
+                f"src/dst dtype mismatch in push #{self._pushed}: "
+                f"{src_raw.dtype} vs {dst_raw.dtype}")
+        src = self._as_ids("src", src_raw)
+        dst = self._as_ids("dst", dst_raw)
         if src.shape != dst.shape:
-            raise ValueError(f"src/dst shape mismatch: {src.shape} vs {dst.shape}")
+            raise ValueError(
+                f"src/dst shape mismatch in push #{self._pushed}: "
+                f"{src.shape} vs {dst.shape}")
+        self._pushed += 1
         if src.shape[0] == 0:
             return
         self._events.append((src, dst, delete))

@@ -1,0 +1,270 @@
+"""Crash-safety behavior: fault-plan parsing, kill-and-resume bit-identity
+(batch and streaming, in-process via step-budget cuts plus one real
+subprocess SIGKILL), and the drain-window state guard policies."""
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.core.runner import PartitionStateError, run_partitioner
+from repro.graphs import load_dataset
+from repro.streaming.runner import StreamConfig, StreamRunner
+from repro.streaming.stream import stream_from_graph
+
+G = load_dataset("WIKI", scale=0.005, seed=0)
+K = 4
+
+
+# --------------------------------------------------------------------------
+# fault-plan grammar
+# --------------------------------------------------------------------------
+def test_parse_faults_grammar():
+    plan = faults.parse_faults(
+        "kill@superstep=12,kill@save,nan@superstep=8,kill@delta=2,"
+        "badlabel@superstep=3,kill@save-payload,kill@save=1")
+    assert len(plan.actions) == 7
+    a = plan.actions[0]
+    assert (a.action, a.point, a.index) == ("kill", "superstep", 12)
+    assert plan.actions[1].index is None     # first hit of the point
+    assert plan.actions[6].index == 1        # second save, counted per point
+
+
+@pytest.mark.parametrize("bad", [
+    "explode@superstep=1",       # unknown action
+    "kill@lunch",                # unknown point
+    "nan@save",                  # poisons only apply at supersteps
+    "kill@superstep=x",          # non-integer index
+    "kill",                      # no point
+])
+def test_parse_faults_rejects(bad):
+    with pytest.raises(ValueError):
+        faults.parse_faults(bad)
+
+
+def test_fire_consumes_actions_once():
+    with faults.use_plan("nan@superstep=2"):
+        assert faults.fire("superstep", 1) is None
+        assert faults.fire("superstep", 2) == "nan"
+        assert faults.fire("superstep", 2) is None   # consumed
+    assert faults.fire("superstep", 2) is None       # plan scoped
+
+
+# --------------------------------------------------------------------------
+# batch kill-and-resume (in-process: the "kill" is a step-budget cut at an
+# arbitrary — including mid-window — superstep; resume must still land on
+# the last drain-aligned checkpoint and reproduce the reference exactly)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("algo", ["revolver", "restream"])
+@pytest.mark.parametrize("cut", [9, 12])   # mid-window and on-window
+def test_resume_bit_identical(algo, cut):
+    common = dict(seed=3, max_steps=20, sync_every=4, track_history=False)
+    ref = run_partitioner(algo, G, K, **common)
+    with tempfile.TemporaryDirectory() as td:
+        run_partitioner(algo, G, K, checkpoint_dir=td, checkpoint_every=4,
+                        **dict(common, max_steps=cut))
+        res = run_partitioner(algo, G, K, checkpoint_dir=td,
+                              checkpoint_every=4, resume=True, **common)
+        assert res.resumed_from > 0
+        assert res.steps == ref.steps
+        np.testing.assert_array_equal(ref.labels, res.labels)
+
+
+def test_resume_with_checkpointing_changes_nothing():
+    common = dict(seed=3, max_steps=16, sync_every=4, track_history=False)
+    ref = run_partitioner("revolver", G, K, **common)
+    with tempfile.TemporaryDirectory() as td:
+        on = run_partitioner("revolver", G, K, checkpoint_dir=td,
+                             checkpoint_every=4, **common)
+        np.testing.assert_array_equal(ref.labels, on.labels)
+        # resume=True with no checkpoint on disk is a fresh run
+        fresh = run_partitioner("revolver", G, K,
+                                checkpoint_dir=td + "/empty", resume=True,
+                                **common)
+        assert fresh.resumed_from == 0
+        np.testing.assert_array_equal(ref.labels, fresh.labels)
+
+
+def test_resume_skips_corrupt_newest_checkpoint():
+    common = dict(seed=3, max_steps=16, sync_every=4, track_history=False)
+    ref = run_partitioner("revolver", G, K, **common)
+    with tempfile.TemporaryDirectory() as td:
+        run_partitioner("revolver", G, K, checkpoint_dir=td,
+                        checkpoint_every=4, keep_checkpoints=4, **common)
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(td))
+        assert len(steps) >= 2
+        newest = os.path.join(td, f"step_{steps[-1]:08d}", "arrays.npz")
+        with open(newest, "wb") as f:
+            f.write(b"garbage")
+        res = run_partitioner("revolver", G, K, checkpoint_dir=td,
+                              checkpoint_every=4, resume=True, **common)
+        # fell back to the previous checkpoint and still finished exactly
+        assert res.resumed_from == steps[-2]
+        np.testing.assert_array_equal(ref.labels, res.labels)
+
+
+def test_checkpoint_validation_errors():
+    with pytest.raises(ValueError):
+        run_partitioner("revolver", G, K, checkpoint_every=4)  # no dir
+    with pytest.raises(ValueError):
+        run_partitioner("revolver", G, K, resume=True)
+    with pytest.raises(ValueError):
+        run_partitioner("revolver", G, K, guard="rollback")
+    with pytest.raises(ValueError):
+        run_partitioner("revolver", G, K, guard="nonsense")
+    with pytest.raises(TypeError):
+        run_partitioner("hash", G, K, guard="raise")
+    with tempfile.TemporaryDirectory() as td:
+        # a checkpoint from different run parameters is rejected, not
+        # silently resumed into the wrong trajectory
+        run_partitioner("revolver", G, K, seed=3, max_steps=8, sync_every=4,
+                        checkpoint_dir=td, checkpoint_every=4,
+                        track_history=False)
+        res = run_partitioner("revolver", G, K + 1, seed=3, max_steps=8,
+                              sync_every=4, checkpoint_dir=td, resume=True,
+                              track_history=False)
+        assert res.resumed_from == 0   # incompatible -> fresh run
+
+
+# --------------------------------------------------------------------------
+# streaming kill-and-resume
+# --------------------------------------------------------------------------
+def _deltas():
+    return list(stream_from_graph(G, n_deltas=4, seed=7))
+
+
+def test_stream_resume_bit_identical():
+    cfg = StreamConfig(k=K, n_blocks=8, refine_max_steps=8, sync_every=2)
+    ref = StreamRunner(G.n, cfg, algo="revolver", seed=5)
+    ref.run(_deltas())
+    with tempfile.TemporaryDirectory() as td:
+        r1 = StreamRunner(G.n, cfg, algo="revolver", seed=5,
+                          checkpoint_dir=td)
+        for d in _deltas()[:2]:
+            r1.ingest(d)
+        r1.finish()
+        r2 = StreamRunner(G.n, cfg, algo="revolver", seed=5,
+                          checkpoint_dir=td, resume=True)
+        assert r2.delta_base == 2
+        reports = r2.run(_deltas())          # full stream: skips 2, runs 2
+        r2.finish()
+        assert [r.delta_idx for r in reports] == [2, 3]
+        np.testing.assert_array_equal(ref.labels, r2.labels)
+        np.testing.assert_array_equal(ref.probs, r2.probs)
+        assert ref.total_steps == r2.total_steps
+
+
+def test_stream_resume_rejects_other_stream():
+    cfg = StreamConfig(k=K, n_blocks=8, refine_max_steps=4, sync_every=2)
+    with tempfile.TemporaryDirectory() as td:
+        r1 = StreamRunner(G.n, cfg, algo="revolver", seed=5,
+                          checkpoint_dir=td)
+        r1.ingest(_deltas()[0])
+        r1.finish()
+        other = StreamRunner(
+            G.n, StreamConfig(k=K + 1, n_blocks=8, refine_max_steps=4,
+                              sync_every=2),
+            algo="revolver", seed=5, checkpoint_dir=td, resume=True)
+        assert other.delta_base == 0   # k mismatch -> fresh stream
+
+
+def test_stream_kill_at_delta_point():
+    cfg = StreamConfig(k=K, n_blocks=8, refine_max_steps=4, sync_every=2)
+    with faults.use_plan(faults.parse_faults("nan@superstep=999")):
+        # unrelated plan: the delta point fires but matches nothing
+        r = StreamRunner(G.n, cfg, algo="revolver", seed=5)
+        r.ingest(_deltas()[0])
+        assert len(r.reports) == 1
+
+
+# --------------------------------------------------------------------------
+# guard policies (poison injection via use_plan)
+# --------------------------------------------------------------------------
+def test_guard_raise_on_nan_probs():
+    with faults.use_plan("nan@superstep=5"):
+        with pytest.raises(PartitionStateError):
+            run_partitioner("revolver", G, K, seed=3, max_steps=16,
+                            sync_every=4, track_history=False, guard="raise")
+
+
+def test_guard_raise_on_bad_labels():
+    # spinner recomputes every label per superstep, so the poison must land
+    # on the last step of a window (0-based step 7 -> drain at steps=8) to
+    # still be visible at the guard check — which is exactly when real
+    # corruption would be caught, too
+    with faults.use_plan("badlabel@superstep=7"):
+        with pytest.raises(PartitionStateError):
+            run_partitioner("spinner", G, K, seed=3, max_steps=16,
+                            sync_every=4, track_history=False, guard="raise")
+
+
+def test_guard_off_lets_corruption_through():
+    with faults.use_plan("badlabel@superstep=7"):
+        res = run_partitioner("spinner", G, K, seed=3, max_steps=8,
+                              sync_every=4, track_history=False)
+        assert (res.labels >= K).any()   # the poison survived: guard off
+
+
+def test_guard_reinit_recovers():
+    with faults.use_plan("nan@superstep=5"):
+        res = run_partitioner("revolver", G, K, seed=3, max_steps=16,
+                              sync_every=4, track_history=False,
+                              guard="reinit-affected-vertices",
+                              keep_probs=True)
+    assert res.steps == 16
+    assert ((res.labels >= 0) & (res.labels < K)).all()
+    assert np.isfinite(res.probs).all()
+
+
+def test_guard_rollback_recovers_and_rollback_without_ckpt_escalates():
+    with tempfile.TemporaryDirectory() as td:
+        with faults.use_plan("nan@superstep=9"):
+            res = run_partitioner("revolver", G, K, seed=3, max_steps=20,
+                                  sync_every=4, track_history=False,
+                                  checkpoint_dir=td, checkpoint_every=4,
+                                  guard="rollback-to-last-checkpoint")
+        assert ((res.labels >= 0) & (res.labels < K)).all()
+    with tempfile.TemporaryDirectory() as td:
+        with faults.use_plan("nan@superstep=2"):
+            with pytest.raises(PartitionStateError):
+                run_partitioner("revolver", G, K, seed=3, max_steps=20,
+                                sync_every=4, track_history=False,
+                                checkpoint_dir=td, checkpoint_every=100,
+                                guard="rollback")
+
+
+# --------------------------------------------------------------------------
+# one real SIGKILL: the env-var plan kills a subprocess run mid-way; the
+# resumed process must finish bit-identically (the CI smoke leg runs the
+# same flow via tools/kill_resume_check.py at larger scale)
+# --------------------------------------------------------------------------
+def test_subprocess_sigkill_and_resume_exact():
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
+    env.pop("REPRO_FAULTS", None)
+    with tempfile.TemporaryDirectory() as td:
+        base = [sys.executable, "-m", "repro.launch.partition",
+                "--dataset", "WIKI", "--scale", "0.005", "--k", "4",
+                "--algo", "revolver", "--seed", "3", "--max-steps", "16",
+                "--sync-every", "4", "--json"]
+        ref_out = os.path.join(td, "ref.npz")
+        r = subprocess.run(base + ["--labels-out", ref_out], env=env,
+                           capture_output=True, text=True)
+        assert r.returncode == 0, r.stdout + r.stderr
+        ckpt = base + ["--checkpoint-dir", os.path.join(td, "ckpt"),
+                       "--checkpoint-every", "4"]
+        victim = subprocess.run(
+            ckpt, env=dict(env, REPRO_FAULTS="kill@superstep=9"),
+            capture_output=True, text=True)
+        assert victim.returncode == -signal.SIGKILL, (
+            victim.returncode, victim.stdout + victim.stderr)
+        res_out = os.path.join(td, "res.npz")
+        r = subprocess.run(ckpt + ["--resume", "--labels-out", res_out],
+                           env=env, capture_output=True, text=True)
+        assert r.returncode == 0, r.stdout + r.stderr
+        with np.load(ref_out) as a, np.load(res_out) as b:
+            np.testing.assert_array_equal(a["revolver"], b["revolver"])

@@ -1,0 +1,183 @@
+"""Kill-and-resume exactness check (the CI crash-safety gate).
+
+Runs the partition launcher three times against the same dataset/seed:
+
+  1. **reference** — uninterrupted run, final labels written via
+     ``--labels-out``;
+  2. **victim** — same command line with ``--checkpoint-dir`` and a
+     ``REPRO_FAULTS=kill@superstep=N`` plan, so the process SIGKILLs itself
+     mid-run (a real ``os.kill``, not an exception — the asserted exit is
+     ``-SIGKILL``) after at least one checkpoint landed;
+  3. **resume** — same command line plus ``--resume``: restores the newest
+     checkpoint and runs to completion.
+
+The gate: resumed labels must equal the reference **bit-for-bit** (and the
+resumed run must actually have resumed, not silently started fresh).
+
+``--devices N`` pins ``XLA_FLAGS=--xla_force_host_platform_device_count``
+for every phase; ``--resume-devices M`` changes the device count for the
+resume phase only — the elastic-restore path. With a sharded schedule a
+count change alters the Jacobi trajectory by construction, so that
+combination is gated as *transport exactness* instead: a fourth run capped
+at the checkpoint's step (``--max-steps`` = steps saved) on M devices must
+reproduce the checkpointed labels exactly, proving the restore moved state
+onto the new mesh losslessly. Sequential schedules stay bit-exact
+end-to-end whatever the counts.
+
+  python tools/kill_resume_check.py --dataset WIKI --scale 0.01 --algo revolver \
+      --kill-at 10 --checkpoint-every 4 --sync-every 4
+  python tools/kill_resume_check.py --chunk-schedule sharded --devices 8 \
+      --resume-devices 4 --kill-at 10
+
+Exit status 0 iff every assertion holds.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import signal
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_launcher(extra, *, env_extra=None, devices=None, check=True):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("REPRO_FAULTS", None)
+    if env_extra:
+        env.update(env_extra)
+    if devices:
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={devices}")
+    cmd = [sys.executable, "-m", "repro.launch.partition", "--json"] + extra
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True)
+    if check and proc.returncode != 0:
+        sys.stderr.write(proc.stdout + proc.stderr)
+        raise SystemExit(f"launcher failed ({proc.returncode}): {cmd}")
+    return proc
+
+
+def load_labels(path, algo):
+    with np.load(path) as z:
+        return z[algo].copy()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="WIKI")
+    ap.add_argument("--scale", type=float, default=0.01)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--algo", default="revolver")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-steps", type=int, default=30)
+    ap.add_argument("--sync-every", type=int, default=4)
+    ap.add_argument("--checkpoint-every", type=int, default=4)
+    ap.add_argument("--kill-at", type=int, default=14,
+                    help="superstep at which the victim run SIGKILLs itself")
+    ap.add_argument("--chunk-schedule", default="sequential",
+                    choices=["sequential", "sharded", "halo"])
+    ap.add_argument("--devices", type=int, default=None,
+                    help="host device count for all phases")
+    ap.add_argument("--resume-devices", type=int, default=None,
+                    help="device count for the resume phase only "
+                         "(elastic restore across a count change)")
+    args = ap.parse_args(argv)
+
+    work = tempfile.mkdtemp(prefix="kill_resume_")
+    ckpt = os.path.join(work, "ckpt")
+    base = ["--dataset", args.dataset, "--scale", str(args.scale),
+            "--k", str(args.k), "--algo", args.algo,
+            "--seed", str(args.seed), "--max-steps", str(args.max_steps),
+            "--sync-every", str(args.sync_every),
+            "--chunk-schedule", args.chunk_schedule]
+    ok = True
+    try:
+        # 1. reference (uninterrupted)
+        ref_labels_path = os.path.join(work, "ref.npz")
+        run_launcher(base + ["--labels-out", ref_labels_path],
+                     devices=args.devices)
+        ref = load_labels(ref_labels_path, args.algo)
+        print(f"reference: n={ref.size} labels")
+
+        # 2. victim: checkpointing on, killed mid-run by the fault plan
+        ckpt_args = base + ["--checkpoint-dir", ckpt,
+                            "--checkpoint-every", str(args.checkpoint_every)]
+        victim = run_launcher(
+            ckpt_args,
+            env_extra={"REPRO_FAULTS": f"kill@superstep={args.kill_at}"},
+            devices=args.devices, check=False)
+        if victim.returncode != -signal.SIGKILL:
+            print(f"FAIL: victim exited {victim.returncode}, expected "
+                  f"{-signal.SIGKILL} (SIGKILL)")
+            sys.stderr.write(victim.stdout + victim.stderr)
+            return 1
+        algo_ckpt = os.path.join(ckpt, args.algo)
+        steps_dirs = [d for d in os.listdir(algo_ckpt)
+                      if d.startswith("step_") and not d.endswith(".tmp")]
+        if not steps_dirs:
+            print("FAIL: victim left no checkpoint before dying")
+            return 1
+        saved_step = max(int(d.split("_")[1]) for d in steps_dirs)
+        print(f"victim: SIGKILLed at superstep {args.kill_at}, newest "
+              f"checkpoint at step {saved_step}")
+
+        count_change = (args.resume_devices is not None
+                        and args.resume_devices != args.devices)
+        sharded = args.chunk_schedule in ("sharded", "halo")
+        resume_devices = args.resume_devices or args.devices
+
+        if count_change and sharded:
+            # transport exactness: restoring the checkpoint onto the new
+            # mesh and running zero further steps must reproduce the
+            # checkpointed labels bit-for-bit (the trajectory beyond the
+            # checkpoint is shard-count-specific — see the module docstring)
+            cap = [a if a != str(args.max_steps) else str(saved_step)
+                   for a in base]
+            out1 = os.path.join(work, "cap_ref.npz")
+            run_launcher(cap + ["--labels-out", out1], devices=args.devices)
+            out2 = os.path.join(work, "cap_resumed.npz")
+            proc = run_launcher(
+                cap + ["--checkpoint-dir", ckpt, "--resume",
+                       "--labels-out", out2],
+                devices=resume_devices)
+            rows = json.loads(proc.stdout.splitlines()[-1])
+            if not rows[0].get("resumed_from"):
+                print("FAIL: resume phase did not restore a checkpoint")
+                return 1
+            a, b = load_labels(out1, args.algo), load_labels(out2, args.algo)
+            ok = bool(np.array_equal(a, b))
+            print(f"elastic transport ({args.devices}->{resume_devices} "
+                  f"devices, capped at step {saved_step}): "
+                  f"exact={ok}")
+        else:
+            # 3. resume to completion; must equal the reference exactly
+            out = os.path.join(work, "resumed.npz")
+            proc = run_launcher(
+                ckpt_args + ["--resume", "--labels-out", out],
+                devices=resume_devices)
+            rows = json.loads(proc.stdout.splitlines()[-1])
+            if not rows[0].get("resumed_from"):
+                print("FAIL: resume phase did not restore a checkpoint")
+                return 1
+            resumed = load_labels(out, args.algo)
+            ok = bool(np.array_equal(ref, resumed))
+            diff = int((ref != resumed).sum()) if not ok else 0
+            print(f"resume (from step {rows[0]['resumed_from']}, "
+                  f"{args.devices or 'default'}->"
+                  f"{resume_devices or 'default'} devices): "
+                  f"bit-identical={ok}" + ("" if ok else f" ({diff} differ)"))
+        print("PASS" if ok else "FAIL")
+        return 0 if ok else 1
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
