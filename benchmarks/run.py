@@ -87,8 +87,10 @@ def main(argv=None):
                           scaling["meta"]["quality_ok"]),
                          ("halo-schedule parity",
                           scaling["meta"]["halo_parity_ok"]),
-                         ("halo traffic reduction",
-                          scaling["meta"]["traffic_ok"])):
+                         ("halo traffic reduction (all datasets)",
+                          scaling["meta"]["traffic_ok"]),
+                         ("hub replication quality/balance",
+                          scaling["meta"]["hub_ok"])):
             gates.append((gate, "ok" if ok else "FAIL", "BENCH_scaling.json"))
 
     _section("Kernel microbench (CPU; interpret-mode parity)", gates,

@@ -23,7 +23,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.halo import DEFAULT_HALO_THRESHOLD, HaloSpec, build_halo_spec
+from repro.core.halo import (
+    DEFAULT_HALO_THRESHOLD,
+    HaloSpec,
+    HubConfig,
+    build_halo_spec,
+)
 from repro.graphs.blocking import block_adjacency, block_edges, locality_block_order
 from repro.graphs.csr import Graph
 
@@ -292,6 +297,8 @@ def shard_device_graph(
     assignment: Union[str, np.ndarray, None] = "contiguous",
     halo: bool = False,
     halo_threshold: float = DEFAULT_HALO_THRESHOLD,
+    halo_granularity: str = "auto",
+    hubs: Optional[HubConfig] = None,
 ) -> ShardedDeviceGraph:
     """Align `dg` to the mesh and place every array with a `NamedSharding`.
 
@@ -305,8 +312,10 @@ def shard_device_graph(
     connected blocks (`locality_block_order`), an explicit `[n_blocks]`
     permutation is used verbatim. `halo=True` additionally precomputes the
     halo-exchange plan consumed by `chunk_schedule="halo"`; see
-    `repro.core.halo` for the traffic model and the `halo_threshold`
-    full-gather fallback.
+    `repro.core.halo` for the traffic model, the `halo_threshold`
+    full-gather fallback, the `halo_granularity` knob ("auto" | "block" |
+    "vertex" exchange plan), and `hubs` (a `HubConfig` enabling Spinner-
+    style hub replication with per-superstep vote reconciliation).
     """
     if "blocks" not in mesh.axis_names:
         raise ValueError(f"mesh {mesh.axis_names} has no 'blocks' axis")
@@ -334,7 +343,10 @@ def shard_device_graph(
     if halo:
         spec = build_halo_spec(
             np.asarray(dg.blk_dst), np.asarray(dg.blk_w), n_shards,
-            dg.block_v, threshold=halo_threshold, mesh=mesh)
+            dg.block_v, threshold=halo_threshold,
+            granularity=halo_granularity, hubs=hubs,
+            deg=np.asarray(dg.deg_out), vmask=np.asarray(dg.vmask),
+            blk_row=np.asarray(dg.blk_row), mesh=mesh)
     return ShardedDeviceGraph(
         dg=DeviceGraph(**placed),
         mesh=mesh,
@@ -350,13 +362,20 @@ def shard_device_graph(
 def attach_halo(
     sdg: ShardedDeviceGraph,
     halo_threshold: float = DEFAULT_HALO_THRESHOLD,
+    *,
+    halo_granularity: str = "auto",
+    hubs: Optional[HubConfig] = None,
 ) -> ShardedDeviceGraph:
     """Build (or rebuild) the halo-exchange plan for an already-placed
     sharded layout — the path `run_partitioner(chunk_schedule="halo")`
-    takes when handed a pre-built `ShardedDeviceGraph` without one."""
+    takes when handed a pre-built `ShardedDeviceGraph` without one (or
+    with one built under different granularity/hub knobs)."""
     spec = build_halo_spec(
         np.asarray(sdg.blk_dst), np.asarray(sdg.blk_w), sdg.n_shards,
-        sdg.block_v, threshold=halo_threshold, mesh=sdg.mesh)
+        sdg.block_v, threshold=halo_threshold,
+        granularity=halo_granularity, hubs=hubs,
+        deg=np.asarray(sdg.deg_out), vmask=np.asarray(sdg.vmask),
+        blk_row=np.asarray(sdg.blk_row), mesh=sdg.mesh)
     return dataclasses.replace(sdg, halo=spec)
 
 
@@ -369,18 +388,22 @@ def prepare_sharded_device_graph(
     assignment: Union[str, np.ndarray, None] = "contiguous",
     halo: bool = False,
     halo_threshold: float = DEFAULT_HALO_THRESHOLD,
+    halo_granularity: str = "auto",
+    hubs: Optional[HubConfig] = None,
 ) -> ShardedDeviceGraph:
     """`prepare_device_graph` + device-aligned blocking + NamedSharding placement.
 
     Requests at least one block per shard; whatever block count the blocking
     pass settles on is then padded up to a multiple of the mesh size. See
-    `shard_device_graph` for `assignment` / `halo`.
+    `shard_device_graph` for `assignment` / `halo` / `halo_granularity` /
+    `hubs`.
     """
     n_shards = int(mesh.shape["blocks"])
     dg = prepare_device_graph(
         g, n_blocks=max(n_blocks, n_shards), block_multiple=block_multiple)
     return shard_device_graph(dg, mesh, assignment=assignment, halo=halo,
-                              halo_threshold=halo_threshold)
+                              halo_threshold=halo_threshold,
+                              halo_granularity=halo_granularity, hubs=hubs)
 
 
 CAPACITY_MODES = ("spinner", "paper")

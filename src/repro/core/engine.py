@@ -71,9 +71,11 @@ from repro.core.device_graph import (
 )
 from repro.parallel.collectives import (
     gather_shards,
+    hub_gather,
     psum_delta_merge,
     replicated_chain_key,
     shard_chain_key,
+    vertex_halo_exchange,
 )
 
 AXIS = "blocks"   # the 1-D mesh axis every sharded superstep runs over
@@ -106,6 +108,10 @@ class Algorithm:
       replicated_fields: state fields the schedule passes through replicated
         and untouched (per-superstep constants, e.g. restream's degree
         ranks). Available to rules via the context.
+      wire_int8_fields: vertex_fields whose values always fit int8 (label-
+        valued, i.e. in [0, k)): when ``cfg.k <= 127`` the per-vertex halo
+        exchange moves them on an int8 wire — an exact round trip, 4x fewer
+        bytes. Fields not listed ride the wire at their storage width.
       donate: state fields whose buffers the jitted superstep donates
         (updated in place; callers must rebind ``state = superstep(...)``).
       init: ``(dg, cfg, key) -> state`` cold start.
@@ -125,6 +131,7 @@ class Algorithm:
     vertex_fields: Tuple[str, ...] = ("labels",)
     block_fields: Tuple[str, ...] = ()
     replicated_fields: Tuple[str, ...] = ()
+    wire_int8_fields: Tuple[str, ...] = ()
     donate: Tuple[str, ...] = ("labels", "loads")
     init_from_labels: Optional[Callable] = None
     supports_probs: bool = False
@@ -146,6 +153,11 @@ class Algorithm:
         missing = required - set(self.state_cls._fields)
         if missing:
             raise ValueError(f"{self.name}: state_cls lacks {sorted(missing)}")
+        stray = set(self.wire_int8_fields) - set(self.vertex_fields)
+        if stray:
+            raise ValueError(
+                f"{self.name}: wire_int8_fields {sorted(stray)} are not "
+                "vertex_fields")
 
 
 class ChunkContext(NamedTuple):
@@ -243,19 +255,40 @@ class ShardContext:
     step: jnp.ndarray
     repl: Dict[str, jnp.ndarray]
     halo_rows: Optional[jnp.ndarray] = None   # [S, b_max] boundary plan
+    send_ids: Optional[jnp.ndarray] = None    # [S, S, h_max] per-vertex plan
+    hub_owner: Optional[jnp.ndarray] = None   # [hub_pad] hub replication plan
+    hub_local: Optional[jnp.ndarray] = None
+    wire_int8: bool = False    # label-valued gathers may ride an int8 wire
 
     def gather(self, x):
         """Make every vertex id in ``blk_dst`` resolvable: the full
-        all-gather, or the boundary-only halo exchange when the layout
-        carries a halo plan (identity on the sequential schedule)."""
-        if not self.axis:
-            return x
-        if self.halo_rows is None:
+        all-gather, the boundary-block halo exchange, or the per-vertex
+        all-to-all when the layout carries the matching plan (identity on
+        the sequential schedule), plus the replicated hub region when hub
+        replication is on. Rules gather label-valued fields only (the
+        contract), so ``wire_int8`` applies to every per-vertex gather."""
+        if self.halo_rows is not None:
+            with obs.annotate("halo-exchange", kind="halo"):
+                y = halo_exchange(x, self.halo_rows, self.idx, self.blocks,
+                                  self.block_v, self.axis)
+        elif self.send_ids is not None:
+            with obs.annotate("halo-exchange", kind="per-vertex"):
+                wire = jnp.int8 if (self.wire_int8
+                                    and x.dtype == jnp.int32) else None
+                tail = vertex_halo_exchange(x, self.send_ids, self.axis,
+                                            wire_dtype=wire)
+                y = jnp.concatenate([x, tail]) if tail.shape[0] else x
+        elif self.axis:
             with obs.annotate("halo-exchange", kind="full-gather"):
-                return gather_shards(x, self.axis)
-        with obs.annotate("halo-exchange", kind="halo"):
-            return halo_exchange(x, self.halo_rows, self.idx, self.blocks,
-                                 self.block_v, self.axis)
+                y = gather_shards(x, self.axis)
+        else:
+            y = x
+        if self.hub_owner is not None:
+            with obs.annotate("halo-exchange", kind="hub-assemble"):
+                y = jnp.concatenate(
+                    [y, hub_gather(x, self.hub_owner, self.hub_local,
+                                   self.axis)])
+        return y
 
     def psum(self, x):
         """Sum a shard-local reduction across shards."""
@@ -294,7 +327,13 @@ def _graph_arrays(dg: DeviceGraph) -> Dict[str, jnp.ndarray]:
 _GRAPH_SPECS = {
     "blk_dst": P(AXIS, None), "blk_row": P(AXIS, None), "blk_w": P(AXIS, None),
     "deg": P(AXIS), "inv_wsum": P(AXIS), "vmask": P(AXIS),
-    "halo_rows": P(),   # replicated boundary plan (halo schedule only)
+    "halo_rows": P(),   # replicated boundary plan (block-halo schedule)
+    "send_ids": P(),    # replicated per-vertex exchange plan
+    # hub replication: the plan vectors are replicated, the per-shard vote
+    # slabs are sharded like the edge slabs they were cut from
+    "hub_owner": P(), "hub_local": P(), "hub_deg": P(),
+    "hub_src": P(AXIS, None), "hub_slot": P(AXIS, None),
+    "hub_w": P(AXIS, None),
 }
 
 
@@ -327,6 +366,80 @@ def halo_exchange(x, halo_rows, idx, bps, block_v, axis):
     return jnp.concatenate([x, gathered.reshape(-1)])
 
 
+def _hub_reconcile(graph, k, cap, axis, idx, labels, loads, local_n):
+    """Per-superstep hub vote reconciliation — O(hub_pad * k), never O(E).
+
+    Hubs are frozen during the scan (`vmask_nonhub`), so at this point every
+    shard holds the same start-of-superstep hub labels. Each shard
+    accumulates weighted one-hot votes from its local slab slots that point
+    at hubs (`hub_src` / `hub_slot` / `hub_w`, precomputed host-side), one
+    psum merges the `[hub_pad, k]` vote table, and an identical
+    deterministic capacity-gated scan runs on every shard: per slot, the
+    argmax label wins (ties break to the lowest partition index), gated on
+    the merged global loads so hub migrations never breach capacity. All
+    inputs are replicated, so every shard computes the same winners and the
+    same updated loads — each owner then scatters its hubs' winners into
+    its local slice. With ``axis=None`` the psums are identities and the
+    same arithmetic runs on the single shard (the sequential hub schedule),
+    which is why 1-shard hub runs match the sequential reference
+    bit-for-bit.
+    """
+    owner = graph["hub_owner"]               # [hub_pad] replicated
+    local = graph["hub_local"]
+    hdeg = graph["hub_deg"]
+    src = graph["hub_src"][0]                # this shard's vote slab
+    slot = graph["hub_slot"][0]
+    w = graph["hub_w"][0]
+    hub_pad = owner.shape[0]
+
+    # current hub labels: exactly one owner contributes per slot
+    cur = jnp.where(owner == idx, jnp.take(labels, local), 0)
+    lab_src = jnp.take(labels, src)
+    votes = jnp.zeros((hub_pad, k), jnp.float32).at[slot, lab_src].add(w)
+    if axis:
+        with obs.annotate("halo-exchange", kind="hub-votes"):
+            cur = jax.lax.psum(cur, axis)
+            votes = jax.lax.psum(votes, axis)
+    valid = owner >= 0
+    total = votes.sum(axis=1)
+    cand = jnp.argmax(votes, axis=1).astype(labels.dtype)
+
+    def decide(carry_loads, j):
+        c, p, d = cand[j], cur[j], hdeg[j]
+        ok = valid[j] & (total[j] > 0) & (c != p) & (carry_loads[c] + d <= cap)
+        new = jnp.where(ok, c, p)
+        delta = jnp.where(ok, d, 0.0)
+        carry_loads = carry_loads.at[p].add(-delta).at[new].add(delta)
+        return carry_loads, new
+
+    loads, winners = jax.lax.scan(decide, loads,
+                                  jnp.arange(hub_pad, dtype=jnp.int32))
+    # scatter winners into the owner's slice (non-owned slots hit a dummy
+    # extension row that is trimmed right back off)
+    safe = jnp.where(owner == idx, local, local_n)
+    ext = jnp.concatenate([labels, jnp.zeros((1,), labels.dtype)])
+    return ext.at[safe].set(winners)[:local_n], loads
+
+
+def _expand_vertex_field(x, graph, idx, bps, block_v, axis, wire_dtype=None):
+    """Build one field's drifting view: the (local) slice, then the halo
+    tail the layout's plan exchanges, then the replicated hub region."""
+    if "halo_rows" in graph:
+        y = halo_exchange(x, graph["halo_rows"], idx, bps, block_v, axis)
+    elif "send_ids" in graph:
+        tail = vertex_halo_exchange(x, graph["send_ids"], axis,
+                                    wire_dtype=wire_dtype)
+        y = jnp.concatenate([x, tail]) if tail.shape[0] else x
+    elif axis:
+        y = gather_shards(x, axis)
+    else:
+        y = x
+    if "hub_owner" in graph:
+        y = jnp.concatenate(
+            [y, hub_gather(x, graph["hub_owner"], graph["hub_local"], axis)])
+    return y
+
+
 def _chunk_superstep(algo, cfg, layout, axis, graph, cap, state, step):
     """Scan the (local) blocks with the algorithm's chunk rule.
 
@@ -334,26 +447,34 @@ def _chunk_superstep(algo, cfg, layout, axis, graph, cap, state, step):
     state key used directly — the PR-2 semantics. Sharded: Jacobi across
     shards (gather once, scan local blocks, slice back, merge the exact
     load delta, re-replicate shard 0's chained key). Halo: the Jacobi
-    schedule with the full label gather replaced by the boundary-only
-    exchange — the drifting view is the shard's `local + halo` buffer (own
-    slice first, so intra-shard asynchrony is untouched) and the slab ids
-    in `graph["blk_dst"]` are pre-rewritten into buffer space.
+    schedule with the full label gather replaced by the boundary-block or
+    per-vertex exchange — the drifting view is the shard's `local + halo`
+    buffer (own slice first, so intra-shard asynchrony is untouched) and
+    the slab ids in `graph["blk_dst"]` are pre-rewritten into buffer
+    space. Hub replication appends the psum-assembled hub region to the
+    buffer, freezes hubs during the scan (the layout swapped `vmask` for
+    `vmask_nonhub`), and reconciles their labels by weighted votes after
+    the load merge (`_hub_reconcile`) — also runnable with `axis=None`,
+    where every collective degenerates to the identity (the sequential hub
+    schedule, the 1-shard bit-identity oracle).
     """
     idx = jax.lax.axis_index(axis) if axis else jnp.zeros((), jnp.int32)
     bps = layout.blocks_per_shard if axis else layout.n_blocks
     n_shards = layout.n_blocks // layout.blocks_per_shard if axis else 1
     block_v = layout.block_v
-    halo = "halo_rows" in graph
-    if halo:
-        with obs.annotate("halo-exchange", kind="halo",
+    halo = "halo_rows" in graph or "send_ids" in graph
+    hub_on = "hub_owner" in graph
+    kind = ("halo" if "halo_rows" in graph
+            else "per-vertex" if "send_ids" in graph
+            else "full-gather" if axis else "local")
+    wire_ok = cfg.k <= 127
+    if axis or halo or hub_on:
+        with obs.annotate("halo-exchange", kind=kind, hubs=int(hub_on),
                           fields=len(algo.vertex_fields)):
-            vert = {f: halo_exchange(state[f], graph["halo_rows"], idx, bps,
-                                     block_v, axis)
-                    for f in algo.vertex_fields}
-    elif axis:
-        with obs.annotate("halo-exchange", kind="full-gather",
-                          fields=len(algo.vertex_fields)):
-            vert = {f: gather_shards(state[f], axis)
+            vert = {f: _expand_vertex_field(
+                        state[f], graph, idx, bps, block_v, axis,
+                        wire_dtype=(jnp.int8 if wire_ok and
+                                    f in algo.wire_int8_fields else None))
                     for f in algo.vertex_fields}
     else:
         vert = {f: state[f] for f in algo.vertex_fields}
@@ -388,19 +509,23 @@ def _chunk_superstep(algo, cfg, layout, axis, graph, cap, state, step):
     (vert, loads_end, key_end, score_sum), block_out = \
         jax.lax.scan(scan_step, carry, xs)
 
+    local_n = bps * block_v
+    if halo or hub_on:
+        # the (local) slice leads its buffer; the halo tail and hub region
+        # are read-only within the scan
+        vert = {f: v[:local_n] for f, v in vert.items()}
+    elif axis:
+        v0 = idx * local_n
+        vert = {f: jax.lax.dynamic_slice(v, (v0,), (local_n,))
+                for f, v in vert.items()}
     if axis:
-        local_n = bps * block_v
-        if halo:
-            # the shard's slice leads its buffer; the halo tail is read-only
-            vert = {f: v[:local_n] for f, v in vert.items()}
-        else:
-            v0 = idx * local_n
-            vert = {f: jax.lax.dynamic_slice(v, (v0,), (local_n,))
-                    for f, v in vert.items()}
         # the shard's migrations, recovered exactly (integer-valued f32)
         loads_end = psum_delta_merge(loads0, loads_end - loads0, axis)
         score_sum = jax.lax.psum(score_sum, axis)
         key_end = replicated_chain_key(key_end, axis)
+    if hub_on:
+        vert["labels"], loads_end = _hub_reconcile(
+            graph, cfg.k, cap, axis, idx, vert["labels"], loads_end, local_n)
     return {**vert, **block_out, "loads": loads_end, "key": key_end,
             "score": score_sum}
 
@@ -417,13 +542,19 @@ def _shard_superstep(algo, cfg, layout, axis, graph, cap, state, step):
         blk_w=graph["blk_w"], deg=graph["deg"], inv_wsum=graph["inv_wsum"],
         vmask=graph["vmask"], step=step,
         repl={f: state[f] for f in algo.replicated_fields},
-        halo_rows=graph.get("halo_rows"))
+        halo_rows=graph.get("halo_rows"), send_ids=graph.get("send_ids"),
+        hub_owner=graph.get("hub_owner"), hub_local=graph.get("hub_local"),
+        wire_int8=bool(algo.wire_int8_fields) and cfg.k <= 127)
     local = {f: state[f] for f in algo.vertex_fields}
     upd = algo.shard_rule(cfg, ctx, local, state["loads"], cap, state["key"])
     loads = psum_delta_merge(state["loads"], upd.loads_delta, axis) if axis \
         else state["loads"] + upd.loads_delta
     score = jax.lax.psum(upd.score, axis) if axis else upd.score
-    return {**upd.vert, "loads": loads, "key": upd.key, "score": score}
+    vert = dict(upd.vert)
+    if "hub_owner" in graph:
+        vert["labels"], loads = _hub_reconcile(
+            graph, cfg.k, cap, axis, idx, vert["labels"], loads, local_n)
+    return {**vert, "loads": loads, "key": upd.key, "score": score}
 
 
 _BODIES = {"chunk": _chunk_superstep, "shard": _shard_superstep}
@@ -449,7 +580,9 @@ def _sequential_superstep(algo, cfg, layout, graph, cap, donated, kept):
     obs.record_compile(
         "superstep", algo=algo.name, schedule="sequential",
         n_blocks=layout.n_blocks, block_v=layout.block_v,
-        e_max=int(graph["blk_dst"].shape[-1]))
+        e_max=int(graph["blk_dst"].shape[-1]),
+        hub_pad=(int(graph["hub_owner"].shape[0])
+                 if "hub_owner" in graph else None))
     state = {**donated, **kept}
     step = state.pop("step")
     state.pop("score")
@@ -466,7 +599,11 @@ def _sharded_superstep(algo, cfg, mesh, layout, graph, cap, donated, kept):
         n_blocks=layout.n_blocks, block_v=layout.block_v,
         e_max=int(graph["blk_dst"].shape[-1]),
         b_max=(int(graph["halo_rows"].shape[-1])
-               if "halo_rows" in graph else None))
+               if "halo_rows" in graph else None),
+        h_max=(int(graph["send_ids"].shape[-1])
+               if "send_ids" in graph else None),
+        hub_pad=(int(graph["hub_owner"].shape[0])
+                 if "hub_owner" in graph else None))
     state = {**donated, **kept}
     step = state.pop("step")
     state.pop("score")
@@ -488,7 +625,26 @@ def _sharded_superstep(algo, cfg, mesh, layout, graph, cap, donated, kept):
 # ---------------------------------------------------------------------------
 # public entry points
 # ---------------------------------------------------------------------------
-def superstep(algo: Algorithm, dg, cfg, state):
+def _apply_halo_plan(graph: Dict[str, jnp.ndarray], spec) -> None:
+    """Swap the layout's plan arrays into the superstep's graph dict: the
+    rewritten slabs, the chosen exchange plan, and — when the plan carries
+    hubs — the vote slabs plus the hub-frozen vertex mask."""
+    graph["blk_dst"] = spec.blk_dst_halo
+    if spec.granularity == "vertex":
+        graph["send_ids"] = spec.send_ids
+    else:
+        graph["halo_rows"] = spec.boundary_rows
+    if spec.hub_owner is not None:
+        graph["vmask"] = spec.vmask_nonhub
+        graph["hub_owner"] = spec.hub_owner
+        graph["hub_local"] = spec.hub_local
+        graph["hub_deg"] = spec.hub_deg
+        graph["hub_src"] = spec.hub_src
+        graph["hub_slot"] = spec.hub_slot
+        graph["hub_w"] = spec.hub_w
+
+
+def superstep(algo: Algorithm, dg, cfg, state, halo=None):
     """One full superstep of ``algo`` under ``cfg.chunk_schedule``.
 
     "sequential" runs on one device (``dg`` is a plain DeviceGraph, or a
@@ -496,9 +652,16 @@ def superstep(algo: Algorithm, dg, cfg, state):
     under shard_map on the graph's ``("blocks",)`` mesh (``dg`` must be a
     ShardedDeviceGraph, see ``prepare_sharded_device_graph``); "halo" is the
     sharded schedule with the full label all-gather replaced by the
-    precomputed boundary-only exchange (``dg.halo`` must carry a plan —
-    ``shard_device_graph(..., halo=True)``; a plan whose coverage exceeded
-    its threshold runs the full gather, bit-identically).
+    precomputed exchange plan in ``dg.halo`` — boundary-block slabs or
+    per-vertex rows per the plan's granularity, plus hub replication when
+    the plan carries a hub set (``shard_device_graph(..., halo=True,
+    hubs=...)``); a plan whose coverage exceeded its threshold runs the
+    full gather, bit-identically.
+
+    ``halo`` passes a 1-shard `HaloSpec` to the *sequential* schedule — the
+    hub-replication oracle: the sequential scan then runs on the same
+    rewritten slabs, frozen hubs, and vote reconciliation as a 1-shard halo
+    run, bit-for-bit (`run_partitioner(hub_replication=True)` builds it).
 
     The state fields named in ``algo.donate`` are **donated** under every
     schedule (buffers updated in place); the passed-in state must not be
@@ -527,16 +690,27 @@ def superstep(algo: Algorithm, dg, cfg, state):
                     "build it with shard_device_graph(..., halo=True) / "
                     "attach_halo, or let run_partitioner build it")
             if not spec.fallback:
-                graph["blk_dst"] = spec.blk_dst_halo
-                graph["halo_rows"] = spec.boundary_rows
+                _apply_halo_plan(graph, spec)
             # fallback: coverage too high for the exchange to win — run the
-            # full-gather Jacobi schedule (same trajectory, bit-for-bit)
+            # full-gather Jacobi schedule (same trajectory, bit-for-bit;
+            # hub replication is off under fallback, there is no halo left)
         return _sharded_superstep(algo, cfg, dg.mesh, layout, graph, cap,
                                   donated, sd)
     if isinstance(dg, ShardedDeviceGraph):
         dg = dg.dg
     layout = _Layout(dg.n, dg.n_pad, dg.n_blocks, dg.block_v, dg.n_blocks)
-    return _sequential_superstep(algo, cfg, layout, _graph_arrays(dg), cap,
+    graph = _graph_arrays(dg)
+    if halo is not None and halo.hub_owner is not None and not halo.fallback:
+        if halo.n_shards != 1:
+            raise ValueError(
+                "the sequential schedule takes a 1-shard halo plan; got "
+                f"n_shards={halo.n_shards}")
+        _apply_halo_plan(graph, halo)
+        # a 1-shard plan has no exchange tail (b_max == h_max == 0); drop
+        # the empty plan arrays so only the hub machinery engages
+        graph.pop("halo_rows", None)
+        graph.pop("send_ids", None)
+    return _sequential_superstep(algo, cfg, layout, graph, cap,
                                  donated, sd)
 
 

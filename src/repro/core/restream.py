@@ -19,6 +19,14 @@ ingredients map directly onto the engine's chunk schedule:
     quantile, so hubs settle while the tail is still frozen, then everyone
     refines.
 
+A per-vertex **restream budget** (``restream_budget``, default 32) caps how
+many times any one vertex is re-decided across the run: each active
+re-decision spends one unit of the vertex's budget (tracked in the ``used``
+block field), and an exhausted vertex's label is frozen — the bounded-churn
+guarantee cloud re-streaming wants (a vertex cannot oscillate forever, and
+the tail of the stream cannot be re-litigated without bound). ``0`` lifts
+the cap.
+
 The whole module is rule code: config/state/init plus one ``chunk_rule``.
 Both execution schedules, warm starts through ``run_partitioner`` /
 ``StreamRunner``, donation, and sharded placement are inherited from
@@ -54,6 +62,9 @@ class RestreamConfig:
     gamma: float = 1.0        # load-penalty weight in the greedy objective
     priority_ramp: int = 8    # supersteps over which the degree-ordered
                               # stream unlocks (1 = no prioritization)
+    restream_budget: int = 32  # max re-decisions per vertex across the run
+                               # (0 = unlimited); an exhausted vertex's
+                               # label is frozen, bounding per-vertex churn
 
     def __post_init__(self):
         if self.capacity_mode not in CAPACITY_MODES:
@@ -68,6 +79,10 @@ class RestreamConfig:
             raise ValueError(
                 f"RestreamConfig.priority_ramp must be >= 1, got "
                 f"{self.priority_ramp}")
+        if self.restream_budget < 0:
+            raise ValueError(
+                f"RestreamConfig.restream_budget must be >= 0 "
+                f"(0 = unlimited), got {self.restream_budget}")
 
 
 class RestreamState(NamedTuple):
@@ -75,6 +90,8 @@ class RestreamState(NamedTuple):
     loads: jnp.ndarray    # [k] f32
     rank: jnp.ndarray     # [n_pad] f32 degree-rank percentile (1 = hub);
                           # constant across supersteps (engine-replicated)
+    used: jnp.ndarray     # [n_blocks, block_v] int32 re-decisions spent per
+                          # vertex (gates against cfg.restream_budget)
     key: jax.Array
     step: jnp.ndarray
     score: jnp.ndarray
@@ -95,6 +112,7 @@ def restream_init(dg: DeviceGraph, cfg: RestreamConfig, key: jax.Array) -> Restr
         labels=labels,
         loads=engine.loads_from_labels(dg, cfg.k, labels),
         rank=_degree_ranks(dg),
+        used=jnp.zeros((dg.n_blocks, dg.block_v), jnp.int32),
         key=key,
         step=jnp.zeros((), jnp.int32),
         score=jnp.zeros((), jnp.float32),
@@ -114,6 +132,7 @@ def restream_init_from_labels(
         labels=lab,
         loads=engine.loads_from_labels(dg, cfg.k, lab),
         rank=_degree_ranks(dg),
+        used=jnp.zeros((dg.n_blocks, dg.block_v), jnp.int32),
         key=key,
         step=jnp.zeros((), jnp.int32),
         score=jnp.zeros((), jnp.float32),
@@ -137,6 +156,13 @@ def _restream_chunk_rule(cfg: RestreamConfig, ctx: engine.ChunkContext,
     # (t+1)/priority_ramp degree quantile; after the ramp, everyone
     unlock = 1.0 - (ctx.step.astype(jnp.float32) + 1.0) / cfg.priority_ramp
     active = (rank >= unlock) & ctx.vmask
+    # per-vertex restream budget: a vertex re-decided restream_budget times
+    # is frozen at its current label — bounding how often any one vertex
+    # churns across the run (0 = unlimited)
+    used = block["used"]
+    if cfg.restream_budget:
+        active &= used < cfg.restream_budget
+    used = used + active.astype(used.dtype)
 
     # greedy objective against the freshest configuration (async view)
     with obs.annotate("edge-phase", impl="jnp"):
@@ -170,7 +196,7 @@ def _restream_chunk_rule(cfg: RestreamConfig, ctx: engine.ChunkContext,
     loads = loads.at[cur].add(-dmig).at[cand].add(dmig)
     return engine.ChunkUpdate(
         vert={"labels": new_lbl},
-        block={},
+        block={"used": used},
         loads=loads,
         key=key,
         score=score,
@@ -183,8 +209,10 @@ RESTREAM = register(engine.Algorithm(
     state_cls=RestreamState,
     kind="chunk",
     vertex_fields=("labels",),
+    wire_int8_fields=("labels",),
+    block_fields=("used",),
     replicated_fields=("rank",),
-    donate=("labels", "loads"),
+    donate=("labels", "loads", "used"),
     init=restream_init,
     init_from_labels=restream_init_from_labels,
     chunk_rule=_restream_chunk_rule,

@@ -319,6 +319,7 @@ REVOLVER = register(engine.Algorithm(
     state_cls=RevolverState,
     kind="chunk",
     vertex_fields=("labels", "lam"),
+    wire_int8_fields=("labels", "lam"),   # both in [0, k)
     block_fields=("probs",),
     donate=("labels", "lam", "probs", "loads"),
     init=revolver_init,

@@ -46,7 +46,7 @@ from repro.core.device_graph import (
     shard_device_graph,
     vertices_to_original,
 )
-from repro.core.halo import DEFAULT_HALO_THRESHOLD
+from repro.core.halo import DEFAULT_HALO_THRESHOLD, HubConfig, build_halo_spec
 from repro.core.metrics import local_edges, max_normalized_load
 from repro.core.registry import StaticAlgorithm, get_algorithm
 from repro.graphs.csr import Graph
@@ -390,6 +390,10 @@ def run_partitioner(
     mesh=None,
     assignment="contiguous",
     halo_threshold: float = DEFAULT_HALO_THRESHOLD,
+    halo_granularity: str = "auto",
+    hub_replication: bool = False,
+    hub_quantile: float = 0.0,
+    hub_target_coverage: Optional[float] = None,
     sync_every: int = 1,
     init_labels: Optional[np.ndarray] = None,
     init_probs: Optional[np.ndarray] = None,
@@ -434,6 +438,19 @@ def run_partitioner(
     the halo, making the exchanged traffic proportional to partition
     quality. Returned labels (and probs) are always in original vertex
     order, whatever the assignment.
+
+    `halo_granularity` ("auto" | "block" | "vertex") picks the halo
+    exchange unit: whole boundary blocks, or the exact per-vertex need
+    lists moved by all-to-all with label-valued fields on an int8 wire
+    (`repro.core.halo`; "auto" takes whichever moves fewer elements).
+    `hub_replication=True` mirrors the top-degree vertices into every
+    shard's replicated buffer region and reconciles their labels each
+    superstep by a global weighted vote (`hub_quantile` /
+    `hub_target_coverage` size the hub set, see `HubConfig`). On the
+    sequential schedule hub replication runs the same plan on a 1-shard
+    spec — the oracle trajectory the sharded hub mode is checked against;
+    it is incompatible with `chunk_schedule="sharded"` (the full gather
+    already replicates everything).
 
     `trace` (a `repro.obs.Tracer`; default off) records the run into a
     perfetto-exportable trace: a "run-partitioner" root span, layout build,
@@ -491,6 +508,24 @@ def run_partitioner(
         raise ValueError(
             "assignment is only meaningful with chunk_schedule="
             "'sharded'/'halo'")
+    if halo_granularity not in ("auto", "block", "vertex"):
+        raise ValueError(
+            f"halo_granularity={halo_granularity!r} is not one of "
+            "('auto', 'block', 'vertex')")
+    if halo_granularity != "auto" and schedule != "halo":
+        raise ValueError(
+            "halo_granularity is only meaningful with chunk_schedule='halo'")
+    if not hub_replication and (hub_quantile or hub_target_coverage is not None):
+        raise ValueError(
+            "hub_quantile/hub_target_coverage need hub_replication=True")
+    if hub_replication and schedule == "sharded":
+        raise ValueError(
+            "hub_replication is incompatible with chunk_schedule='sharded' "
+            "(the full gather already replicates every vertex); use "
+            "chunk_schedule='halo' or the sequential schedule")
+    hubs = (HubConfig(quantile=hub_quantile,
+                      target_coverage=hub_target_coverage)
+            if hub_replication else None)
     if static and cfg_kwargs:
         raise TypeError(f"{algo!r} runs no supersteps; it takes no config kwargs")
     if static and (checkpoint_dir is not None or guard != "off"):
@@ -508,6 +543,7 @@ def run_partitioner(
             seed=seed, n_blocks=n_blocks, max_steps=max_steps,
             track_history=track_history, dg=dg, mesh=mesh,
             assignment=assignment, halo_threshold=halo_threshold,
+            halo_granularity=halo_granularity, hubs=hubs,
             sync_every=sync_every, init_labels=init_labels,
             init_probs=init_probs, init_sharpen=init_sharpen,
             keep_probs=keep_probs, checkpoint_dir=checkpoint_dir,
@@ -528,7 +564,8 @@ def _run_partitioner_traced(
     tracer, algorithm, static, schedule, sharded,
     algo: str, graph: Graph, k: int, t0: float, *,
     seed, n_blocks, max_steps, track_history, dg, mesh, assignment,
-    halo_threshold, sync_every, init_labels, init_probs, init_sharpen,
+    halo_threshold, halo_granularity, hubs,
+    sync_every, init_labels, init_probs, init_sharpen,
     keep_probs, checkpoint_dir, checkpoint_every, resume, keep_checkpoints,
     guard, cfg_kwargs,
 ) -> PartitionResult:
@@ -546,10 +583,13 @@ def _run_partitioner_traced(
             if dg is None:
                 dg = prepare_sharded_device_graph(
                     graph, mesh, n_blocks=n_blocks, assignment=assignment,
-                    halo=halo, halo_threshold=halo_threshold)
+                    halo=halo, halo_threshold=halo_threshold,
+                    halo_granularity=halo_granularity, hubs=hubs)
             elif not isinstance(dg, ShardedDeviceGraph):
                 dg = shard_device_graph(dg, mesh, assignment=assignment,
-                                        halo=halo, halo_threshold=halo_threshold)
+                                        halo=halo, halo_threshold=halo_threshold,
+                                        halo_granularity=halo_granularity,
+                                        hubs=hubs)
             else:
                 if not (isinstance(assignment, str)
                         and assignment == "contiguous"):
@@ -562,7 +602,9 @@ def _run_partitioner_traced(
                         "shard_device_graph / prepare_sharded_device_graph "
                         "when building the layout")
                 if halo and dg.halo is None:
-                    dg = attach_halo(dg, halo_threshold)
+                    dg = attach_halo(dg, halo_threshold,
+                                     halo_granularity=halo_granularity,
+                                     hubs=hubs)
         elif dg is None:
             dg = prepare_device_graph(graph, n_blocks=n_blocks)
     if tracer.enabled and sharded:
@@ -571,14 +613,34 @@ def _run_partitioner_traced(
         n_fields = 1 if static else len(algorithm.vertex_fields)
         if dg.halo is not None:
             spec = dg.halo
+            # per-field wire width: label-valued fields ride the int8 wire
+            # on the per-vertex exchange (exact for k <= 127), everything
+            # else moves at storage width
+            if static:
+                wire_sum = 4 * n_fields
+            else:
+                wire_sum = sum(
+                    spec.wire_bytes_per_elem(
+                        k, f in algorithm.wire_int8_fields)
+                    for f in algorithm.vertex_fields)
             tracer.counter("halo_b_max", spec.b_max)
+            tracer.counter("halo_h_max", spec.h_max)
             tracer.counter("halo_coverage", spec.coverage)
             tracer.counter(
                 "gathered_bytes_halo",
-                spec.gathered_elems_per_device() * 4 * n_fields)
+                spec.gathered_elems_per_device() * wire_sum)
             tracer.counter(
                 "gathered_bytes_full",
                 spec.full_gather_elems_per_device() * 4 * n_fields)
+            if spec.granularity == "vertex" and not spec.fallback:
+                tracer.counter(
+                    "pervertex_halo_bytes",
+                    spec.gathered_elems_per_device() * wire_sum)
+            tracer.counter("hub_count", spec.n_hubs)
+            if spec.n_hubs:
+                tracer.counter(
+                    "replica_vote_bytes",
+                    spec.hub_sync_elems_per_device(k, n_fields) * 4)
         else:
             n_shards = int(dg.mesh.devices.size)
             per_dev = (n_shards - 1) * (dg.n_blocks // n_shards) * dg.block_v
@@ -627,7 +689,18 @@ def _run_partitioner_traced(
         state = algorithm.init(dg, cfg, key)
     if sharded:
         state = engine.place_state(algorithm, state, dg)
-    base_step = lambda s: engine.superstep(algorithm, dg, cfg, s)
+    seq_halo = None
+    if hubs is not None and not sharded:
+        # sequential hub oracle: run the same hub plan on a 1-shard spec —
+        # the reference trajectory the sharded hub mode is checked against
+        # bit-exactly (quantile hub selection is shard-count independent)
+        seq_halo = build_halo_spec(
+            np.asarray(dg.blk_dst), np.asarray(dg.blk_w), 1, dg.block_v,
+            threshold=halo_threshold, hubs=hubs,
+            deg=np.asarray(dg.deg_out), vmask=np.asarray(dg.vmask),
+            blk_row=np.asarray(dg.blk_row))
+    base_step = lambda s: engine.superstep(algorithm, dg, cfg, s,
+                                           halo=seq_halo)
 
     # ---- crash safety: checkpoint manager + resume -----------------------
     ckpt = None

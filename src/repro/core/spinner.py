@@ -138,6 +138,7 @@ SPINNER = register(engine.Algorithm(
     state_cls=SpinnerState,
     kind="shard",
     vertex_fields=("labels",),
+    wire_int8_fields=("labels",),
     donate=("labels", "loads"),
     init=spinner_init,
     init_from_labels=spinner_init_from_labels,

@@ -40,6 +40,19 @@ def main(argv=None):
     ap.add_argument("--assignment", default="contiguous",
                     choices=["contiguous", "locality"],
                     help="block->shard mapping for sharded/halo schedules")
+    ap.add_argument("--halo-granularity", default="auto",
+                    choices=["auto", "block", "vertex"],
+                    help="halo exchange unit (halo schedule only): whole "
+                         "boundary blocks or per-vertex need lists on an "
+                         "int8 wire; auto takes whichever moves fewer "
+                         "elements")
+    ap.add_argument("--hub-replication", action="store_true",
+                    help="mirror top-degree vertices into every shard and "
+                         "reconcile their labels by a per-superstep global "
+                         "vote (halo schedule; see repro.core.halo)")
+    ap.add_argument("--hub-quantile", type=float, default=0.0,
+                    help="degree quantile above which vertices are hubs "
+                         "(0 = auto-size the hub set from halo coverage)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sync-every", type=int, default=1,
                     help="device->host score fetch window (supersteps); "
@@ -93,6 +106,11 @@ def main(argv=None):
                           sync_every=args.sync_every, guard=args.guard)
             if args.chunk_schedule != "sequential":
                 kwargs["assignment"] = args.assignment
+            if args.chunk_schedule == "halo":
+                kwargs["halo_granularity"] = args.halo_granularity
+            if args.hub_replication:
+                kwargs["hub_replication"] = True
+                kwargs["hub_quantile"] = args.hub_quantile
             if args.checkpoint_dir:
                 # per-algo subdir: one CLI invocation runs several
                 # algorithms; their checkpoints must not collide

@@ -91,6 +91,59 @@ def psum_delta_merge(base, delta, axis: str):
     return base + jax.lax.psum(delta, axis)
 
 
+def vertex_halo_exchange(x, send_ids, axis: str, wire_dtype=None):
+    """Per-vertex (sub-block) halo sync: one ragged all-to-all.
+
+    ``x`` is the shard's local per-vertex slice ``[local_n]``;
+    ``send_ids[s, t]`` (replicated ``[S, S, h_max]`` int32, see
+    `repro.core.halo.build_halo_spec`) lists the local rows shard ``s``
+    sends to shard ``t``, 0-padded. Each shard gathers the rows it owes
+    every peer and a single ``all_to_all`` routes them: the returned
+    ``[S * h_max]`` tail holds, at ``t * h_max + p``, the p-th vertex this
+    shard needs from shard ``t`` — exactly the positions the host-side slab
+    rewrite points at. Cross-device traffic is ``(S-1) * h_max`` elements
+    per field (the self-chunk never leaves the device), vs
+    ``(S-1) * b_max * block_v`` for the block-granularity exchange.
+
+    ``wire_dtype`` (e.g. ``jnp.int8`` for label-valued fields when
+    ``k <= 127``) narrows the wire format of the exchange: values are cast
+    before the all_to_all and restored after, an *exact* round trip for
+    in-range values — the same wire-compression move as `ef_int8_psum`,
+    worth another 4x in bytes on top of the need-list reduction.
+
+    The rows delivered are the same start-of-superstep snapshots the full
+    gather would deliver, so the per-vertex plan is an exact optimization
+    of the Jacobi sync (bit-identity gated by tests and the scaling bench).
+    """
+    n_shards, _, h_max = send_ids.shape
+    if h_max == 0:                    # no cross-shard references at all
+        return jnp.zeros((0,), x.dtype)
+    idx = jax.lax.axis_index(axis)
+    mine = jnp.take(send_ids, idx, axis=0)                    # [S, h_max]
+    contrib = jnp.take(x, mine.reshape(-1), axis=0).reshape(mine.shape)
+    if wire_dtype is not None:
+        contrib = contrib.astype(wire_dtype)
+    recv = jax.lax.all_to_all(contrib, axis, split_axis=0, concat_axis=0)
+    return recv.reshape(-1).astype(x.dtype)
+
+
+def hub_gather(x, hub_owner, hub_local, axis):
+    """Assemble the replicated hub region from the owners' local slices.
+
+    Exactly one shard owns each hub slot (`hub_owner`; pad slots carry -1
+    and assemble to 0), so masking non-owners to zero and psum-ing is an
+    exact broadcast — O(hub_pad) traffic per field, no carried replica
+    state. With ``axis=None`` (the sequential schedule) the psum is the
+    identity and owner 0 contributes directly.
+    """
+    vals = jnp.take(x, jnp.maximum(hub_local, 0), axis=0)
+    if axis is None:
+        return jnp.where(hub_owner == 0, vals, jnp.zeros_like(vals))
+    idx = jax.lax.axis_index(axis)
+    vals = jnp.where(hub_owner == idx, vals, jnp.zeros_like(vals))
+    return jax.lax.psum(vals, axis)
+
+
 def shard_chain_key(key, axis: str):
     """Per-shard PRNG chain root: shard 0 keeps ``key``, shard s folds in s.
 

@@ -37,7 +37,7 @@ from repro.core.device_graph import (
     ShardedDeviceGraph,
     block_vertex_perms,
 )
-from repro.core.halo import DEFAULT_HALO_THRESHOLD, build_halo_spec
+from repro.core.halo import DEFAULT_HALO_THRESHOLD, HubConfig, build_halo_spec
 from repro.graphs.blocking import (
     block_adjacency,
     block_slab_sizes,
@@ -281,6 +281,17 @@ class IncrementalDeviceGraph:
         if isinstance(assignment, np.ndarray):
             self._set_perm(assignment)
         self._b_max_floor = 0
+        # per-vertex / hub plan floors — same monotonic discipline as
+        # _b_max_floor: the jitted superstep's shapes only change when an
+        # exchange genuinely outgrows its padding or the hub set grows
+        self._h_max_floor = 0
+        self._hub_pad_floor = 0
+        self._he_max_floor = 0
+        self._hub_ids: Tuple[int, ...] = ()
+        # host copies of the per-vertex arrays (storage order), kept for the
+        # hub-selection pass in as_sharded
+        self._deg_host: Optional[np.ndarray] = None
+        self._vmask_host: Optional[np.ndarray] = None
 
     def _set_perm(self, perm: np.ndarray):
         perm = np.asarray(perm, dtype=np.int64)
@@ -308,6 +319,26 @@ class IncrementalDeviceGraph:
         halo superstep is compiled for; growth means a recompile
         (`StreamRunner` attributes it as a "halo-widen" event)."""
         return self._b_max_floor
+
+    @property
+    def h_max_floor(self) -> int:
+        """Monotonic per-vertex need-list padding (per shard pair) — the
+        vertex-granularity analogue of `b_max_floor`."""
+        return self._h_max_floor
+
+    @property
+    def hub_pad_floor(self) -> int:
+        """Monotonic replicated-hub-region length; growth means the hub set
+        was promoted (`StreamRunner` attributes it as a "hub-promote"
+        event)."""
+        return self._hub_pad_floor
+
+    @property
+    def hub_ids(self) -> Tuple[int, ...]:
+        """The replicated hub set (monotonic across deltas — once a vertex
+        is mirrored everywhere, demoting it would reshuffle every shard's
+        buffer layout for no traffic win)."""
+        return self._hub_ids
 
     def _round_e(self, need: int) -> int:
         return -(-max(need, 1) // self.edge_chunk) * self.edge_chunk
@@ -363,15 +394,22 @@ class IncrementalDeviceGraph:
         *,
         halo: bool = False,
         halo_threshold: float = DEFAULT_HALO_THRESHOLD,
+        halo_granularity: str = "auto",
+        hubs: Optional[HubConfig] = None,
     ) -> ShardedDeviceGraph:
         """Wrap the latest device layout for the sharded/halo schedules.
 
         The arrays are already mesh-aligned, permuted, and placed; this
         attaches the assignment metadata (so carried labels/probs convert
-        at the API boundary) and, for `halo=True`, the boundary-exchange
-        plan rebuilt against the current slabs (`b_max` floored at its
-        historical maximum so the jitted superstep's shapes are stable
-        while the halo only drifts, not widens).
+        at the API boundary) and, for `halo=True`, the exchange plan
+        rebuilt against the current slabs (`halo_granularity` / `hubs` as
+        in `build_halo_spec`). Every exchange shape is floored at its
+        historical maximum — `b_max`, the per-vertex `h_max`, the hub
+        region `hub_pad`, and the vote-table `he_max` — so the jitted
+        superstep keeps its shapes while the halo only drifts; growth past
+        a floor recompiles (a "halo-widen" or, for the hub region, a
+        "hub-promote" event). The hub set itself is monotonic: hubs
+        promoted by an earlier delta stay replicated.
         """
         if self.mesh is None:
             raise ValueError("as_sharded needs a mesh-aligned layout")
@@ -382,9 +420,22 @@ class IncrementalDeviceGraph:
         if halo:
             spec = build_halo_spec(
                 self._blk_dst, self._blk_w, n_shards, self.block_v,
-                threshold=halo_threshold, b_max_floor=self._b_max_floor,
+                threshold=halo_threshold, granularity=halo_granularity,
+                b_max_floor=self._b_max_floor,
+                h_max_floor=self._h_max_floor,
+                hubs=hubs,
+                deg=self._deg_host, vmask=self._vmask_host,
+                blk_row=self._blk_row,
+                hub_ids_floor=self._hub_ids,
+                hub_pad_floor=self._hub_pad_floor,
+                he_max_floor=self._he_max_floor,
                 mesh=self.mesh)
             self._b_max_floor = spec.b_max
+            self._h_max_floor = spec.h_max
+            if not spec.fallback:
+                self._hub_ids = tuple(int(h) for h in spec.hub_ids)
+                self._hub_pad_floor = max(self._hub_pad_floor, spec.hub_pad)
+                self._he_max_floor = max(self._he_max_floor, spec.he_max)
         return ShardedDeviceGraph(
             dg=self.device_graph,
             mesh=self.mesh,
@@ -431,6 +482,8 @@ class IncrementalDeviceGraph:
             edge_dst = self.o2s[edge_dst]
             dir_src = self.o2s[dir_src]
             dir_dst = self.o2s[dir_dst]
+        # storage-order host copies feed the hub-selection pass (as_sharded)
+        self._deg_host, self._vmask_host = deg_out, vmask
         if self.mesh is not None:
             # device-aligned placement: each slab row / per-vertex slice goes
             # straight from host to its owning device; flat metric arrays

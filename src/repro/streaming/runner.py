@@ -45,7 +45,7 @@ from repro import faults, obs
 from repro.checkpoint import store as ckpt_store
 from repro.core import engine
 from repro.core.device_graph import vertices_to_original
-from repro.core.halo import DEFAULT_HALO_THRESHOLD
+from repro.core.halo import DEFAULT_HALO_THRESHOLD, HubConfig
 from repro.core.metrics import local_edges, max_normalized_load
 from repro.core.registry import Algorithm, get_algorithm
 from repro.core.runner import run_convergence_loop
@@ -120,11 +120,24 @@ class StreamRunner:
     held fixed, with dirty slabs still landing directly on their owning
     shard under the permuted layout. Carried labels/probabilities stay in
     original vertex order regardless of the assignment.
+
+    `halo_granularity` / `hub_replication` (+ `hub_quantile` /
+    `hub_target_coverage`) select the per-vertex exchange plan and hub
+    replication exactly as in `run_partitioner`, rebuilt per delta with
+    monotonic shape floors: `h_max` / `b_max` growth is a "halo-widen"
+    recompile, hub-region growth a "hub-promote" one, and the hub set only
+    ever grows across the stream (promoted hubs stay replicated). The
+    floors and hub set ride the stream checkpoints, so a resumed runner
+    compiles the same shapes and continues bit-identically.
     """
 
     def __init__(self, n: int, cfg: StreamConfig, *, algo: str = "revolver",
                  seed: int = 0, mesh=None, assignment="contiguous",
                  halo_threshold: float = DEFAULT_HALO_THRESHOLD,
+                 halo_granularity: str = "auto",
+                 hub_replication: bool = False,
+                 hub_quantile: float = 0.0,
+                 hub_target_coverage: Optional[float] = None,
                  trace=None, checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 1, resume: bool = False,
                  keep_checkpoints: int = 2, **algo_kwargs):
@@ -175,6 +188,26 @@ class StreamRunner:
         self.mesh = mesh
         self._halo = self.rcfg.chunk_schedule == "halo"
         self._halo_threshold = halo_threshold
+        if halo_granularity not in ("auto", "block", "vertex"):
+            raise ValueError(
+                f"halo_granularity={halo_granularity!r} is not one of "
+                "('auto', 'block', 'vertex')")
+        if halo_granularity != "auto" and not self._halo:
+            raise ValueError(
+                "halo_granularity is only meaningful with "
+                "chunk_schedule='halo'")
+        if not hub_replication and (hub_quantile
+                                    or hub_target_coverage is not None):
+            raise ValueError(
+                "hub_quantile/hub_target_coverage need hub_replication=True")
+        if hub_replication and not self._halo:
+            raise ValueError(
+                "streaming hub replication rides the halo exchange plan; "
+                "use chunk_schedule='halo'")
+        self._halo_granularity = halo_granularity
+        self._hubs = (HubConfig(quantile=hub_quantile,
+                                target_coverage=hub_target_coverage)
+                      if hub_replication else None)
         self.idg = IncrementalDeviceGraph(
             n, n_blocks=cfg.n_blocks, e_headroom=cfg.e_headroom, mesh=mesh,
             assignment=assignment,
@@ -268,16 +301,33 @@ class StreamRunner:
                 # (IncrementalDeviceGraph owns the mesh and the assignment);
                 # this wraps them with the metadata the sharded/halo schedules
                 # and the label-order conversions need
-                prev_floor = self.idg.b_max_floor
-                dg = self.idg.as_sharded(halo=self._halo,
-                                         halo_threshold=self._halo_threshold)
-                if self._halo and 0 < prev_floor < self.idg.b_max_floor:
+                prev_b = self.idg.b_max_floor
+                prev_h = self.idg.h_max_floor
+                prev_hub = self.idg.hub_pad_floor
+                dg = self.idg.as_sharded(
+                    halo=self._halo, halo_threshold=self._halo_threshold,
+                    halo_granularity=self._halo_granularity, hubs=self._hubs)
+                widened = (0 < prev_b < self.idg.b_max_floor
+                           or 0 < prev_h < self.idg.h_max_floor)
+                promoted = 0 < prev_hub < self.idg.hub_pad_floor
+                if self._halo and promoted:
+                    # the hub region outgrew its padding: new hubs were
+                    # promoted into every shard's replicated buffer
+                    tracer.note_recompile_cause("hub-promote")
+                    if not tracer.enabled:
+                        _log.warning(
+                            "delta %d: hub set grew to hub_pad=%d, "
+                            "recompiling the refine superstep (pass trace= "
+                            "for attributed recompile events)",
+                            idx, self.idg.hub_pad_floor)
+                elif self._halo and widened:
                     tracer.note_recompile_cause("halo-widen")
                     if not tracer.enabled:
                         _log.warning(
-                            "delta %d: halo widened to b_max=%d, recompiling "
-                            "the refine superstep (pass trace= for attributed "
-                            "recompile events)", idx, self.idg.b_max_floor)
+                            "delta %d: halo widened to b_max=%d/h_max=%d, "
+                            "recompiling the refine superstep (pass trace= "
+                            "for attributed recompile events)",
+                            idx, self.idg.b_max_floor, self.idg.h_max_floor)
         if tracer.enabled:
             tracer.counter("delta_m", info.m, step=idx)
             tracer.counter("delta_added_edges", info.added, step=idx)
@@ -286,15 +336,31 @@ class StreamRunner:
             if self._halo and getattr(dg, "halo", None) is not None:
                 spec = dg.halo
                 n_fields = len(self.algo.vertex_fields)
+                k = self.cfg.k
+                wire_sum = sum(
+                    spec.wire_bytes_per_elem(
+                        k, f in self.algo.wire_int8_fields)
+                    for f in self.algo.vertex_fields)
                 tracer.counter("halo_b_max", spec.b_max, step=idx)
+                tracer.counter("halo_h_max", spec.h_max, step=idx)
                 tracer.counter("halo_coverage", spec.coverage, step=idx)
                 tracer.counter(
                     "gathered_bytes_halo",
-                    spec.gathered_elems_per_device() * 4 * n_fields, step=idx)
+                    spec.gathered_elems_per_device() * wire_sum, step=idx)
                 tracer.counter(
                     "gathered_bytes_full",
                     spec.full_gather_elems_per_device() * 4 * n_fields,
                     step=idx)
+                if spec.granularity == "vertex" and not spec.fallback:
+                    tracer.counter(
+                        "pervertex_halo_bytes",
+                        spec.gathered_elems_per_device() * wire_sum, step=idx)
+                tracer.counter("hub_count", spec.n_hubs, step=idx)
+                if spec.n_hubs:
+                    tracer.counter(
+                        "replica_vote_bytes",
+                        spec.hub_sync_elems_per_device(k, n_fields) * 4,
+                        step=idx)
 
         with tracer.span("warm-start", idx=idx, cold=self.labels is None):
             self._key, k_init = jax.random.split(self._key)
@@ -387,6 +453,10 @@ class StreamRunner:
             "n": idg.n, "m": idg.inc.m,
             "deltas": self.deltas_ingested, "steps": self.total_steps,
             "e_max": idg.e_max, "b_max_floor": idg.b_max_floor,
+            "h_max_floor": idg.h_max_floor,
+            "hub_pad_floor": idg.hub_pad_floor,
+            "he_max_floor": idg._he_max_floor,
+            "hub_ids": [int(h) for h in idg.hub_ids],
             "perm_decided": idg._perm_decided,
             "n_blocks": idg.n_blocks, "block_v": idg.block_v,
         }
@@ -475,6 +545,10 @@ class StreamRunner:
             idg._blk_row = arrays["blk_row"].astype(np.int32)
             idg._blk_w = arrays["blk_w"].astype(np.float32)
             idg._b_max_floor = int(meta.get("b_max_floor", 0))
+            idg._h_max_floor = int(meta.get("h_max_floor", 0))
+            idg._hub_pad_floor = int(meta.get("hub_pad_floor", 0))
+            idg._he_max_floor = int(meta.get("he_max_floor", 0))
+            idg._hub_ids = tuple(int(h) for h in meta.get("hub_ids", ()))
             if "block_perm" in arrays:
                 idg._set_perm(arrays["block_perm"].astype(np.int64))
             idg._perm_decided = bool(meta.get("perm_decided", True))

@@ -13,10 +13,15 @@ with:
     supersteps, scores to float tolerance (psum association).
   * ``halo_parity`` — ``chunk_schedule="halo"`` vs ``"sharded"`` at 8
     shards on WIKI/LJ/USA (contiguous + locality assignments, coverage
-    fallback disabled): the boundary-only exchange must reproduce the
-    full-gather trajectory bit-for-bit on labels/loads/probs.
+    fallback disabled, block and per-vertex granularities): the halo
+    exchange — boundary block slabs, or per-vertex need lists moving labels
+    on the int8 wire — must reproduce the full-gather trajectory
+    bit-for-bit on labels/loads/probs.
   * ``quality`` — sharded-vs-sequential local-edges ratio on WIKI and LJ at
     k=8 after a fixed step budget (the Jacobi merge's quality cost).
+  * ``hub_quality`` — 8-shard hub replication vs the full-gather reference:
+    hubs change the trajectory (frozen scan + vote reconcile), so the gate
+    is a quality ratio + balance bound rather than bit-identity.
 """
 import json
 import sys
@@ -135,10 +140,11 @@ def jacobi_parity(n_shards: int, n_blocks: int, steps: int = 5) -> dict:
 
 def halo_parity(dataset: str, *, scale: float, n_shards: int = 8,
                 n_blocks: int = 64, steps: int = 5, k: int = 8,
-                assignment="contiguous") -> dict:
+                assignment="contiguous", granularity="auto") -> dict:
     """chunk_schedule="halo" vs "sharded" on the same fixed assignment:
-    the boundary exchange is an exact optimization of the full-gather sync,
-    so labels/loads/probs must match bit-for-bit over the trajectory.
+    the exchange (boundary blocks, or per-vertex need lists with the int8
+    label wire) is an exact optimization of the full-gather sync, so
+    labels/loads/probs must match bit-for-bit over the trajectory.
     threshold=2.0 disables the coverage fallback so the real halo path runs
     even on power-law graphs whose halo covers every block."""
     g = load_dataset(dataset, scale=scale, seed=0)
@@ -146,7 +152,9 @@ def halo_parity(dataset: str, *, scale: float, n_shards: int = 8,
     kwargs = dict(n_blocks=n_blocks, assignment=assignment)
     sdg = prepare_sharded_device_graph(g, mesh, **kwargs)
     sdg_halo = prepare_sharded_device_graph(g, mesh, halo=True,
-                                            halo_threshold=2.0, **kwargs)
+                                            halo_threshold=2.0,
+                                            halo_granularity=granularity,
+                                            **kwargs)
     cfg_sh = RevolverConfig(k=k, chunk_schedule="sharded")
     cfg_halo = RevolverConfig(k=k, chunk_schedule="halo")
     key = jax.random.PRNGKey(0)
@@ -163,6 +171,7 @@ def halo_parity(dataset: str, *, scale: float, n_shards: int = 8,
         "assignment": assignment if isinstance(assignment, str) else "explicit",
         "b_max": spec.b_max, "blocks_per_shard": spec.blocks_per_shard,
         "coverage": spec.coverage,
+        "granularity": spec.granularity, "h_max": spec.h_max,
         "labels_equal": bool((np.asarray(st_sh.labels)
                               == np.asarray(st_halo.labels)).all()),
         "loads_equal": bool((np.asarray(st_sh.loads)
@@ -188,6 +197,30 @@ def quality(dataset: str, *, scale: float, steps: int, k: int = 8) -> dict:
     }
 
 
+def hub_quality(dataset: str, *, scale: float, steps: int, k: int = 8,
+                n_blocks: int = 64, quantile: float = 0.95) -> dict:
+    """8-shard hub mode vs the 8-shard full-gather reference: hub freezing
+    + vote reconciliation change the trajectory (not an exact optimization
+    like the hubs-off exchanges), so the gate is quality + balance, not
+    bit-identity — documented in core/README.md."""
+    g = load_dataset(dataset, scale=scale, seed=0)
+    mesh = make_blocks_mesh(8)
+    common = dict(seed=0, max_steps=steps, patience=10_000,
+                  track_history=False, n_blocks=n_blocks, mesh=mesh)
+    sh = run_partitioner("revolver", g, k, chunk_schedule="sharded", **common)
+    hub = run_partitioner("revolver", g, k, chunk_schedule="halo",
+                          halo_threshold=2.0, hub_replication=True,
+                          hub_quantile=quantile, **common)
+    return {
+        "dataset": dataset, "n": g.n, "m": g.m, "steps": steps,
+        "quantile": quantile,
+        "sharded_local_edges": sh.local_edges,
+        "hub_local_edges": hub.local_edges,
+        "quality_ratio": hub.local_edges / max(sh.local_edges, 1e-9),
+        "hub_max_norm_load": hub.max_norm_load,
+    }
+
+
 def main() -> int:
     assert jax.device_count() >= 8, (
         f"worker needs 8 host devices, has {jax.device_count()}")
@@ -199,15 +232,24 @@ def main() -> int:
         ],
         "halo_parity": [
             # the acceptance gate: halo == sharded bit-for-bit at 8 host
-            # devices on WIKI/LJ, contiguous and locality assignments
-            halo_parity("WIKI", scale=5e-4),
-            halo_parity("LJ", scale=3e-4),
-            halo_parity("USA", scale=5e-4),   # the genuinely sparse halo
-            halo_parity("WIKI", scale=5e-4, assignment="locality"),
+            # devices on WIKI/LJ, contiguous and locality assignments,
+            # block and per-vertex (int8 label wire) granularities
+            halo_parity("WIKI", scale=5e-4, granularity="block"),
+            halo_parity("LJ", scale=3e-4, granularity="block"),
+            halo_parity("USA", scale=5e-4, granularity="block"),
+            halo_parity("WIKI", scale=5e-4, granularity="block",
+                        assignment="locality"),
+            halo_parity("WIKI", scale=5e-4, granularity="vertex"),
+            halo_parity("LJ", scale=3e-4, granularity="vertex"),
+            halo_parity("USA", scale=5e-4, granularity="vertex",
+                        assignment="locality"),
         ],
         "quality": [
             quality("WIKI", scale=5e-4, steps=40),
             quality("LJ", scale=3e-4, steps=40),
+        ],
+        "hub_quality": [
+            hub_quality("WIKI", scale=5e-4, steps=40),
         ],
     }
     print("SHARDED_PARITY_JSON:" + json.dumps(result))

@@ -70,21 +70,57 @@ class TestHaloSpec:
         assert local[2, 0] == 1 * BV      # block 3 is shard 1's local block 1
 
     def test_full_halo_falls_back(self):
-        """Every block referencing every remote block: coverage 1.0 — the
-        exchange cannot beat the all-gather, so the plan falls back."""
+        """Every block referencing every remote block: block coverage 1.0 —
+        pinned to block granularity the exchange cannot beat the all-gather,
+        so the plan falls back."""
         refs = {b: list(range(4)) for b in range(4)}
         dst, w = slabs(4, 4, refs)
-        spec = build_halo_spec(dst, w, 2, BV)
+        spec = build_halo_spec(dst, w, 2, BV, granularity="block")
         assert spec.b_max == 2 and spec.coverage == 1.0
         assert spec.fallback and spec.blk_dst_halo is None
         assert spec.gathered_elems_per_device() == \
             spec.full_gather_elems_per_device()
 
+    def test_pervertex_rescues_full_block_halo(self):
+        """The same all-blocks-referenced layout under "auto": only row 0 of
+        each block is actually read, so the per-vertex plan moves 2 vertices
+        where the block plan would move every slot — auto picks it and the
+        fallback is avoided."""
+        refs = {b: list(range(4)) for b in range(4)}
+        dst, w = slabs(4, 4, refs)
+        spec = build_halo_spec(dst, w, 2, BV)
+        assert spec.granularity == "vertex" and not spec.fallback
+        assert spec.h_max == 2
+        assert spec.gathered_elems_per_device() == 2
+        assert spec.coverage < 1.0
+
+    def test_genuinely_dense_references_fall_back(self):
+        """When every *vertex* of every remote block is read, neither
+        granularity can beat the all-gather — the plan must fall back even
+        under "auto"."""
+        nb, S = 4, 2
+        dst = np.tile(np.arange(nb * BV, dtype=np.int32), (nb, 1))
+        w = np.ones((nb, nb * BV), dtype=np.float32)
+        spec = build_halo_spec(dst, w, S, BV)
+        assert spec.fallback and spec.blk_dst_halo is None
+        assert spec.coverage >= 1.0
+
+    def test_coverage_exactly_at_threshold_falls_back(self):
+        """The fallback comparison is `coverage >= threshold`, not `>` — a
+        plan that moves exactly the threshold fraction is not worth its
+        complexity."""
+        refs = {b: list(range(4)) for b in range(4)}
+        dst, w = slabs(4, 4, refs)
+        # per-vertex coverage is exactly 2/8 = 0.25 here
+        spec = build_halo_spec(dst, w, 2, BV, threshold=0.25)
+        assert spec.coverage == 0.25 and spec.fallback
+
     def test_asymmetric_references(self):
         """Shard 0 reads one of shard 1's blocks; shard 1 reads nothing
         remote — need/send sets are per-direction."""
         dst, w = slabs(4, 4, {0: [0, 2], 1: [1], 2: [2], 3: [3]})
-        spec = build_halo_spec(dst, w, 2, BV, threshold=2.0)
+        spec = build_halo_spec(dst, w, 2, BV, threshold=2.0,
+                               granularity="block")
         assert spec.halo_blocks == (1, 0)       # shard 0 needs block 2
         assert spec.boundary_blocks == (0, 1)   # shard 1 sends block 2
         assert spec.b_max == 1 and not spec.fallback
@@ -105,7 +141,8 @@ class TestHaloSpec:
         dst, w = slabs(nb, e_max, refs)
         # also reference arbitrary rows, not just row 0
         dst[w > 0] += rng.integers(0, BV, size=int((w > 0).sum()))
-        spec = build_halo_spec(dst, w, S, BV, threshold=2.0)
+        spec = build_halo_spec(dst, w, S, BV, threshold=2.0,
+                               granularity="block")
         assert not spec.fallback
         bps = nb // S
         labels = rng.integers(0, 100, size=nb * BV)
@@ -128,6 +165,142 @@ class TestHaloSpec:
         spec = build_halo_spec(dst, w, 2, BV, threshold=2.0, b_max_floor=3)
         assert spec.b_max == 3
         assert np.asarray(spec.boundary_rows).shape == (2, 3)
+
+
+class TestPerVertexSpec:
+    def test_empty_boundary(self):
+        """All-local references under forced vertex granularity: zero-width
+        need lists, nothing exchanged, no fallback."""
+        dst, w = slabs(4, 4, {0: [0, 1], 1: [0], 2: [3], 3: [2, 3]})
+        spec = build_halo_spec(dst, w, 2, BV, granularity="vertex")
+        assert spec.granularity == "vertex"
+        assert spec.h_max == 0 and not spec.fallback
+        assert spec.gathered_elems_per_device() == 0
+        assert np.asarray(spec.send_ids).shape == (2, 2, 0)
+
+    def test_h_max_floor_keeps_shape(self):
+        dst, w = slabs(4, 4, {0: [0, 2], 1: [1], 2: [2], 3: [3]})
+        spec = build_halo_spec(dst, w, 2, BV, threshold=2.0,
+                               granularity="vertex", h_max_floor=5)
+        assert spec.h_max == 5
+        assert np.asarray(spec.send_ids).shape == (2, 2, 5)
+
+    def test_rewrite_matches_simulated_all_to_all(self):
+        """Assembling each shard's buffer the way the engine does — local
+        slice, then the all-to-all tail laid out [t, h_max] — and reading
+        through the rewritten slab ids must reproduce the full gather."""
+        rng = np.random.default_rng(1)
+        nb, e_max, S = 8, 6, 4
+        refs = {b: sorted(rng.choice(nb, size=3, replace=False).tolist())
+                for b in range(nb)}
+        dst, w = slabs(nb, e_max, refs)
+        dst[w > 0] += rng.integers(0, BV, size=int((w > 0).sum()))
+        spec = build_halo_spec(dst, w, S, BV, threshold=2.0,
+                               granularity="vertex")
+        assert not spec.fallback and spec.h_max > 0
+        bps = nb // S
+        local_n = spec.local_n
+        labels = rng.integers(0, 100, size=nb * BV)
+        send = np.asarray(spec.send_ids)           # [S, S, h_max] local ids
+        halo_dst = np.asarray(spec.blk_dst_halo)
+        for s in range(S):
+            # tail: for each owner t, the values of the vertices t sends to s
+            tail = np.concatenate([
+                labels[t * local_n + send[t, s]] for t in range(S)])
+            buf = np.concatenate([labels[s * local_n:(s + 1) * local_n], tail])
+            for b in range(s * bps, (s + 1) * bps):
+                real = w[b] > 0
+                np.testing.assert_array_equal(
+                    buf[halo_dst[b][real]], labels[dst[b][real]])
+
+    def test_auto_prefers_the_cheaper_granularity(self):
+        """Sparse scattered references -> vertex; whole-block-dense
+        references -> block (the tie also resolves to block)."""
+        sparse, w1 = slabs(4, 4, {0: [2], 1: [3], 2: [0], 3: [1]})
+        spec = build_halo_spec(sparse, w1, 2, BV, threshold=2.0)
+        assert spec.granularity == "vertex"
+        # every row of the remote block referenced: block exchange moves the
+        # same elements with simpler indexing
+        nb = 4
+        dense = np.zeros((nb, BV), dtype=np.int32)
+        wd = np.ones((nb, BV), dtype=np.float32)
+        for b, t in ((0, 2), (1, 3), (2, 0), (3, 1)):
+            dense[b] = t * BV + np.arange(BV)
+        spec = build_halo_spec(dense, wd, 2, BV, threshold=2.0)
+        assert spec.granularity == "block"
+
+
+class TestHubSpec:
+    def hub_layout(self):
+        """Every block reads vertex 0 (shard 0, block 0, row 0) plus one
+        local vertex — vertex 0 is the obvious hub."""
+        nb = 4
+        dst = np.zeros((nb, 2), dtype=np.int32)
+        w = np.ones((nb, 2), dtype=np.float32)
+        for b in range(nb):
+            dst[b, 0] = 0             # the hub
+            dst[b, 1] = b * BV + 1    # something local
+        deg = np.zeros(nb * BV, dtype=np.float32)
+        deg[0] = 100.0
+        deg[1::BV] = 1.0
+        vmask = np.ones(nb * BV, dtype=bool)
+        blk_row = np.tile(np.array([0, 1], dtype=np.int32), (nb, 1))
+        return dst, w, deg, vmask, blk_row
+
+    def test_hub_absorbs_remote_references(self):
+        from repro.core.halo import HubConfig
+
+        dst, w, deg, vmask, blk_row = self.hub_layout()
+        bare = build_halo_spec(dst, w, 2, BV, threshold=2.0,
+                               granularity="vertex")
+        assert bare.h_max == 1          # shard 1 needs vertex 0
+        spec = build_halo_spec(dst, w, 2, BV, threshold=2.0,
+                               granularity="vertex",
+                               hubs=HubConfig(quantile=0.9),
+                               deg=deg, vmask=vmask, blk_row=blk_row)
+        assert 0 in np.asarray(spec.hub_ids)
+        assert spec.h_max == 0          # the hub ref left the need lists
+        # hub refs rewritten into the replicated region past the tail
+        hub_base = spec.local_n + spec.exchange_len
+        halo_dst = np.asarray(spec.blk_dst_halo)
+        assert halo_dst[0, 0] == hub_base and halo_dst[2, 0] == hub_base
+
+    def test_hub_needs_degree_arrays(self):
+        from repro.core.halo import HubConfig
+
+        dst, w, *_ = self.hub_layout()
+        with pytest.raises(ValueError, match="deg"):
+            build_halo_spec(dst, w, 2, BV, hubs=HubConfig(quantile=0.9))
+
+    def test_hub_floors_carry(self):
+        """hub_ids_floor pins earlier hubs; hub_pad_floor keeps the
+        replicated-region shape when the set hasn't grown to it yet."""
+        from repro.core.halo import HubConfig
+
+        dst, w, deg, vmask, blk_row = self.hub_layout()
+        spec = build_halo_spec(dst, w, 2, BV, threshold=2.0,
+                               hubs=HubConfig(quantile=0.9),
+                               deg=deg, vmask=vmask, blk_row=blk_row,
+                               hub_ids_floor=(5,), hub_pad_floor=7)
+        ids = np.asarray(spec.hub_ids)
+        assert 5 in ids and 0 in ids
+        assert spec.hub_pad == 7
+        assert np.asarray(spec.hub_owner).shape == (7,)
+
+    def test_quantile_selection_shard_count_independent(self):
+        """The quantile rule reads only deg/vmask — the same graph split
+        1-way and 2-way replicates the same hub set (what makes the 1-shard
+        oracle comparable to the multi-shard run)."""
+        from repro.core.halo import HubConfig
+
+        dst, w, deg, vmask, blk_row = self.hub_layout()
+        ids = []
+        for S in (1, 2):
+            spec = build_halo_spec(dst, w, S, BV, threshold=2.0,
+                                   hubs=HubConfig(quantile=0.9),
+                                   deg=deg, vmask=vmask, blk_row=blk_row)
+            ids.append(tuple(int(h) for h in np.asarray(spec.hub_ids)))
+        assert ids[0] == ids[1]
 
 
 class TestLocalityAssignment:
@@ -310,6 +483,58 @@ class TestHaloSchedule:
         with pytest.raises(ValueError, match="assignment"):
             run_partitioner("revolver", sbm_graph, 4, assignment="locality")
 
+    @pytest.mark.parametrize("granularity", ["block", "vertex"])
+    def test_forced_granularity_bit_identical(self, sbm_graph, granularity):
+        """Either exchange unit is an exact optimization of the full
+        gather — same trajectory bit-for-bit (hubs off)."""
+        mesh = make_blocks_mesh(1)
+        common = dict(seed=3, max_steps=4, patience=10_000,
+                      track_history=False, n_blocks=8, mesh=mesh)
+        r_sh = run_partitioner("revolver", sbm_graph, 4,
+                               chunk_schedule="sharded", **common)
+        r_halo = run_partitioner("revolver", sbm_graph, 4,
+                                 chunk_schedule="halo", halo_threshold=2.0,
+                                 halo_granularity=granularity, **common)
+        np.testing.assert_array_equal(r_sh.labels, r_halo.labels)
+
+    def test_hub_oracle_one_shard_matches_sequential(self, sbm_graph):
+        """The sequential hub schedule and the 1-shard mesh hub schedule run
+        the same plan through different code paths (identity collectives vs
+        shard_map psums) — they must agree bit-for-bit."""
+        common = dict(seed=3, max_steps=4, patience=10_000,
+                      track_history=False, n_blocks=8,
+                      hub_replication=True, hub_quantile=0.9)
+        r_seq = run_partitioner("revolver", sbm_graph, 4, **common)
+        r_mesh = run_partitioner("revolver", sbm_graph, 4,
+                                 chunk_schedule="halo", halo_threshold=2.0,
+                                 mesh=make_blocks_mesh(1), **common)
+        np.testing.assert_array_equal(r_seq.labels, r_mesh.labels)
+
+    def test_hub_replication_engages(self, sbm_graph):
+        """With hubs on, the frozen-scan + vote-reconcile trajectory differs
+        from the plain sequential one (the machinery is not a no-op), and
+        the result still covers every vertex with in-range labels."""
+        common = dict(seed=3, max_steps=6, patience=10_000,
+                      track_history=False, n_blocks=8)
+        r_plain = run_partitioner("revolver", sbm_graph, 4, **common)
+        r_hub = run_partitioner("revolver", sbm_graph, 4,
+                                hub_replication=True, hub_quantile=0.9,
+                                **common)
+        assert not np.array_equal(r_plain.labels, r_hub.labels)
+        assert r_hub.labels.shape == (sbm_graph.n,)
+        assert ((r_hub.labels >= 0) & (r_hub.labels < 4)).all()
+
+    def test_hub_rejects_sharded_schedule(self, sbm_graph):
+        with pytest.raises(ValueError, match="hub_replication"):
+            run_partitioner("revolver", sbm_graph, 4, hub_replication=True,
+                            chunk_schedule="sharded",
+                            mesh=make_blocks_mesh(1), max_steps=2)
+
+    def test_hub_knobs_require_hub_replication(self, sbm_graph):
+        with pytest.raises(ValueError, match="hub_quantile"):
+            run_partitioner("revolver", sbm_graph, 4, hub_quantile=0.9,
+                            max_steps=2)
+
     def test_assignment_rejected_on_prebuilt_layout(self, sbm_graph):
         """A placed layout's assignment is baked into its storage order —
         asking for a different one must raise, not silently run the
@@ -388,6 +613,45 @@ class TestStreamingHalo:
             for delta in stream_from_graph(sbm_graph, 3, seed=0):
                 idg.apply(delta)
         assert spy.call_count == 1
+
+    def test_stream_floors_are_monotonic(self, sbm_graph):
+        """b_max / h_max floors only ever grow across deltas (the jitted
+        superstep's shapes must not shrink mid-stream)."""
+        from repro.streaming.delta_graph import IncrementalDeviceGraph
+        from repro.streaming.stream import stream_from_graph
+
+        idg = IncrementalDeviceGraph(sbm_graph.n, n_blocks=8,
+                                     mesh=make_blocks_mesh(1))
+        prev_b = prev_h = 0
+        for delta in stream_from_graph(sbm_graph, 4, seed=0):
+            idg.apply(delta)
+            sdg = idg.as_sharded(halo=True, halo_threshold=2.0,
+                                 halo_granularity="vertex")
+            assert sdg.halo.b_max >= prev_b
+            assert sdg.halo.h_max >= prev_h
+            assert sdg.halo.h_max == idg.h_max_floor
+            prev_b, prev_h = sdg.halo.b_max, sdg.halo.h_max
+
+    def test_stream_hub_set_grows_monotonically(self, sbm_graph):
+        """Hub promotion on a delta only ever adds hubs: each delta's hub
+        set contains the previous one, and hub_pad floors at its maximum."""
+        from repro.core.halo import HubConfig
+        from repro.streaming.delta_graph import IncrementalDeviceGraph
+        from repro.streaming.stream import stream_from_graph
+
+        idg = IncrementalDeviceGraph(sbm_graph.n, n_blocks=8,
+                                     mesh=make_blocks_mesh(1))
+        hubs = HubConfig(quantile=0.95)
+        prev_ids = set()
+        prev_pad = 0
+        for delta in stream_from_graph(sbm_graph, 4, seed=0):
+            idg.apply(delta)
+            sdg = idg.as_sharded(halo=True, halo_threshold=2.0, hubs=hubs)
+            ids = set(int(h) for h in np.asarray(sdg.halo.hub_ids))
+            assert prev_ids <= ids          # promotion only, no demotion
+            assert sdg.halo.hub_pad >= prev_pad
+            prev_ids, prev_pad = ids, sdg.halo.hub_pad
+        assert prev_ids                      # something was promoted
 
     def test_streaming_permuted_layout_matches_static(self, sbm_graph):
         """The incremental permuted layout and `permute_blocks` implement

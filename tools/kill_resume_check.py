@@ -83,6 +83,14 @@ def main(argv=None) -> int:
                     help="superstep at which the victim run SIGKILLs itself")
     ap.add_argument("--chunk-schedule", default="sequential",
                     choices=["sequential", "sharded", "halo"])
+    ap.add_argument("--halo-granularity", default="auto",
+                    choices=["auto", "block", "vertex"],
+                    help="halo exchange unit (forwarded to the launcher; "
+                         "halo schedule only)")
+    ap.add_argument("--hub-replication", action="store_true",
+                    help="run every phase with hub replication on — hub "
+                         "reconciliation carries no extra state, so the "
+                         "resume gate stays bit-for-bit")
     ap.add_argument("--devices", type=int, default=None,
                     help="host device count for all phases")
     ap.add_argument("--resume-devices", type=int, default=None,
@@ -97,6 +105,10 @@ def main(argv=None) -> int:
             "--seed", str(args.seed), "--max-steps", str(args.max_steps),
             "--sync-every", str(args.sync_every),
             "--chunk-schedule", args.chunk_schedule]
+    if args.chunk_schedule == "halo":
+        base += ["--halo-granularity", args.halo_granularity]
+    if args.hub_replication:
+        base += ["--hub-replication"]
     ok = True
     try:
         # 1. reference (uninterrupted)
