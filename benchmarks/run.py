@@ -75,7 +75,9 @@ def main(argv=None):
                          ("restream-vs-revolver quality",
                           bench["meta"]["quality_ok"]),
                          ("checkpoint overhead <=5%",
-                          bench["meta"]["checkpoint_ok"])):
+                          bench["meta"]["checkpoint_ok"]),
+                         ("vcycle quality + fine-steps",
+                          bench["meta"]["vcycle_ok"])):
             gates.append((gate, "ok" if ok else "FAIL", "BENCH_superstep.json"))
 
     scaling = _section("Sharded superstep scaling (1/2/4/8 devices + quality "
@@ -90,7 +92,9 @@ def main(argv=None):
                          ("halo traffic reduction (all datasets)",
                           scaling["meta"]["traffic_ok"]),
                          ("hub replication quality/balance",
-                          scaling["meta"]["hub_ok"])):
+                          scaling["meta"]["hub_ok"]),
+                         ("vcycle assignment >= locality",
+                          scaling["meta"]["vcycle_assignment_ok"])):
             gates.append((gate, "ok" if ok else "FAIL", "BENCH_scaling.json"))
 
     _section("Kernel microbench (CPU; interpret-mode parity)", gates,

@@ -7,7 +7,7 @@ of the Jacobi merge against the sequential schedule, and writes
 
 The **halo leg** (max-device worker) prices the ``chunk_schedule="halo"``
 boundary exchange: for each traffic dataset it records, per assignment
-(contiguous / locality), the modeled gathered-bytes/superstep of the halo
+(contiguous / locality / vcycle), the modeled gathered-bytes/superstep of the halo
 exchange vs the full all-gather — what each device receives per superstep
 across the synchronized vertex fields, the quantity the schedule actually
 changes — alongside measured halo steps/s, and **gates bit-identity**:
@@ -20,7 +20,11 @@ path moves label-valued fields on an **int8 wire**, so the leg gates bytes
 and elements separately. CI fails if parity breaks or if ANY traffic
 dataset misses ``--traffic-gate`` (default 2.0x) bytes reduction on its
 locality leg — USA clears it through banded road blocks (b_max ~2), WIKI
-and LJ through per-vertex need lists + int8 labels. A **hubs-on leg**
+and LJ through per-vertex need lists + int8 labels. The vcycle leg
+(``assignment="vcycle"``: locality seed + strict-improvement pairwise
+swaps, see `repro.graphs.blocking.vcycle_block_order`) is additionally
+gated match-or-beat against the locality leg's bytes reduction on every
+(dataset, devices) pair. A **hubs-on leg**
 (locality assignment) then gates hub replication on quality
 (``--hub-quality-gate``, default 0.90 of the plain sharded run's local
 edges) and balance (``--balance-gate``) — replication reorders the
@@ -176,7 +180,7 @@ def _worker(args) -> dict:
         for name in args.traffic_datasets:
             g = load_dataset(name, scale=args.scale, seed=args.seed)
             nb = max(args.traffic_blocks, args.devices)
-            for assignment in ("contiguous", "locality"):
+            for assignment in ("contiguous", "locality", "vcycle"):
                 sdg = prepare_sharded_device_graph(
                     g, mesh, n_blocks=nb, assignment=assignment,
                     halo=True, halo_threshold=2.0)
@@ -471,6 +475,27 @@ def run(*, quick: bool = False, out: str = "BENCH_scaling.json",
         d["pass"] = d["best_bytes_reduction"] >= traffic_gate
     traffic_ok = (set(per_dataset) >= set(traffic_datasets)
                   and all(d["pass"] for d in per_dataset.values()))
+    # vcycle assignment gate: the refined block->shard assignment
+    # (locality seed + strict-improvement pairwise swaps, see
+    # `vcycle_block_order`) must match or beat the locality assignment's
+    # gathered-bytes reduction on every (dataset, devices) traffic leg —
+    # the bit-identical-or-better contract
+    vc_pairs = {}
+    for t in traffic:
+        if t["assignment"] in ("locality", "vcycle"):
+            vc_pairs.setdefault((t["dataset"], t["devices"]), {})[
+                t["assignment"]] = t["traffic_reduction"]
+    vcycle_per_leg = {
+        f"{name}@{devices}dev": {
+            "locality_reduction": pair["locality"],
+            "vcycle_reduction": pair["vcycle"],
+            "pass": bool(pair["vcycle"] >= pair["locality"] * (1 - 1e-9)),
+        }
+        for (name, devices), pair in sorted(vc_pairs.items())
+        if "locality" in pair and "vcycle" in pair
+    }
+    vcycle_assignment_ok = bool(vcycle_per_leg) and all(
+        d["pass"] for d in vcycle_per_leg.values())
     # hub gate: quality + balance (replication reorders the trajectory, so
     # bit-identity is not the contract — tests/test_halo.py pins the
     # 1-shard oracle instead)
@@ -480,7 +505,10 @@ def run(*, quick: bool = False, out: str = "BENCH_scaling.json",
     results["meta"]["traffic_ok"] = traffic_ok
     results["meta"]["traffic_per_dataset"] = per_dataset
     results["meta"]["hub_ok"] = hub_ok
-    ok = ok and halo_parity_ok and traffic_ok and hub_ok
+    results["meta"]["vcycle_assignment_ok"] = vcycle_assignment_ok
+    results["meta"]["vcycle_assignment_per_leg"] = vcycle_per_leg
+    ok = (ok and halo_parity_ok and traffic_ok and hub_ok
+          and vcycle_assignment_ok)
     results["meta"]["ok"] = ok
     if out:
         with open(out, "w") as f:
@@ -501,6 +529,11 @@ def run(*, quick: bool = False, out: str = "BENCH_scaling.json",
     if not hub_ok:
         print(f"HUB REPLICATION REGRESSION (quality gate {hub_quality_gate}"
               f", balance gate {balance_gate})", file=sys.stderr)
+    if not vcycle_assignment_ok:
+        failing = [leg for leg, d in vcycle_per_leg.items() if not d["pass"]]
+        print("VCYCLE ASSIGNMENT REGRESSION (legs where assignment='vcycle' "
+              f"fell below assignment='locality': {failing or 'no legs ran'})",
+              file=sys.stderr)
     return results
 
 

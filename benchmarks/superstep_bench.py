@@ -7,7 +7,7 @@ independent ``edge_histogram`` launches, and writes everything to
 ``BENCH_superstep.json`` so later PRs have a measured baseline to hold
 against.
 
-Four hard gates (process exits nonzero on failure — the CI regression check):
+Five hard gates (process exits nonzero on failure — the CI regression check):
   * superstep parity — ``hist_impl="pallas"`` must reproduce the
     ``"jnp"`` partition at fixed seed within the score tolerance;
   * kernel parity — the fused kernel's histograms must match the two-call
@@ -18,7 +18,11 @@ Four hard gates (process exits nonzero on failure — the CI regression check):
     (the third-partitioner acceptance bar; see core/README.md);
   * checkpoint overhead — drain-window checkpointing must keep
     ``CHECKPOINT_GATE`` (0.95) of the plain steps/s and leave the final
-    labels bit-identical (docs/fault-tolerance.md).
+    labels bit-identical (docs/fault-tolerance.md);
+  * V-cycle — ``mode="vcycle"`` must reach ``VCYCLE_QUALITY_GATE`` (0.97)
+    of flat refinement's edge locality at the same score-stall halting
+    while spending at most ``VCYCLE_STEPS_GATE`` (0.5) of flat's
+    supersteps at the fine level (docs/multilevel.md).
 
 On this CPU container the Pallas paths execute in interpret mode, so their
 wall-clock is a harness/correctness sanity check, not TPU perf (see
@@ -51,6 +55,8 @@ IMPLS = ("jnp", "pallas")
 PARITY_TOL = 1e-5
 RESTREAM_GATE = 0.90   # restream edge locality vs revolver, fixed budget
 CHECKPOINT_GATE = 0.95  # steps/s with checkpointing on vs off (<=5% overhead)
+VCYCLE_QUALITY_GATE = 0.97  # vcycle local_edges vs flat at score-stall
+VCYCLE_STEPS_GATE = 0.5     # vcycle fine-level supersteps vs flat's total
 
 
 def _algo_quality(g, dg, k: int, *, steps: int, seed: int) -> list[dict]:
@@ -80,6 +86,38 @@ def _algo_quality(g, dg, k: int, *, steps: int, seed: int) -> list[dict]:
         row["restream_vs_revolver"] = ratio
         row["pass"] = bool(ratio >= RESTREAM_GATE)
     return rows
+
+
+def _vcycle_compare(g, k: int, *, seed: int) -> dict:
+    """Flat refinement vs the multilevel V-cycle at the same score-stall
+    halting (docs/multilevel.md). Both runs use the paper's convergence
+    settings; the V-cycle must land within ``VCYCLE_QUALITY_GATE`` of the
+    flat run's edge locality while spending at most ``VCYCLE_STEPS_GATE``
+    of its supersteps at the fine level — the full-resolution steps that
+    dominate wall-clock at production scale."""
+    from repro.core.runner import run_partitioner
+
+    flat = run_partitioner("revolver", g, k, seed=seed, track_history=False)
+    vc = run_partitioner("revolver", g, k, seed=seed, mode="vcycle",
+                         track_history=False)
+    quality_ratio = vc.local_edges / max(flat.local_edges, 1e-9)
+    steps_ratio = vc.steps / max(flat.steps, 1)
+    return {
+        "n": g.n,
+        "m": g.m,
+        "flat_local_edges": flat.local_edges,
+        "flat_steps": flat.steps,
+        "flat_supersteps_per_s": flat.steps / max(flat.wall_s, 1e-9),
+        "vcycle_local_edges": vc.local_edges,
+        "vcycle_fine_steps": vc.steps,
+        "vcycle_supersteps_per_s": vc.steps / max(vc.wall_s, 1e-9),
+        "quality_ratio": quality_ratio,
+        "fine_steps_ratio": steps_ratio,
+        "quality_gate": VCYCLE_QUALITY_GATE,
+        "steps_gate": VCYCLE_STEPS_GATE,
+        "pass": bool(quality_ratio >= VCYCLE_QUALITY_GATE
+                     and steps_ratio <= VCYCLE_STEPS_GATE),
+    }
 
 
 def _checkpoint_overhead(k: int, *, steps: int, seed: int,
@@ -262,11 +300,14 @@ def run(*, quick: bool = False, out: str = "BENCH_superstep.json",
             "quality_steps": quality_steps,
             "restream_gate": RESTREAM_GATE,
             "checkpoint_gate": CHECKPOINT_GATE,
+            "vcycle_quality_gate": VCYCLE_QUALITY_GATE,
+            "vcycle_steps_gate": VCYCLE_STEPS_GATE,
         },
         "superstep": [],
         "kernel": None,
         "parity": [],
         "algos": [],
+        "vcycle": [],
         "checkpoint": None,
     }
 
@@ -313,6 +354,15 @@ def run(*, quick: bool = False, out: str = "BENCH_superstep.json",
         print(f"quality {name}: restream/revolver = {ratio:.3f} "
               f"(gate {RESTREAM_GATE}) "
               f"{'PASS' if ratio >= RESTREAM_GATE else 'FAIL'}")
+        vc = _vcycle_compare(g, k, seed=seed)
+        vc["dataset"] = name
+        results["vcycle"].append(vc)
+        print(f"vcycle  {name}: quality={vc['quality_ratio']:.3f} "
+              f"(gate >={VCYCLE_QUALITY_GATE}) fine_steps="
+              f"{vc['vcycle_fine_steps']}/{vc['flat_steps']} "
+              f"ratio={vc['fine_steps_ratio']:.2f} "
+              f"(gate <={VCYCLE_STEPS_GATE}) "
+              f"{'PASS' if vc['pass'] else 'FAIL'}")
 
     # observability: a short traced run on the last dataset — the phase /
     # counter aggregates (superstep spans, migrations, recompiles) ride the
@@ -347,10 +397,13 @@ def run(*, quick: bool = False, out: str = "BENCH_superstep.json",
     quality_ok = bool(results["algos"]) and all(
         row["pass"] for row in results["algos"])
     checkpoint_ok = results["checkpoint"]["pass"]
+    vcycle_ok = bool(results["vcycle"]) and all(
+        row["pass"] for row in results["vcycle"])
     results["meta"]["parity_ok"] = parity_ok
     results["meta"]["quality_ok"] = quality_ok
     results["meta"]["checkpoint_ok"] = checkpoint_ok
-    ok = parity_ok and quality_ok and checkpoint_ok
+    results["meta"]["vcycle_ok"] = vcycle_ok
+    ok = parity_ok and quality_ok and checkpoint_ok and vcycle_ok
     if out:
         with open(out, "w") as f:
             json.dump(results, f, indent=2)
@@ -363,6 +416,9 @@ def run(*, quick: bool = False, out: str = "BENCH_superstep.json",
     if not checkpoint_ok:
         print(f"CHECKPOINT OVERHEAD REGRESSION (gate {CHECKPOINT_GATE})",
               file=sys.stderr)
+    if not vcycle_ok:
+        print(f"VCYCLE REGRESSION (quality gate {VCYCLE_QUALITY_GATE}, "
+              f"fine-steps gate {VCYCLE_STEPS_GATE})", file=sys.stderr)
     return results
 
 
@@ -382,7 +438,8 @@ def main(argv=None) -> int:
                   steps=args.steps, seed=args.seed)
     return 0 if (results["meta"]["parity_ok"]
                  and results["meta"]["quality_ok"]
-                 and results["meta"]["checkpoint_ok"]) else 1
+                 and results["meta"]["checkpoint_ok"]
+                 and results["meta"]["vcycle_ok"]) else 1
 
 
 if __name__ == "__main__":

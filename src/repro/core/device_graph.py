@@ -29,7 +29,12 @@ from repro.core.halo import (
     HubConfig,
     build_halo_spec,
 )
-from repro.graphs.blocking import block_adjacency, block_edges, locality_block_order
+from repro.graphs.blocking import (
+    block_adjacency,
+    block_edges,
+    locality_block_order,
+    vcycle_block_order,
+)
 from repro.graphs.csr import Graph
 
 
@@ -149,9 +154,25 @@ class ShardedDeviceGraph:
     o2s: Optional[np.ndarray] = None   # [n_pad] original vertex -> storage id
     s2o: Optional[np.ndarray] = None   # [n_pad] storage id -> original vertex
     halo: Optional[HaloSpec] = None
+    # [n_blocks, n_blocks] block edge-cut matrix in *storage* order, filled
+    # once (by the layout prep that already needed it, or lazily by
+    # `block_adj_matrix`) and reused by every later consumer — locality
+    # re-preps, the V-cycle, the scaling bench's traffic model
+    block_adj: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def __getattr__(self, name):
         return getattr(self.dg, name)
+
+    def block_adj_matrix(self) -> np.ndarray:
+        """The block-level edge-cut matrix of the stored layout, computed at
+        most once per layout (cached on the instance — an `np.add.at` over
+        every slab edge is an O(E) host pass worth not repeating)."""
+        if self.block_adj is None:
+            adj = block_adjacency(np.asarray(self.blk_dst),
+                                  np.asarray(self.blk_w), self.block_v)
+            object.__setattr__(self, "block_adj", adj)
+        return self.block_adj
 
 
 def align_blocks(dg: DeviceGraph, multiple: int) -> DeviceGraph:
@@ -264,25 +285,33 @@ def resolve_assignment(
     dg: DeviceGraph,
     n_shards: int,
     assignment: Union[str, np.ndarray, None],
+    adj: Optional[np.ndarray] = None,
 ) -> Optional[np.ndarray]:
     """Turn an `assignment=` argument into a block permutation (or None).
 
     "contiguous" / None keep the natural block striping; "locality" runs
-    the greedy co-location pass over the block-level edge-cut matrix; an
-    explicit array is validated and used as-is. Identity permutations
-    collapse to None so the unpermuted fast paths stay in force.
+    the greedy co-location pass over the block-level edge-cut matrix;
+    "vcycle" runs the one-level-up multilevel solve of the same problem
+    (`vcycle_block_order` — never worse than "locality" by construction);
+    an explicit array is validated and used as-is. Identity permutations
+    collapse to None so the unpermuted fast paths stay in force. `adj`
+    hands in a precomputed edge-cut matrix so callers that already hold
+    one (`ShardedDeviceGraph.block_adj_matrix`) skip the O(E) rebuild.
     """
     if assignment is None or (isinstance(assignment, str)
                               and assignment == "contiguous"):
         return None
     if isinstance(assignment, str):
-        if assignment != "locality":
+        if assignment not in ("locality", "vcycle"):
             raise ValueError(
                 f"unknown assignment {assignment!r}; expected 'contiguous', "
-                "'locality', or an explicit block permutation")
-        adj = block_adjacency(np.asarray(dg.blk_dst), np.asarray(dg.blk_w),
-                              dg.block_v)
-        perm = locality_block_order(adj, n_shards)
+                "'locality', 'vcycle', or an explicit block permutation")
+        if adj is None:
+            adj = block_adjacency(np.asarray(dg.blk_dst),
+                                  np.asarray(dg.blk_w), dg.block_v)
+        order_fn = (locality_block_order if assignment == "locality"
+                    else vcycle_block_order)
+        perm = order_fn(adj, n_shards)
     else:
         perm = np.asarray(assignment, dtype=np.int64)
     if np.array_equal(perm, np.arange(dg.n_blocks)):
@@ -321,11 +350,21 @@ def shard_device_graph(
         raise ValueError(f"mesh {mesh.axis_names} has no 'blocks' axis")
     n_shards = int(mesh.shape["blocks"])
     dg = align_blocks(dg, n_shards)
-    perm = resolve_assignment(dg, n_shards, assignment)
+    adj = None
+    if isinstance(assignment, str) and assignment in ("locality", "vcycle"):
+        # computed once here, seeded onto the returned layout's cache so
+        # the V-cycle / traffic model never rebuild it for this layout
+        adj = block_adjacency(np.asarray(dg.blk_dst), np.asarray(dg.blk_w),
+                              dg.block_v)
+    perm = resolve_assignment(dg, n_shards, assignment, adj=adj)
     o2s = s2o = None
     if perm is not None:
         dg = permute_blocks(dg, perm)
         o2s, s2o = block_vertex_perms(perm, dg.block_v)
+        if adj is not None:
+            # re-expressed in storage order: slot i holds original block
+            # perm[i], so the cached matrix matches the stored layout
+            adj = np.ascontiguousarray(adj[np.ix_(perm, perm)])
     placed = {}
     for name in dg._fields:
         value = getattr(dg, name)
@@ -356,6 +395,7 @@ def shard_device_graph(
         o2s=o2s,
         s2o=s2o,
         halo=spec,
+        block_adj=adj,
     )
 
 

@@ -1,0 +1,243 @@
+"""Multilevel V-cycle: coarsen -> partition the coarsest -> uncoarsen.
+
+METIS-style multilevel partitioning (Sanders & Seemaier, *Distributed
+Unconstrained Local Search for Multilevel Graph Partitioning*) mapped onto
+the engine's existing machinery — ``run_partitioner(mode="vcycle")`` lands
+here:
+
+  1. **Coarsen** (`build_level_stack`): repeated heavy-edge matching +
+     contraction (`repro.graphs.csr.heavy_edge_matching` /
+     `contract_graph`) down to a ``coarse_n``-vertex graph. Every level
+     keeps the fine graph's balance semantics exactly — aggregated vertex
+     weights with ``m`` pinned to the fine edge count, so the engine's
+     capacity ``C = (1+eps)|E|/k`` prices coarse loads in fine-edge units
+     and a balanced coarse partition *is* a balanced fine partition.
+  2. **Coarse solve**: any registered superstep rule (revolver / spinner /
+     restream) runs to score-stall convergence on the coarsest graph —
+     cheap, it is 10–100x smaller than the input.
+  3. **Uncoarsen**: labels project through each level's fine->coarse vertex
+     map and refine with the engine's ``init_from_labels`` warm start under
+     a shrinking superstep budget (the finest level is capped at
+     ``level_decay * max_steps``, intermediate levels interpolate up to the
+     coarsest's full budget — see `level_budgets`). For
+     probs-carrying rules the carried labels are sharpened into LA
+     confidence (``vcycle_sharpen``, see `revolver_init_from_labels`) so
+     refinement spends its steps on genuinely contested vertices instead of
+     re-exploring settled ones.
+
+Only the finest level runs under the caller's schedule / mesh / assignment;
+coarse levels always run the sequential schedule (they are too small to
+amortize a shard_map launch). Checkpointing, resume, and state guards are
+flat-mode features — the V-cycle's per-level runs are short; checkpoint the
+fine-level refinement by running it flat from ``init_labels`` if you need
+crash safety around a V-cycle.
+
+Observability: one ``coarsen`` span around the stack build, one
+``coarse-solve`` span, one ``uncoarsen-level-i`` span per projection+refine,
+and a ``level_n_vertices`` counter series indexed by level (0 = finest);
+each per-level `run_partitioner` call appends its own run manifest, so
+`tools/trace_report.py --validate` holds for V-cycle traces unchanged.
+"""
+from __future__ import annotations
+
+import logging
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro import obs
+from repro.core.registry import get_algorithm
+from repro.graphs.csr import Graph, contract_graph, heavy_edge_matching
+
+_log = logging.getLogger("repro.core.multilevel")
+
+DEFAULT_COARSE_N = 512
+DEFAULT_LEVEL_DECAY = 0.12
+DEFAULT_VCYCLE_SHARPEN = 0.8
+
+# stop coarsening when a matching pass shrinks the level by less than this
+# factor — degenerate families (stars, already-tiny graphs) would otherwise
+# stack near-identical levels
+_REDUCTION_STALL = 0.95
+_MAX_LEVELS = 32
+
+
+def build_level_stack(
+    g: Graph, coarse_n: int, max_levels: int = _MAX_LEVELS,
+) -> Tuple[List[Graph], List[np.ndarray]]:
+    """Coarsen `g` by repeated heavy-edge matching down to ``coarse_n``.
+
+    Returns ``(graphs, cmaps)`` with ``graphs[0] is g`` (finest first) and
+    ``cmaps[i]`` mapping level-``i`` vertices to level-``i+1`` vertices, so
+    ``len(cmaps) == len(graphs) - 1``. Stops early when a matching pass
+    fails to shrink the level by at least ``1 - _REDUCTION_STALL`` (the
+    degenerate 1-level case: the stack is just ``[g]``).
+    """
+    if coarse_n < 1:
+        raise ValueError(f"coarse_n must be >= 1, got {coarse_n}")
+    graphs: List[Graph] = [g]
+    cmaps: List[np.ndarray] = []
+    while graphs[-1].n > coarse_n and len(graphs) <= max_levels:
+        cur = graphs[-1]
+        cmap, n_coarse = heavy_edge_matching(cur)
+        if n_coarse > cur.n * _REDUCTION_STALL:
+            _log.info(
+                "coarsening stalled at level %d (%d -> %d vertices); "
+                "keeping a %d-level stack",
+                len(graphs) - 1, cur.n, n_coarse, len(graphs))
+            break
+        coarse, _ = contract_graph(cur, cmap, n_coarse)
+        graphs.append(coarse)
+        cmaps.append(cmap)
+    return graphs, cmaps
+
+
+def level_budgets(max_steps: int, n_levels: int, level_decay: float,
+                  patience: int) -> List[int]:
+    """Per-level superstep caps, finest first.
+
+    The coarsest level gets the full ``max_steps`` (its supersteps are
+    cheap and it runs from a cold start); the finest gets
+    ``level_decay * max_steps`` — the cap the bench's 0.5x-of-flat gate
+    leans on, deliberately *independent of stack depth* so a deeper stack
+    cannot inflate the fine-level budget. Intermediate levels interpolate
+    geometrically between the two endpoints. Every cap is floored at
+    ``patience + 3`` so the score-stall halt can still fire; warm-started
+    refinement normally stalls well before the cap.
+    """
+    if n_levels == 1:
+        return [max_steps]
+    span = n_levels - 1
+    budgets = [max(patience + 3,
+                   int(round(max_steps * level_decay ** ((span - i) / span))))
+               for i in range(n_levels)]
+    budgets[-1] = max_steps
+    return budgets
+
+
+def run_vcycle(
+    algo: str,
+    graph: Graph,
+    k: int,
+    *,
+    seed: int = 0,
+    n_blocks: int = 8,
+    max_steps: Optional[int] = None,
+    track_history: bool = True,
+    mesh=None,
+    assignment="contiguous",
+    halo_threshold: Optional[float] = None,
+    halo_granularity: str = "auto",
+    hub_replication: bool = False,
+    hub_quantile: float = 0.0,
+    hub_target_coverage: Optional[float] = None,
+    sync_every: int = 1,
+    keep_probs: bool = False,
+    trace=None,
+    coarse_n: Optional[int] = None,
+    level_decay: Optional[float] = None,
+    vcycle_sharpen: Optional[float] = None,
+    cfg_kwargs: Optional[dict] = None,
+):
+    """Drive one V-cycle. Called by ``run_partitioner(mode="vcycle")``;
+    returns the finest level's `PartitionResult` (its ``steps`` are the
+    fine-level supersteps — the quantity the bench gate caps at 0.5x of
+    flat refinement)."""
+    from repro.core import runner  # lazy: runner imports us the same way
+
+    cfg_kwargs = dict(cfg_kwargs or {})
+    coarse_n = DEFAULT_COARSE_N if coarse_n is None else int(coarse_n)
+    level_decay = (DEFAULT_LEVEL_DECAY if level_decay is None
+                   else float(level_decay))
+    vcycle_sharpen = (DEFAULT_VCYCLE_SHARPEN if vcycle_sharpen is None
+                      else float(vcycle_sharpen))
+    if coarse_n < k:
+        raise ValueError(
+            f"coarse_n={coarse_n} < k={k}: the coarsest graph could not "
+            "hold one vertex per partition")
+    if not 0.0 < level_decay <= 1.0:
+        raise ValueError(
+            f"level_decay must be in (0, 1], got {level_decay}")
+    if not 0.0 <= vcycle_sharpen < 1.0:
+        raise ValueError(
+            f"vcycle_sharpen must be in [0, 1), got {vcycle_sharpen}")
+    algorithm = get_algorithm(algo)
+    if algorithm.init_from_labels is None:
+        raise TypeError(
+            f"{algo!r} does not support warm starts; mode='vcycle' refines "
+            "projected labels through init_from_labels")
+    tracer = trace if trace is not None else obs.NULL_TRACER
+
+    # schedule/mesh knobs apply to the finest level only; coarse levels are
+    # too small to amortize a shard_map launch and always run sequential
+    fine_kwargs = dict(cfg_kwargs)
+    coarse_cfg = dict(cfg_kwargs)
+    coarse_cfg.pop("chunk_schedule", None)
+    cfg = runner._make_cfg(algorithm.config_cls, k, max_steps, fine_kwargs)
+    budget_base = cfg.max_steps
+    patience = cfg.patience
+
+    with tracer.span("coarsen", coarse_n=coarse_n, n=graph.n):
+        graphs, cmaps = build_level_stack(graph, coarse_n)
+    n_levels = len(graphs)
+    if tracer.enabled:
+        for lvl, g in enumerate(graphs):
+            tracer.counter("level_n_vertices", g.n, step=lvl)
+
+    fine_run_kwargs = dict(
+        n_blocks=n_blocks, track_history=track_history, mesh=mesh,
+        assignment=assignment, halo_granularity=halo_granularity,
+        hub_replication=hub_replication, hub_quantile=hub_quantile,
+        hub_target_coverage=hub_target_coverage, sync_every=sync_every,
+        keep_probs=keep_probs, trace=trace)
+    if halo_threshold is not None:
+        fine_run_kwargs["halo_threshold"] = halo_threshold
+
+    if n_levels == 1:
+        # degenerate stack (graph already at/below coarse_n, or matching
+        # stalled immediately): a V-cycle is just the flat run
+        _log.info("graph has %d vertices (<= coarse_n=%d or matching "
+                  "stalled); running flat", graph.n, coarse_n)
+        return runner.run_partitioner(
+            algo, graph, k, seed=seed, max_steps=budget_base,
+            **fine_run_kwargs, **cfg_kwargs)
+
+    budgets = level_budgets(budget_base, n_levels, level_decay, patience)
+    steps_per_level = [0] * n_levels
+
+    with tracer.span("coarse-solve", level=n_levels - 1, n=graphs[-1].n,
+                     budget=budgets[-1]):
+        res = runner.run_partitioner(
+            algo, graphs[-1], k, seed=seed, max_steps=budgets[-1],
+            n_blocks=n_blocks, track_history=False, sync_every=sync_every,
+            trace=trace, **coarse_cfg)
+    steps_per_level[-1] = res.steps
+
+    for lvl in range(n_levels - 2, -1, -1):
+        fine = lvl == 0
+        projected = np.asarray(res.labels)[cmaps[lvl]]
+        sharpen = vcycle_sharpen if algorithm.supports_probs else 0.0
+        with tracer.span(f"uncoarsen-level-{lvl}", n=graphs[lvl].n,
+                         budget=budgets[lvl]):
+            if fine:
+                res = runner.run_partitioner(
+                    algo, graphs[lvl], k, seed=seed, max_steps=budgets[lvl],
+                    init_labels=projected, init_sharpen=sharpen,
+                    **fine_run_kwargs, **cfg_kwargs)
+            else:
+                res = runner.run_partitioner(
+                    algo, graphs[lvl], k, seed=seed, max_steps=budgets[lvl],
+                    n_blocks=n_blocks, track_history=False,
+                    sync_every=sync_every, trace=trace,
+                    init_labels=projected, init_sharpen=sharpen,
+                    **coarse_cfg)
+        steps_per_level[lvl] = res.steps
+
+    if tracer.enabled:
+        tracer.meta.setdefault("vcycle", []).append({
+            "algo": algo, "k": k,
+            "level_n_vertices": [g.n for g in graphs],
+            "budgets": budgets,
+            "steps_per_level": steps_per_level,
+        })
+    return res

@@ -71,3 +71,13 @@ def superstep_algorithms() -> Tuple[str, ...]:
     _ensure_builtins()
     return tuple(sorted(n for n, a in _REGISTRY.items()
                         if isinstance(a, Algorithm)))
+
+
+def warm_startable_algorithms() -> Tuple[str, ...]:
+    """Sorted names of the superstep algorithms that accept
+    ``init_from_labels`` warm starts — the set eligible for
+    ``run_partitioner(mode="vcycle")`` uncoarsening refinement."""
+    _ensure_builtins()
+    return tuple(sorted(
+        n for n, a in _REGISTRY.items()
+        if isinstance(a, Algorithm) and a.init_from_labels is not None))

@@ -405,6 +405,10 @@ def run_partitioner(
     resume: bool = False,
     keep_checkpoints: int = 2,
     guard: str = "off",
+    mode: str = "flat",
+    coarse_n: Optional[int] = None,
+    level_decay: Optional[float] = None,
+    vcycle_sharpen: Optional[float] = None,
     **cfg_kwargs,
 ) -> PartitionResult:
     """Partition `graph` into `k` parts with the named algorithm.
@@ -438,6 +442,17 @@ def run_partitioner(
     the halo, making the exchanged traffic proportional to partition
     quality. Returned labels (and probs) are always in original vertex
     order, whatever the assignment.
+
+    `mode="vcycle"` runs the METIS-style multilevel V-cycle
+    (`repro.core.multilevel`): coarsen by heavy-edge matching down to
+    `coarse_n` vertices, partition the coarsest graph to score-stall
+    convergence, then uncoarsen level by level with `init_from_labels`
+    warm starts under shrinking per-level superstep budgets (the finest
+    level is capped at `level_decay * max_steps`; probs-carrying rules
+    sharpen the projected labels by `vcycle_sharpen`). The schedule/mesh/assignment knobs apply to the
+    finest level only; the V-cycle builds its own per-level layouts, so it
+    is incompatible with a passed `dg`, warm-start args, checkpointing, and
+    the state guard. See `docs/multilevel.md`.
 
     `halo_granularity` ("auto" | "block" | "vertex") picks the halo
     exchange unit: whole boundary blocks, or the exact per-vertex need
@@ -532,6 +547,44 @@ def run_partitioner(
         raise TypeError(
             f"{algo!r} runs no supersteps; checkpointing and the state guard "
             "are meaningless")
+    if mode not in ("flat", "vcycle"):
+        raise ValueError(f"mode={mode!r} is not one of ('flat', 'vcycle')")
+    if mode != "vcycle" and (coarse_n is not None or level_decay is not None
+                             or vcycle_sharpen is not None):
+        raise ValueError(
+            "coarse_n/level_decay/vcycle_sharpen are only meaningful with "
+            "mode='vcycle'")
+    if mode == "vcycle":
+        if static:
+            raise TypeError(
+                f"{algo!r} runs no supersteps; mode='vcycle' refines through "
+                "warm starts")
+        if checkpoint_dir is not None or resume or guard != "off":
+            raise ValueError(
+                "mode='vcycle' is incompatible with checkpointing/resume/"
+                "guard; its per-level runs are short — checkpoint a flat "
+                "refinement from init_labels instead")
+        if init_labels is not None or init_probs is not None or init_sharpen:
+            raise ValueError(
+                "mode='vcycle' derives its warm starts from the coarse "
+                "levels; init_labels/init_probs/init_sharpen cannot be "
+                "passed in")
+        if dg is not None:
+            raise ValueError(
+                "mode='vcycle' builds its own per-level device layouts; "
+                "dg= cannot be passed in")
+        from repro.core import multilevel
+
+        return multilevel.run_vcycle(
+            algo, graph, k, seed=seed, n_blocks=n_blocks,
+            max_steps=max_steps, track_history=track_history, mesh=mesh,
+            assignment=assignment, halo_threshold=halo_threshold,
+            halo_granularity=halo_granularity,
+            hub_replication=hub_replication, hub_quantile=hub_quantile,
+            hub_target_coverage=hub_target_coverage, sync_every=sync_every,
+            keep_probs=keep_probs, trace=trace, coarse_n=coarse_n,
+            level_decay=level_decay, vcycle_sharpen=vcycle_sharpen,
+            cfg_kwargs=cfg_kwargs)
     tracer = trace if trace is not None else obs.NULL_TRACER
     with obs.use(tracer), \
             tracer.span("run-partitioner", algo=algo, k=k,

@@ -209,6 +209,137 @@ def graph_from_sorted_state(
     )
 
 
+# ---------------------------------------------------------------------------
+# Contraction primitives (multilevel V-cycle; see repro.core.multilevel).
+#
+# A coarse level must keep the *fine* graph's balance and quality semantics
+# exactly, or refinement at that level optimizes the wrong objective. The two
+# functions below guarantee that by construction:
+#
+#   * `deg_out[c]` on the coarse graph is the aggregated vertex weight (sum
+#     of the constituents' deg_out) — internal directed edges stay counted,
+#     so sum(deg_out) == fine |E| at every level and, with `m` kept at the
+#     fine edge count, the engine's capacity C = (1+eps)|E|/k prices coarse
+#     loads in fine-edge units: a balanced coarse partition projects to a
+#     balanced fine partition with *identical* per-part loads.
+#   * the coarse directed edge list keeps every fine cross edge with its
+#     multiplicity (internal edges drop out), so `local_edges` measured on a
+#     coarse level equals the fine-graph locality of the projected labels on
+#     exactly the edges still in play.
+# ---------------------------------------------------------------------------
+
+
+def heavy_edge_matching(g: Graph) -> Tuple[np.ndarray, int]:
+    """Greedy heavy-edge matching over the symmetrized adjacency.
+
+    Returns ``(cmap, n_coarse)`` where ``cmap[v]`` is the coarse vertex id
+    of fine vertex ``v`` and coarse ids are dense in ``[0, n_coarse)``,
+    numbered by each pair's smallest fine member so the map is stable under
+    re-runs. Deterministic with no RNG: vertices are visited in ascending
+    symmetrized-degree order (id tie-break — low-degree periphery first, so
+    hubs don't exhaust each other's neighborhoods early), each unmatched
+    vertex pairs with its heaviest unmatched neighbor (smallest id on weight
+    ties), and vertices with no unmatched neighbor — isolated vertices
+    included — become singletons.
+    """
+    n = g.n
+    adj_ptr, adj_idx, adj_w = g.adj_ptr, g.adj_idx, g.adj_w
+    order = np.argsort(np.diff(adj_ptr), kind="stable")
+    match = np.full(n, -1, dtype=np.int64)
+    for v in order:
+        v = int(v)
+        if match[v] >= 0:
+            continue
+        lo, hi = int(adj_ptr[v]), int(adj_ptr[v + 1])
+        nbrs = adj_idx[lo:hi]
+        free = (match[nbrs] < 0) & (nbrs != v)
+        if not free.any():
+            match[v] = v
+            continue
+        cand = np.where(free, adj_w[lo:hi], -1.0)
+        # adj_idx rows are id-sorted, so argmax lands on the smallest id
+        # among maximum-weight candidates — the deterministic tie-break
+        u = int(nbrs[int(np.argmax(cand))])
+        match[v] = u
+        match[u] = v
+    rep = np.minimum(np.arange(n, dtype=np.int64), match)
+    reps = np.unique(rep)
+    cmap = np.searchsorted(reps, rep).astype(np.int32)
+    return cmap, int(reps.size)
+
+
+def contract_graph(g: Graph, cmap: np.ndarray, n_coarse: int) -> Tuple[Graph, np.ndarray]:
+    """Contract ``g`` along a fine->coarse vertex map.
+
+    Returns ``(coarse, self_w)``. The coarse `Graph` has:
+
+      * ``deg_out`` — aggregated vertex weights (see module section note);
+        ``m`` stays the *fine* edge count, so ``sum(deg_out) == m`` holds at
+        every level and capacity/balance semantics are unchanged;
+      * ``row_ptr``/``col_idx`` — the fine cross edges mapped through
+        ``cmap`` with multiplicity (internal edges removed);
+      * ``adj_ptr``/``adj_idx``/``adj_w`` — eq.-(4) weights aggregated over
+        coarse vertex pairs (weights grow past {1, 2}; every consumer treats
+        them as generic positive weights).
+
+    ``self_w[c]`` is the symmetrized weight folded *into* coarse vertex
+    ``c`` (both CSR directions of each internal pair), so
+    ``sum(adj_w) + sum(self_w) == sum(fine adj_w)`` exactly — the
+    conservation invariant `tests/test_multilevel.py` pins.
+    """
+    cmap = np.asarray(cmap, dtype=np.int64)
+    if cmap.shape != (g.n,):
+        raise ValueError(f"cmap must be [{g.n}], got {cmap.shape}")
+    if cmap.size and (cmap.min() < 0 or cmap.max() >= n_coarse):
+        raise ValueError(
+            f"cmap values must be in [0, {n_coarse}), got "
+            f"[{cmap.min()}, {cmap.max()}]")
+
+    # directed cross edges, multiplicity retained
+    d_src = cmap[np.repeat(np.arange(g.n, dtype=np.int64),
+                           np.diff(g.row_ptr).astype(np.int64))]
+    d_dst = cmap[g.col_idx]
+    cross = d_src != d_dst
+    d_src, d_dst = d_src[cross], d_dst[cross]
+    order = np.argsort(d_src, kind="stable")
+    d_src, d_dst = d_src[order], d_dst[order]
+    row_ptr = np.zeros(n_coarse + 1, dtype=np.int64)
+    np.cumsum(np.bincount(d_src, minlength=n_coarse), out=row_ptr[1:])
+
+    # aggregated vertex weights (exact: integer-valued sums)
+    deg_out = np.bincount(cmap, weights=g.deg_out.astype(np.float64),
+                          minlength=n_coarse).astype(np.int32)
+
+    # symmetrized adjacency aggregated over coarse pairs; internal weight
+    # folds into self_w
+    a_src = cmap[np.repeat(np.arange(g.n, dtype=np.int64),
+                           np.diff(g.adj_ptr).astype(np.int64))]
+    a_dst = cmap[g.adj_idx]
+    internal = a_src == a_dst
+    self_w = np.zeros(n_coarse, dtype=np.float64)
+    np.add.at(self_w, a_src[internal], g.adj_w[internal].astype(np.float64))
+    key = a_src[~internal] * n_coarse + a_dst[~internal]
+    uniq, inv = np.unique(key, return_inverse=True)
+    w = np.bincount(inv, weights=g.adj_w[~internal].astype(np.float64),
+                    minlength=uniq.size)
+    u_src = (uniq // n_coarse).astype(np.int64)
+    u_dst = (uniq % n_coarse).astype(np.int32)
+    adj_ptr = np.zeros(n_coarse + 1, dtype=np.int64)
+    np.cumsum(np.bincount(u_src, minlength=n_coarse), out=adj_ptr[1:])
+
+    coarse = Graph(
+        n=n_coarse,
+        m=g.m,
+        row_ptr=row_ptr,
+        col_idx=d_dst.astype(np.int32),
+        adj_ptr=adj_ptr,
+        adj_idx=u_dst,
+        adj_w=w.astype(np.float32),
+        deg_out=deg_out,
+    )
+    return coarse, self_w.astype(np.float32)
+
+
 def graph_stats(g: Graph) -> Dict[str, float]:
     """Table I statistics: density and Pearson's 1st skewness coefficient.
 

@@ -38,8 +38,21 @@ def main(argv=None):
     ap.add_argument("--chunk-schedule", default="sequential",
                     choices=["sequential", "sharded", "halo"])
     ap.add_argument("--assignment", default="contiguous",
-                    choices=["contiguous", "locality"],
-                    help="block->shard mapping for sharded/halo schedules")
+                    choices=["contiguous", "locality", "vcycle"],
+                    help="block->shard mapping for sharded/halo schedules "
+                         "(vcycle = locality seed + pairwise-swap "
+                         "refinement, never worse than locality)")
+    ap.add_argument("--mode", default="flat", choices=["flat", "vcycle"],
+                    help="flat = refine at full resolution from superstep 0; "
+                         "vcycle = coarsen, partition the coarsest graph, "
+                         "uncoarsen with warm-started refinement (see "
+                         "docs/multilevel.md)")
+    ap.add_argument("--coarse-n", type=int, default=None,
+                    help="coarsest-level vertex target for --mode vcycle "
+                         "(default 512)")
+    ap.add_argument("--level-decay", type=float, default=None,
+                    help="per-level superstep budget decay for --mode vcycle "
+                         "(default 0.5)")
     ap.add_argument("--halo-granularity", default="auto",
                     choices=["auto", "block", "vertex"],
                     help="halo exchange unit (halo schedule only): whole "
@@ -104,6 +117,10 @@ def main(argv=None):
             kwargs = dict(epsilon=args.epsilon,
                           chunk_schedule=args.chunk_schedule,
                           sync_every=args.sync_every, guard=args.guard)
+            if args.mode != "flat":
+                kwargs["mode"] = args.mode
+                kwargs["coarse_n"] = args.coarse_n
+                kwargs["level_decay"] = args.level_decay
             if args.chunk_schedule != "sequential":
                 kwargs["assignment"] = args.assignment
             if args.chunk_schedule == "halo":
