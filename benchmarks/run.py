@@ -94,7 +94,9 @@ def main(argv=None):
                          ("hub replication quality/balance",
                           scaling["meta"]["hub_ok"]),
                          ("vcycle assignment >= locality",
-                          scaling["meta"]["vcycle_assignment_ok"])):
+                          scaling["meta"]["vcycle_assignment_ok"]),
+                         ("async overlap parity/quality",
+                          scaling["meta"]["async_ok"])):
             gates.append((gate, "ok" if ok else "FAIL", "BENCH_scaling.json"))
 
     _section("Kernel microbench (CPU; interpret-mode parity)", gates,

@@ -18,6 +18,10 @@ contributes only its rule:
       ``"halo"`` variant of the Jacobi superstep that syncs only the
       precomputed boundary blocks (``repro.core.halo``; an exact,
       traffic-proportional-to-edge-cut optimization of the full gather),
+      the ``"async"`` variant that splits each shard's scan into interior
+      blocks (no remote/hub references — scanned while the halo exchange
+      is still in flight) and boundary blocks (scanned after the sync),
+      with a bounded-staleness halo cache (``async_superstep``),
       buffer donation, and sharded state placement;
   kernel    (repro/kernels, routed via ``ops.superstep_kernels``)
       the fused Pallas edge phase and LA update behind the ``hist_impl`` /
@@ -440,6 +444,32 @@ def _expand_vertex_field(x, graph, idx, bps, block_v, axis, wire_dtype=None):
     return y
 
 
+def _exchange_tail(x, graph, idx, bps, block_v, axis, wire_dtype=None):
+    """The exchanged part of one field's drifting view — everything past the
+    shard's own slice: the halo tail the layout's plan moves, then the
+    replicated hub region. ``_expand_vertex_field(x, ...)`` equals
+    ``concat([x, _exchange_tail(x, ...)])`` whenever a plan is attached
+    (the async schedule assembles the two halves at different times)."""
+    parts = []
+    if "halo_rows" in graph:
+        halo_rows = graph["halo_rows"]
+        if halo_rows.shape[1]:
+            rows = jnp.take(halo_rows, idx, axis=0)
+            contrib = jnp.take(x.reshape(bps, block_v), rows, axis=0)
+            parts.append(jax.lax.all_gather(contrib, axis).reshape(-1))
+    elif "send_ids" in graph:
+        tail = vertex_halo_exchange(x, graph["send_ids"], axis,
+                                    wire_dtype=wire_dtype)
+        if tail.shape[0]:
+            parts.append(tail)
+    if "hub_owner" in graph:
+        parts.append(
+            hub_gather(x, graph["hub_owner"], graph["hub_local"], axis))
+    if not parts:
+        return jnp.zeros((0,), x.dtype)
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
 def _chunk_superstep(algo, cfg, layout, axis, graph, cap, state, step):
     """Scan the (local) blocks with the algorithm's chunk rule.
 
@@ -528,6 +558,110 @@ def _chunk_superstep(algo, cfg, layout, axis, graph, cap, state, step):
             graph, cfg.k, cap, axis, idx, vert["labels"], loads_end, local_n)
     return {**vert, **block_out, "loads": loads_end, "key": key_end,
             "score": score_sum}
+
+
+def _async_chunk_superstep(algo, cfg, layout, split, refresh, axis,
+                           graph, cap, state, cache, step):
+    """The halo chunk superstep with the scan split at ``split``: interior
+    blocks first, carrying only the shard's own slice, then the boundary
+    blocks against the full ``local + halo + hub`` buffer.
+
+    Interior blocks reference no exchanged and no hub-replicated vertex
+    (their rewritten slab ids are all ``< local_n`` — the classification in
+    `repro.core.halo.build_halo_spec`), so the phase-1 scan has no data
+    dependency on the exchange; XLA is free to overlap the collective with
+    the interior compute. The tail is assembled from the start-of-superstep
+    state either way, and the scan processes the blocks in the same order
+    with the same loads/key/score chaining as `_chunk_superstep`, so a
+    refreshing async superstep is **bit-identical** to the halo schedule.
+
+    ``refresh`` (static) selects the tail source: True assembles it with the
+    plan's collectives; False reuses ``cache`` — the tail of an earlier
+    superstep, up to ``staleness_bound`` steps old (the refresh policy lives
+    in the caller; the engine only distinguishes fresh from cached). The
+    tail actually read is returned as the new cache either way.
+    """
+    idx = jax.lax.axis_index(axis)
+    bps = layout.blocks_per_shard
+    n_shards = layout.n_blocks // layout.blocks_per_shard
+    block_v = layout.block_v
+    local_n = bps * block_v
+    hub_on = "hub_owner" in graph
+    kind = ("halo" if "halo_rows" in graph
+            else "per-vertex" if "send_ids" in graph else "hub-only")
+    wire_ok = cfg.k <= 127
+
+    key = shard_chain_key(state["key"], axis)
+    repl = {f: state[f] for f in algo.replicated_fields}
+    loads0 = state["loads"]
+
+    xs = (
+        idx * bps + jnp.arange(bps, dtype=jnp.int32),
+        graph["blk_dst"], graph["blk_row"], graph["blk_w"],
+        {f: state[f] for f in algo.block_fields},
+        graph["deg"].reshape(bps, block_v),
+        graph["inv_wsum"].reshape(bps, block_v),
+        graph["vmask"].reshape(bps, block_v),
+    )
+    head_xs = jax.tree_util.tree_map(lambda a: a[:split], xs)
+    tail_xs = jax.tree_util.tree_map(lambda a: a[split:], xs)
+
+    def scan_step(carry, x):
+        vert, loads, key, score_sum = carry
+        blk_idx, e_dst, e_row, e_w, block, deg, inv_wsum, vmask = x
+        gv0 = blk_idx * block_v
+        v0 = (blk_idx - idx * bps) * block_v
+        ctx = ChunkContext(
+            blk_idx=blk_idx, v0=v0, gv0=gv0, e_dst=e_dst, e_row=e_row,
+            e_w=e_w, deg=deg, inv_wsum=inv_wsum, vmask=vmask, step=step,
+            n_shards=n_shards, loads0=loads0, repl=repl)
+        upd = algo.chunk_rule(cfg, ctx, vert, block, loads, cap, key)
+        vert = {f: jax.lax.dynamic_update_slice(vert[f], upd.vert[f], (ctx.v0,))
+                for f in vert}
+        return (vert, upd.loads, upd.key, score_sum + upd.score), upd.block
+
+    # phase 1: interior blocks drift on the shard's own slice while the
+    # exchange is in flight (the nested spans are the overlap contract the
+    # trace validator checks — see tools/trace_report.py --validate)
+    local = {f: state[f] for f in algo.vertex_fields}
+    with obs.annotate("interior-scan", schedule="async", blocks=split,
+                      refresh=int(refresh)):
+        if refresh:
+            with obs.annotate("halo-exchange", kind=kind, hubs=int(hub_on),
+                              fields=len(algo.vertex_fields), overlap=1):
+                halo_tail = {
+                    f: _exchange_tail(
+                        state[f], graph, idx, bps, block_v, axis,
+                        wire_dtype=(jnp.int8 if wire_ok and
+                                    f in algo.wire_int8_fields else None))
+                    for f in algo.vertex_fields}
+        else:
+            halo_tail = {f: cache[f] for f in algo.vertex_fields}
+        carry = (local, loads0, key, jnp.zeros((), jnp.float32))
+        (local, loads_mid, key_mid, score_mid), block_head = \
+            jax.lax.scan(scan_step, carry, head_xs)
+
+    # phase 2: boundary blocks see the synced (or cached) tail; intra-shard
+    # drift continues — phase 1's updates lead the buffer
+    vert = {f: jnp.concatenate([local[f], halo_tail[f]])
+            if halo_tail[f].shape[0] else local[f]
+            for f in algo.vertex_fields}
+    carry = (vert, loads_mid, key_mid, score_mid)
+    (vert, loads_end, key_end, score_sum), block_tail = \
+        jax.lax.scan(scan_step, carry, tail_xs)
+    block_out = {f: jnp.concatenate([block_head[f], block_tail[f]], axis=0)
+                 for f in algo.block_fields}
+
+    vert = {f: v[:local_n] for f, v in vert.items()}
+    loads_end = psum_delta_merge(loads0, loads_end - loads0, axis)
+    score_sum = jax.lax.psum(score_sum, axis)
+    key_end = replicated_chain_key(key_end, axis)
+    if hub_on:
+        vert["labels"], loads_end = _hub_reconcile(
+            graph, cfg.k, cap, axis, idx, vert["labels"], loads_end, local_n)
+    out = {**vert, **block_out, "loads": loads_end, "key": key_end,
+           "score": score_sum}
+    return out, halo_tail
 
 
 def _shard_superstep(algo, cfg, layout, axis, graph, cap, state, step):
@@ -622,6 +756,47 @@ def _sharded_superstep(algo, cfg, mesh, layout, graph, cap, donated, kept):
     return _finish(algo, layout, state, out, step)
 
 
+@partial(jax.jit,
+         static_argnames=("algo", "cfg", "mesh", "layout", "split", "refresh"),
+         donate_argnames=("donated",))
+def _async_sharded_superstep(algo, cfg, mesh, layout, split, refresh,
+                             graph, cap, donated, kept, cache):
+    obs.record_compile(
+        "superstep", algo=algo.name, schedule="async", refresh=bool(refresh),
+        split=split,
+        n_shards=layout.n_blocks // layout.blocks_per_shard,
+        n_blocks=layout.n_blocks, block_v=layout.block_v,
+        e_max=int(graph["blk_dst"].shape[-1]),
+        b_max=(int(graph["halo_rows"].shape[-1])
+               if "halo_rows" in graph else None),
+        h_max=(int(graph["send_ids"].shape[-1])
+               if "send_ids" in graph else None),
+        hub_pad=(int(graph["hub_owner"].shape[0])
+                 if "hub_owner" in graph else None))
+    state = {**donated, **kept}
+    step = state.pop("step")
+    state.pop("score")
+    state_specs = {f: _state_spec(algo, f, v) for f, v in state.items()}
+    out_specs = {f: state_specs[f] for f in state
+                 if f not in algo.replicated_fields}
+    out_specs["score"] = P()
+    # the cache is the per-shard exchanged tail: sharded over the mesh like
+    # every other per-shard buffer, empty under refresh (it is rebuilt)
+    cache_specs = {f: P(AXIS) for f in cache}
+    tail_specs = {f: P(AXIS) for f in algo.vertex_fields}
+    body = partial(_async_chunk_superstep, algo, cfg, layout, split, refresh,
+                   AXIS)
+    sharded = shard_map(
+        body, mesh=mesh,
+        in_specs=({k: _GRAPH_SPECS[k] for k in graph}, P(), state_specs,
+                  cache_specs, P()),
+        out_specs=(out_specs, tail_specs),
+        check_rep=False,
+    )
+    out, new_cache = sharded(graph, cap, state, cache, step)
+    return _finish(algo, layout, state, out, step), new_cache
+
+
 # ---------------------------------------------------------------------------
 # public entry points
 # ---------------------------------------------------------------------------
@@ -670,6 +845,12 @@ def superstep(algo: Algorithm, dg, cfg, state, halo=None):
     any replicated fields) stay valid, so the convergence loop's windowed
     score buffering is unaffected.
     """
+    if cfg.chunk_schedule == "async":
+        # the always-refresh call: every superstep rebuilds its halo tail,
+        # which is exactly the staleness_bound=0 (bit-identical-to-halo)
+        # semantics; callers that exploit the staleness bound thread the
+        # cache through async_superstep themselves (core/runner.py)
+        return async_superstep(algo, dg, cfg, state)[0]
     cap = capacity_device(dg.m, cfg.k, cfg.epsilon, cfg.capacity_mode)
     sd = state._asdict()
     donated = {f: sd.pop(f) for f in algo.donate}
@@ -712,6 +893,69 @@ def superstep(algo: Algorithm, dg, cfg, state, halo=None):
         graph.pop("send_ids", None)
     return _sequential_superstep(algo, cfg, layout, graph, cap,
                                  donated, sd)
+
+
+def async_superstep(algo: Algorithm, dg, cfg, state, cache=None):
+    """One ``chunk_schedule="async"`` superstep; returns ``(state, cache)``.
+
+    The async schedule is the halo schedule with the per-shard block scan
+    split in two: the leading **interior** blocks (no remote and no
+    hub-replicated references — ``dg.halo.interior_split`` of them, see
+    `repro.core.halo`) scan against the shard's own slice while the halo
+    exchange is still in flight; the **boundary** blocks scan after the
+    sync, against the full ``local + halo + hub`` buffer. The exchanged
+    tail is built from the same start-of-superstep snapshot the halo
+    schedule would move, and the blocks run in the same order with the same
+    loads/key/score chaining — a refreshing async superstep is
+    **bit-identical** to ``chunk_schedule="halo"`` on the same layout.
+
+    ``cache`` is the bounded-staleness knob: ``None`` (the default) forces
+    a refresh — the tail is rebuilt with the plan's collectives; passing
+    the cache returned by an earlier call reuses that superstep's tail
+    verbatim, skipping the exchange entirely. The *policy* (how many
+    supersteps a tail may be reused — ``cfg.staleness_bound``) lives in the
+    caller (`core/runner.py`'s refresh closure, the streaming runner); the
+    engine only distinguishes fresh from cached, so the jit cache holds
+    exactly two entries per layout. Under a fallback plan (coverage too
+    high) the full-gather schedule runs instead, bit-identical to the halo
+    fallback, and the returned cache is ``None`` — staleness is vacuous
+    when every superstep already moves everything.
+
+    Donation matches `superstep`: the fields in ``algo.donate`` are updated
+    in place; rebind both results. The cache buffers are *not* donated — a
+    stale superstep returns its input cache unchanged.
+    """
+    if algo.kind != "chunk":
+        raise ValueError(
+            f"chunk_schedule='async' overlaps the interior *block scan* "
+            f"with the halo exchange; {algo.name} is kind={algo.kind!r} "
+            "and has no block scan (use 'sharded' or 'halo')")
+    if not isinstance(dg, ShardedDeviceGraph):
+        raise TypeError(
+            "chunk_schedule='async' needs a ShardedDeviceGraph (see "
+            "prepare_sharded_device_graph); got a plain DeviceGraph")
+    spec = dg.halo
+    if spec is None:
+        raise ValueError(
+            "chunk_schedule='async' needs a halo-enabled layout: build it "
+            "with shard_device_graph(..., halo=True) / attach_halo, or let "
+            "run_partitioner build it")
+    cap = capacity_device(dg.m, cfg.k, cfg.epsilon, cfg.capacity_mode)
+    sd = state._asdict()
+    donated = {f: sd.pop(f) for f in algo.donate}
+    layout = _Layout(dg.n, dg.n_pad, dg.n_blocks, dg.block_v,
+                     dg.blocks_per_shard)
+    graph = _graph_arrays(dg.dg)
+    if spec.fallback:
+        # coverage too high for any exchange to win: run the full-gather
+        # Jacobi schedule, exactly like the halo schedule's fallback
+        return (_sharded_superstep(algo, cfg, dg.mesh, layout, graph, cap,
+                                   donated, sd), None)
+    _apply_halo_plan(graph, spec)
+    refresh = cache is None
+    return _async_sharded_superstep(
+        algo, cfg, dg.mesh, layout, spec.interior_split, refresh,
+        graph, cap, donated, sd, {} if refresh else cache)
 
 
 def place_state(algo: Algorithm, state, sdg: ShardedDeviceGraph):
@@ -780,6 +1024,7 @@ __all__ = [
     "ShardUpdate",
     "halo_exchange",
     "superstep",
+    "async_superstep",
     "place_state",
     "state_shardings",
     "warm_labels",

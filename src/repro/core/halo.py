@@ -53,6 +53,19 @@ When the chosen exchange would move nearly as much as the plain all-gather
 (``coverage`` at or above ``threshold``) the spec records ``fallback=True``
 and the engine runs the full-gather schedule instead (hub replication is
 disabled too — there is no halo left to shrink).
+
+**Interior/boundary split** (``chunk_schedule="async"``): the slab rewrite
+also classifies every block. A block whose rewritten neighbor ids all fall
+inside the shard's own slice (``< local_n``) is *interior* — it reads no
+exchanged and no hub-replicated vertex, so the async schedule can scan it
+while the halo exchange for this superstep is still in flight. Every other
+block is *boundary* (it reads the tail or the hub region) and must wait for
+the exchange. ``interior_split`` is the number of leading interior blocks
+common to every shard — the static phase-1 scan length of the async
+superstep (`engine.async_superstep`); `interior_first_order` returns the
+intra-shard reorder that maximizes it. The classification is derived from
+``mapped`` (the same array the rewrite ships), so the split invariants are
+structural, pinned by the property suite in ``tests/test_async.py``.
 """
 from __future__ import annotations
 
@@ -137,6 +150,15 @@ class HaloSpec:
     hub_slot: Optional[jax.Array] = None   # [S, he_max] int32 hub slot
     hub_w: Optional[jax.Array] = None      # [S, he_max] f32 vote weight (0 pad)
     vmask_nonhub: Optional[jax.Array] = None  # [n_pad] bool vmask minus hubs
+    # --- interior/boundary split (chunk_schedule="async") ----------------- #
+    block_is_boundary: Tuple[bool, ...] = ()  # [n_blocks] True iff the block
+                                              # reads the exchanged tail or
+                                              # the replicated hub region
+                                              # (empty when fallback)
+    interior_counts: Tuple[int, ...] = ()     # per shard: #interior blocks
+    interior_split: int = 0                   # leading interior blocks common
+                                              # to every shard — the async
+                                              # schedule's phase-1 scan length
 
     @property
     def local_n(self) -> int:
@@ -395,6 +417,7 @@ def build_halo_spec(
     hub_owner = hub_local = hub_deg = None
     hub_src = hub_slot = hub_w = vmask_nonhub = None
     he_max = 0
+    boundary_flag = None
     if fallback:
         # no halo left to shrink: run the plain full gather, hubs off
         n_hubs, hub_pad, hub_ids = 0, 0, np.empty(0, dtype=np.int64)
@@ -443,6 +466,12 @@ def build_halo_spec(
         if unresolved.any():
             raise AssertionError("halo sets do not cover a real slab reference")
         blk_dst_halo = mapped.astype(np.int32)
+        # interior/boundary classification for the async schedule: a block
+        # is boundary iff any *real* slab slot resolves past the shard's own
+        # slice — into the exchanged tail or the hub region. Derived from
+        # the very `mapped` array the rewrite ships, so "interior blocks
+        # read only local vertices" holds by construction.
+        boundary_flag = np.any(real & (mapped >= local_n), axis=1)
 
         if n_hubs or hub_pad:
             hub_owner = np.full(hub_pad, -1, dtype=np.int32)
@@ -469,6 +498,17 @@ def build_halo_spec(
                 hub_src[s, :c] = src_local[m]
                 hub_slot[s, :c] = slot_of[dst[hb[m], he[m]]]
                 hub_w[s, :c] = blk_w[hb[m], he[m]]
+
+    interior_counts: Tuple[int, ...] = ()
+    interior_split = 0
+    if boundary_flag is not None:
+        per_shard = boundary_flag.reshape(n_shards, bps)
+        interior_counts = tuple(int(c) for c in (~per_shard).sum(axis=1))
+        # first boundary block per shard (bps when a shard has none); the
+        # scan length must be SPMD-uniform, so the split is the min
+        firsts = np.where(per_shard.any(axis=1),
+                          per_shard.argmax(axis=1), bps)
+        interior_split = int(firsts.min())
 
     if mesh is not None:
         repl = NamedSharding(mesh, P())
@@ -514,8 +554,42 @@ def build_halo_spec(
         hub_slot=hub_slot,
         hub_w=hub_w,
         vmask_nonhub=vmask_nonhub,
+        block_is_boundary=(tuple(bool(b) for b in boundary_flag)
+                           if boundary_flag is not None else ()),
+        interior_counts=interior_counts,
+        interior_split=interior_split,
     )
 
 
-__all__ = ["HaloSpec", "HubConfig", "build_halo_spec",
+def interior_first_order(spec: HaloSpec) -> Optional[np.ndarray]:
+    """Intra-shard stable reorder putting every shard's interior blocks
+    first, in the spec's storage block space (or None when it changes
+    nothing, including under fallback).
+
+    Which blocks are boundary depends only on the block->shard ownership
+    (which vertices are remote) and the hub set, not on the order of blocks
+    *within* a shard — so re-sharding the same assignment with this
+    permutation composed on top preserves the halo/boundary structure while
+    raising ``interior_split`` to ``min(interior_counts)``, the largest
+    phase-1 window the assignment admits. The async runner applies it
+    before building the layout it actually runs (`core/runner.py`); parity
+    legs compare the halo and async schedules on that same layout, so the
+    reorder never weakens the staleness_bound=0 bit-identity contract.
+    """
+    if spec.fallback or not spec.block_is_boundary:
+        return None
+    flags = np.asarray(spec.block_is_boundary, dtype=bool)
+    bps = spec.blocks_per_shard
+    order = []
+    for s in range(spec.n_shards):
+        local = np.arange(s * bps, (s + 1) * bps, dtype=np.int64)
+        f = flags[local]
+        order.append(np.concatenate([local[~f], local[f]]))
+    perm = np.concatenate(order)
+    if np.array_equal(perm, np.arange(flags.size)):
+        return None
+    return perm
+
+
+__all__ = ["HaloSpec", "HubConfig", "build_halo_spec", "interior_first_order",
            "DEFAULT_HALO_THRESHOLD", "DEFAULT_HUB_MAX_FRAC"]

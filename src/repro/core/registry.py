@@ -13,6 +13,11 @@ the built-in modules lazily on first lookup so the registry has no import
 cycle with the rules it serves. Out-of-tree algorithms call ``register``
 directly and are immediately reachable from ``run_partitioner``, the
 streaming runner, and the launch CLI.
+
+Execution schedules are owned by the engine, not the rules: a registered
+chunk-kind ``Algorithm`` inherits every ``chunk_schedule`` — including the
+overlapped ``"async"`` superstep (docs/async-superstep.md) — for free; its
+rule body never sees which schedule ran it.
 """
 from __future__ import annotations
 

@@ -47,7 +47,7 @@ from repro.core.device_graph import CAPACITY_MODES, DeviceGraph, ShardedDeviceGr
 from repro.core.lp import edge_histogram_jnp, spinner_penalty, tau_term
 from repro.core.registry import register
 
-_CHUNK_SCHEDULES = ("sequential", "sharded", "halo")
+_CHUNK_SCHEDULES = ("sequential", "sharded", "halo", "async")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +65,9 @@ class RestreamConfig:
     restream_budget: int = 32  # max re-decisions per vertex across the run
                                # (0 = unlimited); an exhausted vertex's
                                # label is frozen, bounding per-vertex churn
+    staleness_bound: int = 0   # "async" schedule: supersteps a stale halo
+                               # tail may be reused (0 = exact, see
+                               # docs/async-superstep.md)
 
     def __post_init__(self):
         if self.capacity_mode not in CAPACITY_MODES:
@@ -83,6 +86,15 @@ class RestreamConfig:
             raise ValueError(
                 f"RestreamConfig.restream_budget must be >= 0 "
                 f"(0 = unlimited), got {self.restream_budget}")
+        if not isinstance(self.staleness_bound, int) or \
+                self.staleness_bound < 0:
+            raise ValueError(
+                f"RestreamConfig.staleness_bound={self.staleness_bound!r} "
+                "must be an int >= 0")
+        if self.staleness_bound > 0 and self.chunk_schedule != "async":
+            raise ValueError(
+                "staleness_bound > 0 only applies to chunk_schedule='async' "
+                f"(got chunk_schedule={self.chunk_schedule!r})")
 
 
 class RestreamState(NamedTuple):

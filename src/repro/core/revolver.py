@@ -48,7 +48,7 @@ _VALID_CHOICES = {
     "hist_impl": ("jnp", "pallas"),
     "weight_mode": ("self_lambda", "neighbor_lambda"),
     "capacity_mode": CAPACITY_MODES,
-    "chunk_schedule": ("sequential", "sharded", "halo"),
+    "chunk_schedule": ("sequential", "sharded", "halo", "async"),
 }
 
 
@@ -84,7 +84,16 @@ class RevolverConfig:
     #   "halo":       the sharded schedule with the full label all-gather
     #                 replaced by a precomputed boundary-block exchange
     #                 (O(halo) traffic; exact — see repro.core.halo).
+    #   "async":      the halo schedule with the exchange overlapped onto
+    #                 the interior block scan; staleness_bound=0 is
+    #                 bit-identical to "halo" (see docs/async-superstep.md).
     chunk_schedule: str = "sequential"
+    # how many supersteps a shard may run against a stale halo tail before
+    # the runner forces a refresh ("async" schedule only). 0 = refresh every
+    # superstep, which keeps the bit-identity contract with "halo"; s >= 1
+    # trades exactness for overlap and is gated on converged quality in the
+    # scaling bench.
+    staleness_bound: int = 0
 
     def __post_init__(self):
         for name, valid in _VALID_CHOICES.items():
@@ -92,6 +101,15 @@ class RevolverConfig:
             if value not in valid:
                 raise ValueError(
                     f"RevolverConfig.{name}={value!r} is not one of {valid}")
+        if not isinstance(self.staleness_bound, int) or \
+                self.staleness_bound < 0:
+            raise ValueError(
+                f"RevolverConfig.staleness_bound={self.staleness_bound!r} "
+                "must be an int >= 0")
+        if self.staleness_bound > 0 and self.chunk_schedule != "async":
+            raise ValueError(
+                "staleness_bound > 0 only applies to chunk_schedule='async' "
+                f"(got chunk_schedule={self.chunk_schedule!r})")
 
 
 class RevolverState(NamedTuple):

@@ -46,7 +46,12 @@ from repro.core.device_graph import (
     shard_device_graph,
     vertices_to_original,
 )
-from repro.core.halo import DEFAULT_HALO_THRESHOLD, HubConfig, build_halo_spec
+from repro.core.halo import (
+    DEFAULT_HALO_THRESHOLD,
+    HubConfig,
+    build_halo_spec,
+    interior_first_order,
+)
 from repro.core.metrics import local_edges, max_normalized_load
 from repro.core.registry import StaticAlgorithm, get_algorithm
 from repro.graphs.csr import Graph
@@ -441,7 +446,13 @@ def run_partitioner(
     permutation, see `shard_device_graph`) — locality co-location shrinks
     the halo, making the exchanged traffic proportional to partition
     quality. Returned labels (and probs) are always in original vertex
-    order, whatever the assignment.
+    order, whatever the assignment. `chunk_schedule="async"` is the halo
+    schedule with the exchange overlapped onto each shard's interior block
+    scan (the runner reorders blocks interior-first to widen the overlap
+    window); `staleness_bound=0` (config default) refreshes the halo every
+    superstep and stays bit-identical to "halo", while `staleness_bound=s`
+    lets shards reuse a stale tail for up to `s` supersteps between
+    refreshes — see `docs/async-superstep.md`.
 
     `mode="vcycle"` runs the METIS-style multilevel V-cycle
     (`repro.core.multilevel`): coarsen by heavy-edge matching down to
@@ -514,22 +525,24 @@ def run_partitioner(
     algorithm = get_algorithm(algo)
     static = isinstance(algorithm, StaticAlgorithm)
     schedule = cfg_kwargs.get("chunk_schedule")
-    sharded = schedule in ("sharded", "halo")
+    sharded = schedule in ("sharded", "halo", "async")
     if mesh is not None and not sharded:
         raise ValueError(
-            "mesh is only meaningful with chunk_schedule='sharded'/'halo'")
+            "mesh is only meaningful with chunk_schedule='sharded'/'halo'/"
+            "'async'")
     if not sharded and not (isinstance(assignment, str)
                             and assignment == "contiguous"):
         raise ValueError(
             "assignment is only meaningful with chunk_schedule="
-            "'sharded'/'halo'")
+            "'sharded'/'halo'/'async'")
     if halo_granularity not in ("auto", "block", "vertex"):
         raise ValueError(
             f"halo_granularity={halo_granularity!r} is not one of "
             "('auto', 'block', 'vertex')")
-    if halo_granularity != "auto" and schedule != "halo":
+    if halo_granularity != "auto" and schedule not in ("halo", "async"):
         raise ValueError(
-            "halo_granularity is only meaningful with chunk_schedule='halo'")
+            "halo_granularity is only meaningful with chunk_schedule="
+            "'halo'/'async'")
     if not hub_replication and (hub_quantile or hub_target_coverage is not None):
         raise ValueError(
             "hub_quantile/hub_target_coverage need hub_replication=True")
@@ -626,7 +639,7 @@ def _run_partitioner_traced(
     root span (split out so the traced scope covers every early return)."""
     with tracer.span("prepare-layout", schedule=schedule or "sequential"):
         if sharded:
-            halo = schedule == "halo"
+            halo = schedule in ("halo", "async")
             if mesh is None and isinstance(dg, ShardedDeviceGraph):
                 mesh = dg.mesh
             if mesh is None:
@@ -638,11 +651,35 @@ def _run_partitioner_traced(
                     graph, mesh, n_blocks=n_blocks, assignment=assignment,
                     halo=halo, halo_threshold=halo_threshold,
                     halo_granularity=halo_granularity, hubs=hubs)
+                if schedule == "async":
+                    # interior-first storage order: pull each shard's
+                    # interior blocks to the front so the phase-1 overlap
+                    # window (interior_split) reaches min(interior_counts);
+                    # boundary-ness only depends on ownership + hub set, so
+                    # one rebuild with the composed permutation converges
+                    order = interior_first_order(dg.halo)
+                    if order is not None:
+                        perm = (np.asarray(dg.block_perm)[order]
+                                if dg.block_perm is not None else order)
+                        dg = prepare_sharded_device_graph(
+                            graph, mesh, n_blocks=n_blocks, assignment=perm,
+                            halo=True, halo_threshold=halo_threshold,
+                            halo_granularity=halo_granularity, hubs=hubs)
             elif not isinstance(dg, ShardedDeviceGraph):
+                plain = dg
                 dg = shard_device_graph(dg, mesh, assignment=assignment,
                                         halo=halo, halo_threshold=halo_threshold,
                                         halo_granularity=halo_granularity,
                                         hubs=hubs)
+                if schedule == "async":
+                    order = interior_first_order(dg.halo)
+                    if order is not None:
+                        perm = (np.asarray(dg.block_perm)[order]
+                                if dg.block_perm is not None else order)
+                        dg = shard_device_graph(
+                            plain, mesh, assignment=perm, halo=True,
+                            halo_threshold=halo_threshold,
+                            halo_granularity=halo_granularity, hubs=hubs)
             else:
                 if not (isinstance(assignment, str)
                         and assignment == "contiguous"):
@@ -679,6 +716,13 @@ def _run_partitioner_traced(
             tracer.counter("halo_b_max", spec.b_max)
             tracer.counter("halo_h_max", spec.h_max)
             tracer.counter("halo_coverage", spec.coverage)
+            if schedule == "async":
+                # trace_report --validate requires the overlap span pair
+                # for async runs unless the plan fell back to the full
+                # gather (no interior scan exists to overlap with)
+                if spec.fallback:
+                    tracer.meta["async_fallback"] = True
+                tracer.counter("interior_split", spec.interior_split)
             tracer.counter(
                 "gathered_bytes_halo",
                 spec.gathered_elems_per_device() * wire_sum)
@@ -752,8 +796,40 @@ def _run_partitioner_traced(
             threshold=halo_threshold, hubs=hubs,
             deg=np.asarray(dg.deg_out), vmask=np.asarray(dg.vmask),
             blk_row=np.asarray(dg.blk_row))
-    base_step = lambda s: engine.superstep(algorithm, dg, cfg, s,
-                                           halo=seq_halo)
+    # async staleness driver: the engine only distinguishes fresh (cache is
+    # None) from stale (reuse the returned tail); the *policy* lives here.
+    # Refresh when the bound expires (g % (s+1) == 0 keeps any tail at most
+    # staleness_bound supersteps old) and on every checkpoint window (g %
+    # sync_every == 0), so a snapshot is always taken downstream of a fresh
+    # exchange and kill-and-resume replays bit-identically even at s >= 1
+    # (a resumed run starts with cache=None — the same forced refresh).
+    async_box = {"cache": None, "g": None, "last_refresh": 0}
+    if schedule == "async":
+        staleness = getattr(cfg, "staleness_bound", 0)
+        ckpt_windows = checkpoint_dir is not None and checkpoint_every > 0
+
+        def base_step(s):
+            if async_box["g"] is None:   # first call: resume-aware origin
+                async_box["g"] = start_step
+                async_box["last_refresh"] = start_step
+            g = async_box["g"]
+            refresh = (async_box["cache"] is None
+                       or staleness == 0
+                       or g % (staleness + 1) == 0
+                       or (ckpt_windows and g % sync_every == 0))
+            if refresh:
+                async_box["cache"] = None
+                async_box["last_refresh"] = g
+            s2, async_box["cache"] = engine.async_superstep(
+                algorithm, dg, cfg, s, cache=async_box["cache"])
+            if tracer.enabled:
+                tracer.counter("halo_staleness",
+                               float(g - async_box["last_refresh"]), step=g)
+            async_box["g"] = g + 1
+            return s2
+    else:
+        base_step = lambda s: engine.superstep(algorithm, dg, cfg, s,
+                                               halo=seq_halo)
 
     # ---- crash safety: checkpoint manager + resume -----------------------
     ckpt = None
@@ -878,6 +954,8 @@ def _run_partitioner_traced(
             r_state, r_step, r_prev, r_stall, _ = restored
             tracer.instant("rollback", from_step=gsteps, to_step=r_step)
             _log.warning("rolled back to checkpoint step %d", r_step)
+            # a cached halo tail was built from the now-discarded trajectory
+            async_box["cache"] = None
             # loop step counting continues forward; only the halting state
             # and device state rewind
             return {"state": r_state, "prev_score": r_prev, "stall": r_stall}
@@ -897,6 +975,7 @@ def _run_partitioner_traced(
                 s.probs.shape)
         tracer.instant("reinit", step=gsteps)
         _log.warning("reinitialized affected vertices at step %d", gsteps)
+        async_box["cache"] = None   # tail may carry the corrupt labels
         return {"state": s._replace(**fix), "prev_score": -np.inf, "stall": 0}
 
     # the reinit path needs the loop's current state object (drain_metrics

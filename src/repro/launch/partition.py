@@ -36,7 +36,7 @@ def main(argv=None):
     ap.add_argument("--epsilon", type=float, default=0.05)
     ap.add_argument("--n-blocks", type=int, default=8)
     ap.add_argument("--chunk-schedule", default="sequential",
-                    choices=["sequential", "sharded", "halo"])
+                    choices=["sequential", "sharded", "halo", "async"])
     ap.add_argument("--assignment", default="contiguous",
                     choices=["contiguous", "locality", "vcycle"],
                     help="block->shard mapping for sharded/halo schedules "
@@ -55,10 +55,16 @@ def main(argv=None):
                          "(default 0.5)")
     ap.add_argument("--halo-granularity", default="auto",
                     choices=["auto", "block", "vertex"],
-                    help="halo exchange unit (halo schedule only): whole "
+                    help="halo exchange unit (halo/async schedules): whole "
                          "boundary blocks or per-vertex need lists on an "
                          "int8 wire; auto takes whichever moves fewer "
                          "elements")
+    ap.add_argument("--staleness-bound", type=int, default=0,
+                    help="async schedule: supersteps a shard may run against "
+                         "a stale halo before a forced refresh (0 = refresh "
+                         "every superstep, bit-identical to the halo "
+                         "schedule on the same layout; see "
+                         "docs/async-superstep.md)")
     ap.add_argument("--hub-replication", action="store_true",
                     help="mirror top-degree vertices into every shard and "
                          "reconcile their labels by a per-superstep global "
@@ -123,8 +129,10 @@ def main(argv=None):
                 kwargs["level_decay"] = args.level_decay
             if args.chunk_schedule != "sequential":
                 kwargs["assignment"] = args.assignment
-            if args.chunk_schedule == "halo":
+            if args.chunk_schedule in ("halo", "async"):
                 kwargs["halo_granularity"] = args.halo_granularity
+            if args.chunk_schedule == "async":
+                kwargs["staleness_bound"] = args.staleness_bound
             if args.hub_replication:
                 kwargs["hub_replication"] = True
                 kwargs["hub_quantile"] = args.hub_quantile

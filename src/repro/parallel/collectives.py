@@ -114,6 +114,12 @@ def vertex_halo_exchange(x, send_ids, axis: str, wire_dtype=None):
     The rows delivered are the same start-of-superstep snapshots the full
     gather would deliver, so the per-vertex plan is an exact optimization
     of the Jacobi sync (bit-identity gated by tests and the scaling bench).
+
+    Because the gathered rows are start-of-superstep values with no data
+    dependency on the current scan, the ``"async"`` schedule issues this
+    exchange concurrently with the interior block scan (the tail is only
+    consumed by the boundary blocks) — see `repro.core.engine` and
+    docs/async-superstep.md.
     """
     n_shards, _, h_max = send_ids.shape
     if h_max == 0:                    # no cross-shard references at all

@@ -172,21 +172,22 @@ class StreamRunner:
             theta=cfg.theta,
             **algo_kwargs,
         )
-        sharded = self.rcfg.chunk_schedule in ("sharded", "halo")
+        sharded = self.rcfg.chunk_schedule in ("sharded", "halo", "async")
         if sharded and mesh is None:
             from repro.launch.mesh import make_blocks_mesh
 
             mesh = make_blocks_mesh()
         if mesh is not None and not sharded:
             raise ValueError(
-                "mesh is only meaningful with chunk_schedule='sharded'/'halo'")
+                "mesh is only meaningful with chunk_schedule='sharded'/"
+                "'halo'/'async'")
         if not sharded and not (isinstance(assignment, str)
                                 and assignment == "contiguous"):
             raise ValueError(
                 "assignment is only meaningful with chunk_schedule="
-                "'sharded'/'halo'")
+                "'sharded'/'halo'/'async'")
         self.mesh = mesh
-        self._halo = self.rcfg.chunk_schedule == "halo"
+        self._halo = self.rcfg.chunk_schedule in ("halo", "async")
         self._halo_threshold = halo_threshold
         if halo_granularity not in ("auto", "block", "vertex"):
             raise ValueError(
@@ -208,6 +209,13 @@ class StreamRunner:
         self._hubs = (HubConfig(quantile=hub_quantile,
                                 target_coverage=hub_target_coverage)
                       if hub_replication else None)
+        # async staleness driver (chunk_schedule="async"): the cached halo
+        # tail indexes one layout's slabs, so it is invalidated whenever the
+        # incremental layout grows/rebuilds (tracked by object identity)
+        self._async_cache = None
+        self._async_dg = None
+        self._async_g = 0
+        self._async_last_refresh = 0
         self.idg = IncrementalDeviceGraph(
             n, n_blocks=cfg.n_blocks, e_headroom=cfg.e_headroom, mesh=mesh,
             assignment=assignment,
@@ -570,7 +578,24 @@ class StreamRunner:
     # ------------------------------------------------------------------ #
 
     def _superstep(self, dg, state):
-        return engine.superstep(self.algo, dg, self.rcfg, state)
+        if self.rcfg.chunk_schedule != "async":
+            return engine.superstep(self.algo, dg, self.rcfg, state)
+        if dg is not self._async_dg:
+            self._async_dg, self._async_cache = dg, None
+        bound = getattr(self.rcfg, "staleness_bound", 0)
+        g = self._async_g
+        refresh = (self._async_cache is None or bound == 0
+                   or g % (bound + 1) == 0)
+        if refresh:
+            self._async_cache = None
+            self._async_last_refresh = g
+        state, self._async_cache = engine.async_superstep(
+            self.algo, dg, self.rcfg, state, cache=self._async_cache)
+        if self.tracer.enabled:
+            self.tracer.counter(
+                "halo_staleness", float(g - self._async_last_refresh), step=g)
+        self._async_g = g + 1
+        return state
 
     def _refine(self, dg, state, max_steps: int, patience: int,
                 step0: int = 0):

@@ -17,6 +17,11 @@ with:
     exchange — boundary block slabs, or per-vertex need lists moving labels
     on the int8 wire — must reproduce the full-gather trajectory
     bit-for-bit on labels/loads/probs.
+  * ``async_parity`` — ``chunk_schedule="async"`` at ``staleness_bound=0``
+    (refresh every superstep) vs ``"halo"`` at 8 shards on WIKI/LJ/USA, on
+    the *same* interior-first layout: the two-phase scan overlaps the
+    exchange with the interior blocks but consumes the identical
+    start-of-superstep tail, so labels/loads/probs must match bit-for-bit.
   * ``quality`` — sharded-vs-sequential local-edges ratio on WIKI and LJ at
     k=8 after a fixed step budget (the Jacobi merge's quality cost).
   * ``hub_quality`` — 8-shard hub replication vs the full-gather reference:
@@ -182,6 +187,54 @@ def halo_parity(dataset: str, *, scale: float, n_shards: int = 8,
     }
 
 
+def async_parity(dataset: str, *, scale: float, n_shards: int = 8,
+                 n_blocks: int = 64, steps: int = 6, k: int = 8,
+                 assignment="contiguous", granularity="auto") -> dict:
+    """chunk_schedule="async" (staleness_bound=0: refresh every superstep)
+    vs "halo" on the same interior-first layout: phase 1 scans the interior
+    blocks against the shard's own slice while the exchange is in flight,
+    phase 2 consumes the same start-of-superstep tail the halo schedule
+    gathers — bit-identity on labels/loads/probs is the s=0 contract."""
+    from repro.core import engine
+    from repro.core.halo import interior_first_order
+
+    g = load_dataset(dataset, scale=scale, seed=0)
+    mesh = make_blocks_mesh(n_shards)
+    kwargs = dict(n_blocks=n_blocks, halo=True, halo_threshold=2.0,
+                  halo_granularity=granularity)
+    sdg = prepare_sharded_device_graph(g, mesh, assignment=assignment,
+                                       **kwargs)
+    order = interior_first_order(sdg.halo)
+    if order is not None:
+        perm = (np.asarray(sdg.block_perm)[order]
+                if sdg.block_perm is not None else order)
+        sdg = prepare_sharded_device_graph(g, mesh, assignment=perm, **kwargs)
+    cfg_h = RevolverConfig(k=k, chunk_schedule="halo")
+    cfg_a = RevolverConfig(k=k, chunk_schedule="async")
+    key = jax.random.PRNGKey(0)
+    st_h = place_revolver_state(revolver_init(sdg, cfg_h, key), sdg)
+    st_a = place_revolver_state(revolver_init(sdg, cfg_a, key), sdg)
+    for _ in range(steps):
+        st_h = revolver_superstep(sdg, cfg_h, st_h)
+        st_a, _ = engine.async_superstep(REVOLVER, sdg, cfg_a, st_a)
+    spec = sdg.halo
+    return {
+        "dataset": dataset, "n_shards": n_shards, "n_blocks": n_blocks,
+        "steps": steps, "granularity": spec.granularity,
+        "assignment": assignment if isinstance(assignment, str) else "explicit",
+        "fallback": spec.fallback,
+        "interior_split": spec.interior_split,
+        "interior_counts": list(spec.interior_counts),
+        "labels_equal": bool((np.asarray(st_h.labels)
+                              == np.asarray(st_a.labels)).all()),
+        "loads_equal": bool((np.asarray(st_h.loads)
+                             == np.asarray(st_a.loads)).all()),
+        "max_probs_diff": float(np.abs(np.asarray(st_h.probs)
+                                       - np.asarray(st_a.probs)).max()),
+        "score_diff": abs(float(st_h.score) - float(st_a.score)),
+    }
+
+
 def quality(dataset: str, *, scale: float, steps: int, k: int = 8) -> dict:
     g = load_dataset(dataset, scale=scale, seed=0)
     mesh = make_blocks_mesh(8)
@@ -243,6 +296,15 @@ def main() -> int:
             halo_parity("LJ", scale=3e-4, granularity="vertex"),
             halo_parity("USA", scale=5e-4, granularity="vertex",
                         assignment="locality"),
+        ],
+        "async_parity": [
+            # staleness_bound=0 bit-identity gate at 8 host devices on the
+            # acceptance trio, both exchange granularities + locality
+            async_parity("WIKI", scale=5e-4, granularity="vertex"),
+            async_parity("LJ", scale=3e-4, granularity="vertex"),
+            async_parity("USA", scale=5e-4, granularity="block"),
+            async_parity("USA", scale=5e-4, granularity="vertex",
+                         assignment="locality"),
         ],
         "quality": [
             quality("WIKI", scale=5e-4, steps=40),

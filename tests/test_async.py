@@ -1,0 +1,271 @@
+"""Async superstep schedule: interior/boundary split + staleness semantics.
+
+The ``chunk_schedule="async"`` contract (docs/async-superstep.md) is pinned
+in three layers:
+
+  * **property tests** (hypothesis; the seeded stub in environments without
+    it — CI installs the real library): on random SBM / power-law / grid
+    graphs across block sizes and shard counts, the `HaloSpec`
+    interior/boundary classification is *structurally* correct — every edge
+    with a remote (or hub-replicated) endpoint lands in a boundary block,
+    interior blocks reference only local vertices, the split partitions
+    each shard's blocks, and `interior_first_order` maximizes the common
+    interior prefix without changing any block's classification;
+  * **schedule-level** (in-process, 1 shard): `staleness_bound=0` is
+    bit-identical to `chunk_schedule="halo"` on labels/probs/loads for
+    every chunk-kind rule (the 8-device leg lives in
+    `tests/sharded_parity_worker.py`);
+  * **staleness conformance**: a run with `staleness_bound=s` never reads
+    a halo older than `s` supersteps, pinned via the `halo_staleness` obs
+    counter — not implementation internals.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import obs
+from repro.core import engine
+from repro.core.device_graph import (
+    permute_blocks,
+    prepare_device_graph,
+    prepare_sharded_device_graph,
+)
+from repro.core.halo import HubConfig, build_halo_spec, interior_first_order
+from repro.core.registry import get_algorithm, superstep_algorithms
+from repro.core.runner import run_partitioner
+from repro.graphs.generators import dc_sbm, grid_road, rmat
+from repro.launch.mesh import make_blocks_mesh
+
+
+def _graph(kind: str, n: int, seed: int):
+    if kind == "sbm":
+        return dc_sbm(n, 6 * n, n_comm=4, mixing=0.3, degree_exponent=0.6,
+                      seed=seed)
+    if kind == "powerlaw":
+        return rmat(n, 5 * n, seed=seed)
+    return grid_road(n, seed=seed)
+
+
+def _spec_for(g, n_blocks: int, n_shards: int, hubs):
+    """Host-side spec on the prepared slabs (no mesh/devices needed)."""
+    dg = prepare_device_graph(g, n_blocks=n_blocks)
+    kw = {}
+    if hubs is not None:
+        kw = dict(hubs=hubs, deg=np.asarray(dg.deg_out),
+                  vmask=np.asarray(dg.vmask),
+                  blk_row=np.asarray(dg.blk_row))
+    spec = build_halo_spec(np.asarray(dg.blk_dst), np.asarray(dg.blk_w),
+                           n_shards, dg.block_v, **kw)
+    return dg, spec
+
+
+def _reference_boundary(dg, spec):
+    """Independent recomputation of the classification from the raw slabs:
+    a block is boundary iff any real edge slot references a vertex owned by
+    another shard *or* a hub-replicated vertex (wherever it lives)."""
+    blk_dst = np.asarray(dg.blk_dst).astype(np.int64)
+    real = np.asarray(dg.blk_w) > 0
+    bps = spec.blocks_per_shard
+    owner = np.arange(dg.n_blocks, dtype=np.int64) // bps
+    dst_owner = (blk_dst // dg.block_v) // bps
+    is_hub = np.zeros(dg.n_pad, dtype=bool)
+    if spec.hub_ids:
+        is_hub[np.asarray(spec.hub_ids, dtype=np.int64)] = True
+    escapes = real & ((dst_owner != owner[:, None]) | is_hub[blk_dst])
+    return escapes.any(axis=1)
+
+
+# --------------------------------------------------------------------------
+# property tests (hypothesis — real in CI, seeded stub otherwise)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(kind=st.sampled_from(["sbm", "powerlaw", "road"]),
+       n=st.integers(min_value=96, max_value=420),
+       n_blocks=st.sampled_from([8, 16, 32]),
+       shard_pick=st.sampled_from([2, 4, 8]),
+       hub_on=st.booleans(),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_boundary_classification_properties(kind, n, n_blocks, shard_pick,
+                                            hub_on, seed):
+    g = _graph(kind, n, seed)
+    hubs = HubConfig() if hub_on else None
+    dg, spec = _spec_for(g, n_blocks, 1, hubs)   # probe final block count
+    n_shards = max(d for d in (1, 2, shard_pick) if dg.n_blocks % d == 0)
+    dg, spec = _spec_for(g, n_blocks, n_shards, hubs)
+    if spec.fallback:
+        # fallback plans carry no split (the full gather has no interior)
+        assert spec.block_is_boundary == ()
+        assert spec.interior_split == 0
+        assert interior_first_order(spec) is None
+        return
+    flags = np.asarray(spec.block_is_boundary, dtype=bool)
+    bps = spec.blocks_per_shard
+
+    # the split is a partition of each shard's blocks: every block is
+    # classified, and interior_counts is exactly the complement count
+    assert flags.size == dg.n_blocks
+    per_shard = flags.reshape(n_shards, bps)
+    assert spec.interior_counts == tuple(
+        int(c) for c in (~per_shard).sum(axis=1))
+    assert all(i + b == bps for i, b in
+               zip(spec.interior_counts, per_shard.sum(axis=1)))
+
+    # edge-level soundness *and* completeness: boundary iff some real edge
+    # leaves the shard or touches a hub — interior blocks reference only
+    # local (non-replicated) vertices
+    np.testing.assert_array_equal(flags, _reference_boundary(dg, spec))
+
+    # the engine's phase-1 scan length is a common interior prefix
+    split = spec.interior_split
+    assert 0 <= split <= min(spec.interior_counts)
+    assert not per_shard[:, :split].any()
+
+
+@settings(max_examples=10, deadline=None)
+@given(kind=st.sampled_from(["sbm", "powerlaw", "road"]),
+       n=st.integers(min_value=96, max_value=420),
+       n_blocks=st.sampled_from([16, 32]),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_interior_first_order_maximizes_split(kind, n, n_blocks, seed):
+    g = _graph(kind, n, seed)
+    dg, spec = _spec_for(g, n_blocks, 1, None)
+    n_shards = max(d for d in (1, 2, 4, 8) if dg.n_blocks % d == 0)
+    dg, spec = _spec_for(g, n_blocks, n_shards, None)
+    if spec.fallback:
+        return
+    order = interior_first_order(spec)
+    if order is None:   # already interior-first: split is already maximal
+        assert spec.interior_split == min(spec.interior_counts)
+        return
+    # a legal intra-shard permutation: same blocks, same shard, stable
+    bps = spec.blocks_per_shard
+    for s in range(n_shards):
+        shard_slice = order[s * bps:(s + 1) * bps]
+        assert sorted(shard_slice) == list(range(s * bps, (s + 1) * bps))
+    # boundary-ness depends only on ownership (+ hub set), so the rebuilt
+    # spec keeps every per-shard count and reaches the maximal split
+    dg2 = permute_blocks(dg, order)
+    spec2 = build_halo_spec(np.asarray(dg2.blk_dst), np.asarray(dg2.blk_w),
+                            n_shards, dg2.block_v)
+    assert spec2.interior_counts == spec.interior_counts
+    assert spec2.interior_split == min(spec.interior_counts)
+    flags2 = np.asarray(spec2.block_is_boundary, dtype=bool)
+    np.testing.assert_array_equal(flags2, _reference_boundary(dg2, spec2))
+
+
+# --------------------------------------------------------------------------
+# schedule-level: s=0 bit-identity (1 shard; 8-device leg in
+# sharded_parity_worker.py) and API validation
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def graph():
+    return dc_sbm(256, 2048, n_comm=4, mixing=0.25, degree_exponent=0.5,
+                  seed=5)
+
+
+@pytest.fixture(scope="module")
+def sdg(graph):
+    return prepare_sharded_device_graph(graph, make_blocks_mesh(),
+                                        n_blocks=8, halo=True)
+
+
+@pytest.mark.parametrize("algo", [a for a in superstep_algorithms()
+                                  if get_algorithm(a).kind == "chunk"])
+def test_s0_bit_identical_to_halo(graph, sdg, algo):
+    algorithm = get_algorithm(algo)
+    cfg = algorithm.config_cls(k=5, chunk_schedule="halo")
+    key = jax.random.PRNGKey(3)
+    st_h = engine.place_state(algorithm, algorithm.init(sdg.dg, cfg, key),
+                              sdg)
+    st_a = engine.place_state(algorithm, algorithm.init(sdg.dg, cfg, key),
+                              sdg)
+    for _ in range(5):
+        st_h = engine.superstep(algorithm, sdg, cfg, st_h)
+        st_a, cache = engine.async_superstep(algorithm, sdg, cfg, st_a)
+    for f in set(("labels", "loads") + algorithm.vertex_fields) \
+            & set(st_h._fields):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(st_h, f)), np.asarray(getattr(st_a, f)),
+            err_msg=f"{algo}.{f} diverged at staleness_bound=0")
+    if algorithm.supports_probs:
+        np.testing.assert_array_equal(np.asarray(st_h.probs),
+                                      np.asarray(st_a.probs))
+
+
+def test_stale_cache_reuse_runs_and_differs_only_when_stale(graph, sdg):
+    """Reusing the returned cache must be accepted and reproducible: two
+    identically-driven stale sequences agree bit-for-bit."""
+    algorithm = get_algorithm("revolver")
+    cfg = algorithm.config_cls(k=5, chunk_schedule="halo")
+    key = jax.random.PRNGKey(0)
+
+    def run():
+        s = engine.place_state(algorithm, algorithm.init(sdg.dg, cfg, key),
+                               sdg)
+        cache = None
+        for g in range(6):
+            if g % 3 == 0:      # refresh every 3rd superstep (s=2 policy)
+                cache = None
+            s, cache = engine.async_superstep(algorithm, sdg, cfg, s,
+                                              cache=cache)
+        return s
+
+    a, b = run(), run()
+    np.testing.assert_array_equal(np.asarray(a.labels), np.asarray(b.labels))
+    np.testing.assert_array_equal(np.asarray(a.loads), np.asarray(b.loads))
+
+
+def test_async_rejects_bad_inputs(graph, sdg):
+    spinner = get_algorithm("spinner")
+    with pytest.raises(ValueError, match="chunk_schedule"):
+        spinner.config_cls(k=4, chunk_schedule="async")
+    with pytest.raises(ValueError, match="no block scan"):
+        engine.async_superstep(spinner, sdg, None, None)
+    revolver = get_algorithm("revolver")
+    cfg = revolver.config_cls(k=4, chunk_schedule="async")
+    with pytest.raises(TypeError, match="ShardedDeviceGraph"):
+        engine.async_superstep(revolver, sdg.dg, cfg, None)
+    with pytest.raises(ValueError, match="staleness_bound"):
+        revolver.config_cls(k=4, chunk_schedule="halo", staleness_bound=1)
+    no_halo = prepare_sharded_device_graph(graph, make_blocks_mesh(),
+                                           n_blocks=8, halo=False)
+    with pytest.raises(ValueError, match="halo-enabled"):
+        engine.async_superstep(revolver, no_halo, cfg, None)
+
+
+# --------------------------------------------------------------------------
+# staleness conformance: never read a halo older than the bound (pinned via
+# the halo_staleness obs counter, not engine internals)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bound", [0, 1, 3])
+def test_staleness_never_exceeds_bound(graph, bound):
+    t = obs.Tracer()
+    res = run_partitioner("revolver", graph, 4, seed=1, max_steps=9,
+                          patience=10_000, chunk_schedule="async",
+                          staleness_bound=bound, trace=t)
+    pts = t.series["halo_staleness"]
+    assert [s for s, _ in pts] == list(range(res.steps))
+    ages = [v for _, v in pts]
+    assert max(ages) <= bound
+    if bound:
+        assert max(ages) == bound    # the bound is actually exercised
+    else:
+        assert ages == [0.0] * res.steps
+
+
+def test_s0_run_partitioner_matches_halo_on_shared_layout(graph, sdg):
+    """End-to-end s=0 parity: same layout, same seed — the async run's
+    labels/probs are bit-identical to the halo schedule's."""
+    kw = dict(seed=2, max_steps=8, patience=10_000, keep_probs=True, dg=sdg)
+    r_h = run_partitioner("revolver", graph, 5, chunk_schedule="halo", **kw)
+    r_a = run_partitioner("revolver", graph, 5, chunk_schedule="async", **kw)
+    np.testing.assert_array_equal(r_h.labels, r_a.labels)
+    np.testing.assert_array_equal(r_h.probs, r_a.probs)
+    assert r_h.local_edges == r_a.local_edges
+    assert r_h.max_norm_load == r_a.max_norm_load

@@ -268,3 +268,39 @@ def test_subprocess_sigkill_and_resume_exact():
         assert r.returncode == 0, r.stdout + r.stderr
         with np.load(ref_out) as a, np.load(res_out) as b:
             np.testing.assert_array_equal(a["revolver"], b["revolver"])
+
+
+def test_subprocess_sigkill_and_resume_exact_async():
+    # the async schedule at staleness_bound=1 keeps a stale halo cache that
+    # never hits disk; checkpoint windows force a halo refresh before the
+    # snapshot, so a SIGKILL + resume must still reproduce the uninterrupted
+    # run bit-for-bit (the resumed process restarts with an empty cache at a
+    # refresh-aligned superstep — the same forced refresh the reference took)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"),
+               XLA_FLAGS="--xla_force_host_platform_device_count=2")
+    env.pop("REPRO_FAULTS", None)
+    with tempfile.TemporaryDirectory() as td:
+        base = [sys.executable, "-m", "repro.launch.partition",
+                "--dataset", "WIKI", "--scale", "0.005", "--k", "4",
+                "--algo", "revolver", "--seed", "3", "--max-steps", "16",
+                "--sync-every", "4", "--n-blocks", "8",
+                "--chunk-schedule", "async", "--staleness-bound", "1",
+                "--json"]
+        ref_out = os.path.join(td, "ref.npz")
+        r = subprocess.run(base + ["--labels-out", ref_out], env=env,
+                           capture_output=True, text=True)
+        assert r.returncode == 0, r.stdout + r.stderr
+        ckpt = base + ["--checkpoint-dir", os.path.join(td, "ckpt"),
+                       "--checkpoint-every", "4"]
+        victim = subprocess.run(
+            ckpt, env=dict(env, REPRO_FAULTS="kill@superstep=9"),
+            capture_output=True, text=True)
+        assert victim.returncode == -signal.SIGKILL, (
+            victim.returncode, victim.stdout + victim.stderr)
+        res_out = os.path.join(td, "res.npz")
+        r = subprocess.run(ckpt + ["--resume", "--labels-out", res_out],
+                           env=env, capture_output=True, text=True)
+        assert r.returncode == 0, r.stdout + r.stderr
+        with np.load(ref_out) as a, np.load(res_out) as b:
+            np.testing.assert_array_equal(a["revolver"], b["revolver"])

@@ -184,6 +184,72 @@ def test_tracer_adds_no_device_syncs(graph, monkeypatch):
     assert traced == untraced
 
 
+def test_async_traced_run_overlap_and_staleness(graph):
+    """Traced async runs show the overlap pair (a halo-exchange span inside
+    the interior-scan span's time range) and a halo_staleness counter series
+    that never exceeds the bound — the schedule's observable contract,
+    pinned without reading engine internals."""
+    t = obs.Tracer()
+    res = run_partitioner("revolver", graph, 4, seed=1, max_steps=6,
+                          patience=10_000, chunk_schedule="async",
+                          staleness_bound=1, trace=t)
+    assert t.meta["runs"][0]["schedule"] == "async"
+    interior = [e for e in t.events
+                if e["name"] == "interior-scan" and e["ph"] == "X"]
+    exchange = [e for e in t.events
+                if e["name"] == "halo-exchange" and e["ph"] == "X"]
+    assert interior and exchange
+    assert any(h["ts"] >= i["ts"] and
+               h["ts"] + h["dur"] <= i["ts"] + i["dur"]
+               for i in interior for h in exchange), \
+        "no halo-exchange span nested inside an interior-scan span"
+    # the overlapped exchange is tagged so profiles can tell it apart from
+    # the halo schedule's barrier exchange
+    assert all(e["args"].get("overlap") == 1 for e in exchange)
+    # staleness series: one point per superstep, bounded by staleness_bound,
+    # and at least one genuinely stale superstep actually happened
+    pts = t.series["halo_staleness"]
+    assert [s for s, _ in pts] == list(range(res.steps))
+    assert max(v for _, v in pts) <= 1
+    assert any(v == 1 for _, v in pts)
+    assert pts[0][1] == 0         # first superstep is always fresh
+    # trace_report --validate knows the contract
+    tr = _load_trace_report()
+    doc = t.to_dict()
+    assert tr.validate(doc) == []
+    # ... and flags traces that claim async but lack the evidence
+    no_stale = dict(doc)
+    no_stale["traceEvents"] = [e for e in doc["traceEvents"]
+                               if e["name"] != "halo_staleness"]
+    assert any("halo_staleness" in p for p in tr.validate(no_stale))
+    no_pair = dict(doc)
+    no_pair["traceEvents"] = [e for e in doc["traceEvents"]
+                              if e["name"] != "halo-exchange"]
+    assert any("overlap" in p for p in tr.validate(no_pair))
+
+
+def test_async_tracer_adds_no_device_syncs(graph, monkeypatch):
+    """halo_staleness is emitted from the host-side refresh policy — the
+    traced async loop must not fetch anything beyond the drain windows."""
+    counts = []
+    real = jax.device_get
+
+    def counting(x):
+        counts[-1] += 1
+        return real(x)
+
+    kw = dict(seed=2, max_steps=6, patience=10_000, sync_every=3,
+              track_history=True, chunk_schedule="async", staleness_bound=2)
+    monkeypatch.setattr(jax, "device_get", counting)
+    counts.append(0)
+    run_partitioner("revolver", graph, 4, **kw)
+    untraced = counts[-1]
+    counts.append(0)
+    run_partitioner("revolver", graph, 4, trace=obs.Tracer(), **kw)
+    assert untraced > 0
+    assert counts[-1] == untraced
+
+
 def test_trace_kwarg_smoke_other_schedules(graph):
     # sequential restream/spinner run traced end to end; schedule recorded
     for algo in ("spinner", "restream"):

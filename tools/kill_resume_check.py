@@ -82,11 +82,16 @@ def main(argv=None) -> int:
     ap.add_argument("--kill-at", type=int, default=14,
                     help="superstep at which the victim run SIGKILLs itself")
     ap.add_argument("--chunk-schedule", default="sequential",
-                    choices=["sequential", "sharded", "halo"])
+                    choices=["sequential", "sharded", "halo", "async"])
     ap.add_argument("--halo-granularity", default="auto",
                     choices=["auto", "block", "vertex"],
                     help="halo exchange unit (forwarded to the launcher; "
-                         "halo schedule only)")
+                         "halo/async schedules only)")
+    ap.add_argument("--staleness-bound", type=int, default=0,
+                    help="staleness bound for the async schedule (forwarded "
+                         "to the launcher); checkpoint windows force a halo "
+                         "refresh, so the resume gate stays bit-for-bit even "
+                         "when this is > 0")
     ap.add_argument("--hub-replication", action="store_true",
                     help="run every phase with hub replication on — hub "
                          "reconciliation carries no extra state, so the "
@@ -105,8 +110,10 @@ def main(argv=None) -> int:
             "--seed", str(args.seed), "--max-steps", str(args.max_steps),
             "--sync-every", str(args.sync_every),
             "--chunk-schedule", args.chunk_schedule]
-    if args.chunk_schedule == "halo":
+    if args.chunk_schedule in ("halo", "async"):
         base += ["--halo-granularity", args.halo_granularity]
+    if args.chunk_schedule == "async":
+        base += ["--staleness-bound", str(args.staleness_bound)]
     if args.hub_replication:
         base += ["--hub-replication"]
     ok = True
@@ -142,7 +149,7 @@ def main(argv=None) -> int:
 
         count_change = (args.resume_devices is not None
                         and args.resume_devices != args.devices)
-        sharded = args.chunk_schedule in ("sharded", "halo")
+        sharded = args.chunk_schedule in ("sharded", "halo", "async")
         resume_devices = args.resume_devices or args.devices
 
         if count_change and sharded:

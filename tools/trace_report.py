@@ -15,7 +15,11 @@ perfetto-loadable JSON. This tool reads it back without a browser:
   * every run recorded in ``otherData.runs`` is covered: the number of
     "superstep" spans equals the total executed steps across runs (one span
     per superstep — none dropped, none duplicated);
-  * counter events carry numeric values.
+  * counter events carry numeric values;
+  * any run with the ``"async"`` schedule shows the overlap pair — at
+    least one "halo-exchange" span whose ``[ts, ts+dur]`` overlaps an
+    "interior-scan" span — plus a ``halo_staleness`` counter series (the
+    schedule's observable contract, see docs/async-superstep.md).
 
 Exit status is non-zero on validation failure, so CI can gate on it. The
 tool reads only the stdlib — it must work in environments without jax.
@@ -46,6 +50,8 @@ def validate(doc: dict) -> list:
     if not isinstance(events, list):
         return ["traceEvents is not a list"]
     supersteps = 0
+    interior, exchange = [], []     # [ts, ts+dur] ranges for the async pair
+    staleness_points = 0
     for i, ev in enumerate(events):
         if not isinstance(ev, dict):
             problems.append(f"event #{i} is not an object")
@@ -64,12 +70,19 @@ def validate(doc: dict) -> list:
                     "without a numeric dur")
             if ev["name"] == "superstep":
                 supersteps += 1
+            elif ev["name"] in ("interior-scan", "halo-exchange"):
+                ts, dur = ev["ts"], ev.get("dur", 0)
+                if isinstance(ts, (int, float)) and isinstance(dur, (int, float)):
+                    (interior if ev["name"] == "interior-scan"
+                     else exchange).append((ts, ts + dur))
         elif ev["ph"] == "C":
             value = ev.get("args", {}).get("value")
             if not isinstance(value, (int, float)):
                 problems.append(
                     f"event #{i} (counter {ev['name']!r}) has no numeric "
                     "args.value")
+            elif ev["name"] == "halo_staleness":
+                staleness_points += 1
     runs = doc.get("otherData", {}).get("runs", [])
     if runs:
         expected = sum(int(r.get("steps", 0)) for r in runs)
@@ -80,6 +93,24 @@ def validate(doc: dict) -> list:
         if expected > 0 and supersteps == 0:
             problems.append("runs executed supersteps but no superstep "
                             "spans were recorded")
+    async_steps = sum(int(r.get("steps", 0)) for r in runs
+                      if r.get("schedule") == "async")
+    if async_steps > 0:
+        # a fallback plan runs the full-gather schedule — there is no
+        # interior scan to overlap with, and the tracer says so in otherData
+        if not doc.get("otherData", {}).get("async_fallback"):
+            overlapping = any(
+                hs <= ie and is_ <= he
+                for is_, ie in interior for hs, he in exchange)
+            if not overlapping:
+                problems.append(
+                    "async run(s) recorded but no halo-exchange span "
+                    "overlaps an interior-scan span (the overlap pair the "
+                    "async schedule promises)")
+        if staleness_points == 0:
+            problems.append(
+                "async run(s) recorded but no halo_staleness counter "
+                "series was emitted")
     return problems
 
 
